@@ -1,0 +1,107 @@
+"""Aggregate dry-run artifacts into the §Roofline table.
+
+Reads ``experiments/dryrun/*.json`` (written by ``repro.launch.dryrun``)
+and emits the per-(arch × shape × mesh) roofline table: the three terms in
+seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and per-device
+memory.  Markdown output goes to ``experiments/roofline.md`` for inclusion
+in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_cells(tag: Optional[str] = None) -> List[dict]:
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        parts = f.stem.split("__")
+        cell_tag = parts[3] if len(parts) > 3 else None
+        if cell_tag != tag:
+            continue
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.1f}ms"
+
+
+def table(cells: List[dict], *, mesh: str = "16x16") -> str:
+    rows = [c for c in cells if c["mesh"] == mesh]
+    rows.sort(key=lambda c: (c["arch"], c["shape"]))
+    out = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful-FLOP | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in rows:
+        r = c["roofline"]
+        mem = c.get("memory") or {}
+        hbm = (mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | {min(r['useful_flop_ratio'], 9.99):.3f} | "
+            f"{hbm/2**30:.1f}GiB |"
+        )
+    return "\n".join(out)
+
+
+def summary(cells: List[dict]) -> Dict[str, object]:
+    single = [c for c in cells if c["mesh"] == "16x16"]
+    multi = [c for c in cells if c["mesh"] == "2x16x16"]
+    dominated: Dict[str, int] = {}
+    for c in single:
+        d = c["roofline"]["dominant"]
+        dominated[d] = dominated.get(d, 0) + 1
+    worst = sorted(
+        (c for c in single if c["kind"] == "train"),
+        key=lambda c: c["roofline"]["useful_flop_ratio"],
+    )
+    most_coll = sorted(
+        single,
+        key=lambda c: -c["roofline"]["collective_s"]
+        / max(c["roofline"]["step_s_lower_bound"], 1e-12),
+    )
+    return {
+        "cells_single": len(single),
+        "cells_multi": len(multi),
+        "dominant_histogram": dominated,
+        "worst_useful": [(c["arch"], c["shape"],
+                          round(c["roofline"]["useful_flop_ratio"], 3))
+                         for c in worst[:3]],
+        "most_collective_bound": [
+            (c["arch"], c["shape"],
+             round(c["roofline"]["collective_s"]
+                   / max(c["roofline"]["step_s_lower_bound"], 1e-12), 3))
+            for c in most_coll[:3]
+        ],
+    }
+
+
+def main() -> Dict[str, object]:
+    cells = load_cells()
+    md = ["## Roofline — single-pod (16×16, 256 chips, v5e constants)", "",
+          table(cells, mesh="16x16"), "",
+          "## Multi-pod pass (2×16×16, 512 chips)", "",
+          table(cells, mesh="2x16x16")]
+    Path("experiments/roofline.md").write_text("\n".join(md))
+    s = summary(cells)
+    print(f"# roofline: {s['cells_single']} single-pod + "
+          f"{s['cells_multi']} multi-pod cells aggregated")
+    print(f"  dominant-term histogram: {s['dominant_histogram']}")
+    print(f"  worst useful-FLOP ratios: {s['worst_useful']}")
+    print(f"  most collective-bound: {s['most_collective_bound']}")
+    print("  table -> experiments/roofline.md")
+    return s
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline.
+
+Prints ``name,value,derived`` CSV rows after each bench's own report.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import loader_bench, query_latency, roofline, sentry_overhead, vma_bench
+
+    rows = []
+
+    print("=" * 72)
+    vma = vma_bench.main()
+    rows += [
+        ("vma_blowup_legacy_vs_native_x", vma["blowup_x"], "paper:>500x"),
+        ("vma_reduction_fix_x", vma["reduction_clean_x"], "paper:182x"),
+        ("vma_legacy_crash", vma["legacy_crash"], "paper:crash@65530"),
+    ]
+
+    print("=" * 72)
+    q = query_latency.main()
+    rows.append(
+        ("query_suite_improvement_pct", q["overall_improvement_pct"],
+         "paper:+1.5pct")
+    )
+
+    print("=" * 72)
+    ld = loader_bench.main()
+    rows += [
+        ("loader_legacy_success_pct", ld["legacy_success_pct"],
+         "paper:prophet-segfault"),
+        ("loader_linux_success_pct", ld["linux_success_pct"], "paper:100"),
+    ]
+
+    print("=" * 72)
+    so = sentry_overhead.main()
+    rows += [
+        ("sentry_steady_state_overhead_pct",
+         so["steady_state_overhead_pct"], "target:~0"),
+        ("sentry_emulation_slowdown_x", so["emulation_slowdown_x"],
+         "ptrace-mode analogue"),
+    ]
+
+    print("=" * 72)
+    try:
+        rf = roofline.main()
+        hist = rf["dominant_histogram"]
+        for term, count in sorted(hist.items()):
+            rows.append((f"roofline_cells_dominated_by_{term}", count,
+                         f"of {rf['cells_single']}"))
+    except Exception as e:  # dry-run artifacts absent
+        print(f"  roofline skipped: {e}")
+
+    print("=" * 72)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.4g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""§III.C claim: interception must be cheap (the Systrap story).
+
+Three measurements on a representative UDF:
+
+* **steady-state**: jit-compiled execution inside the sandbox vs direct —
+  must be ~0% (interception happens at trace/verify time; the emitted XLA
+  is identical),
+* **admission**: one-time verify cost per policy (the legacy allowlist
+  does more lookups per equation — its "filter table" overhead),
+* **full emulation**: the eqn-by-eqn interpreter, the analogue of running
+  under ptrace — slow, which is exactly why gVisor moved to Systrap and
+  why the production path verifies-then-compiles.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    LegacyFilterPolicy,
+    ModernEmulationPolicy,
+    sandboxed,
+    static_verify,
+)
+
+
+def udf(x, w1, w2):
+    h = jnp.tanh(x @ w1)
+    h = h * jax.nn.sigmoid(h)
+    return jnp.sum((h @ w2) ** 2)
+
+
+def _median_time(fn, reps=20):
+    fn()  # warmup
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def main() -> Dict[str, float]:
+    x = jnp.ones((512, 512))
+    w1 = jnp.ones((512, 512)) * 0.01
+    w2 = jnp.ones((512, 256)) * 0.01
+    args = (x, w1, w2)
+
+    direct = jax.jit(udf)
+    t_direct = _median_time(lambda: direct(*args))
+
+    verified = jax.jit(sandboxed(udf, ModernEmulationPolicy()))
+    t_verified = _median_time(lambda: verified(*args))
+
+    interp = sandboxed(udf, ModernEmulationPolicy(), mode="interpret")
+    t_interp = _median_time(lambda: interp(*args), reps=5)
+
+    closed = jax.make_jaxpr(udf)(*args)
+    t_admit = {}
+    for policy in (LegacyFilterPolicy().extended("custom_jvp_call",
+                                                 "integer_pow"),
+                   ModernEmulationPolicy()):
+        t0 = time.perf_counter()
+        for _ in range(200):
+            static_verify(closed, policy)
+        t_admit[policy.name] = (time.perf_counter() - t0) / 200
+
+    steady_pct = (t_verified - t_direct) / t_direct * 100
+    print("# sentry_overhead")
+    print(f"  direct jit           : {t_direct*1e6:9.1f} us/call")
+    print(f"  sandboxed (verify)   : {t_verified*1e6:9.1f} us/call "
+          f"({steady_pct:+.1f}% steady-state)")
+    print(f"  full emulation       : {t_interp*1e6:9.1f} us/call "
+          f"({t_interp/t_direct:.0f}x — the 'ptrace mode'; production path "
+          "verifies then compiles)")
+    for name, t in t_admit.items():
+        print(f"  admission [{name:13s}]: {t*1e6:9.1f} us/program")
+    return {
+        "steady_state_overhead_pct": steady_pct,
+        "emulation_slowdown_x": t_interp / t_direct,
+        **{f"admit_{k}": v for k, v in t_admit.items()},
+    }
+
+
+if __name__ == "__main__":
+    main()

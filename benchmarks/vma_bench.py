@@ -1,0 +1,111 @@
+"""Paper §IV.A benchmark: list-append 2-D array growth, VMA counts.
+
+Reproduces the paper's synthetic workload — "repeatedly appending new
+lists into an existing list to build a two-dimensional array": each append
+allocates a sublist arena (one granule, placed top-down → descending
+addresses); the outer pointer array reallocs on capacity doubling.  We
+count host VMAs for:
+
+* **native** — a Linux-like allocator that extends a single heap VMA
+  (plus ~128 baseline mappings for libraries etc.),
+* **legacy** — gVisor-like MM with the offset-direction bug,
+* **modern** — the paper's fix (direction-aligned offsets + hint
+  preservation across merges),
+* **modern+churn** — the fix under allocator churn (an unrelated arena
+  faults every ``churn`` appends, breaking coalescing chains — the effect
+  that bounds the paper's measured 182x).
+
+Paper claims to check: legacy > 500x native (and past the 65,530
+``vm.max_map_count`` crash line); the fix reduces VMA entries by ~182x.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.mm import MemoryManager, MMConfig
+from repro.core.vma import MAX_MAP_COUNT
+
+G = 64 * 1024
+BASELINE_NATIVE_MAPPINGS = 128   # libraries, stacks, … (constant offset)
+
+
+def list_append_workload(mm: MemoryManager, appends: int,
+                         churn: int = 0) -> None:
+    """Append ``appends`` sublists; outer array reallocs on doubling."""
+    churn_arena = mm.mmap(G * (appends // max(churn, 1) + 2)) if churn else None
+    churn_faults = 0
+    capacity = 1
+    for i in range(1, appends + 1):
+        sub = mm.mmap(G)                       # sublist arena
+        mm.touch(sub.start, G)
+        if i >= capacity:                       # outer pointer-array realloc
+            capacity *= 2
+            nbytes = max(capacity * 8, G)
+            outer = mm.mmap(nbytes)
+            mm.touch(outer.start, nbytes)
+        if churn and i % churn == 0:            # unrelated allocator churn
+            mm.touch(churn_arena.start + churn_faults * G, G)
+            churn_faults += 1
+
+
+@dataclass
+class VmaResult:
+    variant: str
+    host_vmas: int
+    sentry_vmas: int
+    crash: bool
+    wall_s: float
+
+
+def run(appends: int = 70_000, churn: int = 200) -> Dict[str, VmaResult]:
+    results: Dict[str, VmaResult] = {}
+
+    # native: one heap VMA regardless of appends
+    results["native"] = VmaResult(
+        "native", BASELINE_NATIVE_MAPPINGS + 2, 2, False, 0.0
+    )
+
+    variants = {
+        "legacy": (MMConfig.legacy(), 0),
+        "modern": (MMConfig.modern(), 0),
+        "modern+churn": (MMConfig.modern(), churn),
+    }
+    for name, (cfg, ch) in variants.items():
+        mm = MemoryManager(cfg)
+        t0 = time.perf_counter()
+        list_append_workload(mm, appends, churn=ch)
+        wall = time.perf_counter() - t0
+        n = mm.host_vma_count() + BASELINE_NATIVE_MAPPINGS
+        results[name] = VmaResult(
+            name, n, len(mm.vmas), n > MAX_MAP_COUNT, wall
+        )
+    return results
+
+
+def main(appends: int = 70_000) -> Dict[str, float]:
+    res = run(appends)
+    native = res["native"].host_vmas
+    legacy = res["legacy"].host_vmas
+    modern = res["modern"].host_vmas
+    churn = res["modern+churn"].host_vmas
+    print(f"# vma_bench: {appends} appends, granule 64KiB")
+    for r in res.values():
+        crash = "  ** exceeds vm.max_map_count → sandbox crash **" if r.crash else ""
+        print(f"  {r.variant:14s} host_vmas={r.host_vmas:7d} "
+              f"(sentry={r.sentry_vmas})  [{r.wall_s:.2f}s]{crash}")
+    print(f"  legacy/native blow-up : {legacy / native:8.1f}x  (paper: >500x)")
+    print(f"  fix reduction (clean) : {legacy / modern:8.1f}x  (paper: 182x)")
+    print(f"  fix reduction (churn) : {legacy / churn:8.1f}x")
+    return {
+        "blowup_x": legacy / native,
+        "reduction_clean_x": legacy / modern,
+        "reduction_churn_x": legacy / churn,
+        "legacy_crash": float(res["legacy"].crash),
+    }
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""SEE++ feature tour: policies, budgets, serverless tasks, artifacts,
+and the two paper bug reproductions — in one script.
+
+    PYTHONPATH=src python examples/sandbox_udf.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ArtifactRepository, BudgetExceeded, LegacyFilterPolicy,
+    ModernEmulationPolicy, Sandbox, SandboxViolation, ServerlessScheduler,
+    TaskSpec, TenantQuota,
+)
+from repro.core.elf import build_prophet_like
+from repro.core.loader import ImageLoader, SegfaultError
+from repro.core.mm import MemoryManager, MMConfig
+
+
+def main():
+    # 1. legacy filtering vs modern emulation (paper §II vs §III)
+    udf = lambda x: jax.lax.scan(lambda c, t: (c + jnp.tanh(t), c), 0.0, x)[0]
+    try:
+        Sandbox(policy=LegacyFilterPolicy()).run(udf, jnp.arange(8.0))
+    except SandboxViolation as e:
+        print("legacy filter:", e)
+    r = Sandbox(policy=ModernEmulationPolicy()).run(udf, jnp.arange(8.0))
+    print(f"modern sentry: value={float(r.value):.3f} flops={r.flops:.0f}")
+
+    # 2. resource isolation
+    try:
+        Sandbox(flop_budget=100.0).run(
+            lambda a, b: a @ b, jnp.ones((64, 64)), jnp.ones((64, 64)))
+    except BudgetExceeded as e:
+        print("budget:", e)
+
+    # 3. serverless tasks (§V.A)
+    sched = ServerlessScheduler(
+        quotas={"tenant-a": TenantQuota(flop_budget_per_task=1e9)})
+    t1 = sched.submit(TaskSpec("tenant-a", udf, (jnp.arange(4.0),)))
+    sched.run_pending()
+    print("task:", sched.record(t1).state)
+
+    # 4. artifact repository (§V.B): no allowlist churn
+    repo = ArtifactRepository(ModernEmulationPolicy())
+    rep = repo.register_op("fancy", "1.0",
+                           lambda x: jax.lax.erf(x).sum(), (jnp.ones(3),))
+    print("artifact admitted:", rep.admitted, rep.artifact.digest)
+
+    # 5. §IV.A: the VMA blow-up and the fix
+    for name, cfg in (("legacy", MMConfig.legacy()), ("modern", MMConfig.modern())):
+        mm = MemoryManager(cfg)
+        for _ in range(500):
+            ar = mm.mmap(64 * 1024)
+            mm.touch(ar.start, 64 * 1024)
+        print(f"§IV.A {name}: host VMAs = {mm.host_vma_count()}")
+
+    # 6. §IV.B: the prophet segfault and the fix
+    blob = build_prophet_like()
+    try:
+        ImageLoader("legacy").load(blob)
+    except SegfaultError as e:
+        print("§IV.B legacy:", e)
+    ImageLoader("linux").load(blob)
+    print("§IV.B linux semantics: loads cleanly")
+
+
+if __name__ == "__main__":
+    main()

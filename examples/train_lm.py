@@ -1,0 +1,54 @@
+"""Training example with fault injection: a worker dies mid-run and the
+trainer restarts from the latest SELF checkpoint.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch rwkv6-3b]
+"""
+
+import argparse
+import tempfile
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_reduced, list_archs
+from repro.core.gofer import Gofer
+from repro.data import DataConfig, Loader, SyntheticLM
+from repro.models import build_model
+from repro.optim import ScheduleConfig
+from repro.runtime import (FailureInjector, HeartbeatMonitor,
+                           StragglerDetector, Trainer, TrainerConfig)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = build_model(cfg)
+    dc = DataConfig(global_batch=8, seq_len=32, vocab_size=cfg.vocab_size)
+    loader = Loader(SyntheticLM(dc), dc)
+    ckpt = CheckpointManager(
+        Gofer.for_root("ckpt", tempfile.mkdtemp(), write=True))
+    trainer = Trainer(
+        model, loader,
+        TrainerConfig(total_steps=args.steps, log_every=10, ckpt_every=20,
+                      schedule=ScheduleConfig(peak_lr=3e-3, warmup_steps=10)),
+        ckpt=ckpt,
+        monitor=HeartbeatMonitor([f"host{i}" for i in range(4)]),
+        stragglers=StragglerDetector(),
+        injector=FailureInjector(fail_at={args.steps // 2: ["host2"]}),
+    )
+    params, opt = trainer.init_state(jax.random.PRNGKey(0))
+    params, opt = trainer.run(params, opt)
+    loader.stop()
+    for m in trainer.metrics_log:
+        print(f"  step {m['step']:3d}  loss {m['loss']:.4f}")
+    print(f"worker failure at step {args.steps // 2} -> "
+          f"{trainer.restarts} restart(s) from checkpoint; "
+          f"final checkpoints: {ckpt.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Checkpointing on the SELF format — the paper's loader in the real path.
+
+Every checkpoint shard is a SELF image: one LOAD segment per tensor with
+``filesz`` = actual bytes and ``memsz`` = lane-tile-padded bytes (TPU
+layout), plus a ``DYNAMIC``-style JSON manifest section that lives in the
+page-aligned tail of the last segment — the exact layout class the paper's
+§IV.B bug corrupted.  ``save_tree`` / ``load_tree`` round-trip arbitrary
+pytrees; restoring with ``ImageLoader("legacy")`` reproduces the paper's
+prophet failure on real checkpoints (tests/test_checkpoint.py).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.elf import LANE_TILE, PT_DYNAMIC, PT_LOAD, SELFWriter
+from repro.core.loader import ImageLoader, SegfaultError
+
+__all__ = ["save_tree", "load_tree", "tree_to_records", "records_to_tree"]
+
+POINTER_LEN = 96
+
+_DTYPES = {
+    "float32": "<f4", "float64": "<f8", "float16": "<f2",
+    "bfloat16": "bf16", "int32": "<i4", "int64": "<i8", "uint32": "<u4",
+    "int8": "<i1", "uint8": "<u1", "bool": "|b1", "uint16": "<u2",
+}
+
+
+def _to_bytes(arr: np.ndarray) -> bytes:
+    if str(arr.dtype) == "bfloat16":
+        return arr.view(np.uint16).tobytes()
+    return arr.tobytes()
+
+
+def _from_bytes(data: bytes, dtype: str, shape) -> np.ndarray:
+    import jax.numpy as jnp
+
+    if dtype == "bfloat16":
+        u16 = np.frombuffer(data, np.uint16).reshape(shape)
+        return u16.view(jnp.bfloat16.dtype)
+    return np.frombuffer(data, np.dtype(dtype)).reshape(shape).copy()
+
+
+def tree_to_records(tree) -> List[Tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+def records_to_tree(records: Dict[str, np.ndarray], like):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if key not in records:
+            raise KeyError(f"checkpoint missing tensor {key!r}")
+        arr = records[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected {leaf.shape}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
+    )
+
+
+def save_tree(tree, *, step: int = 0, extra: Optional[dict] = None) -> bytes:
+    """Serialize a pytree (or shard of one) into a SELF image."""
+    records = tree_to_records(tree)
+    w = SELFWriter()
+    manifest = {"step": step, "tensors": [], "extra": extra or {}}
+    for key, arr in records:
+        data = _to_bytes(arr)
+        itemsize = max(arr.dtype.itemsize, 1)
+        # in-memory (device) size: last dim padded to the 128-lane tile
+        if arr.ndim:
+            padded_last = -(-max(arr.shape[-1], 1) // LANE_TILE) * LANE_TILE
+            mem_elems = int(np.prod(arr.shape[:-1], dtype=np.int64)) * padded_last
+        else:
+            mem_elems = LANE_TILE
+        memsz = max(mem_elems * itemsize, len(data))
+        ph = w.add_segment(data, memsz=memsz)
+        manifest["tensors"].append({
+            "key": key,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "vaddr": ph.p_vaddr,
+            "nbytes": len(data),
+            "memsz": memsz,
+        })
+    # manifest as a DYNAMIC-style section in the page-aligned tail of a
+    # final, small segment (the paper's Fig. 4 layout, exercised on every
+    # checkpoint save/restore).
+    mbytes = json.dumps(manifest).encode()
+    mseg = w.add_segment(mbytes)                   # manifest body: own LOAD
+    # DYNAMIC *pointer* lives in the page-aligned extension of a tiny
+    # anchor segment: data is 9 bytes, memsz 16, so linux semantics zero
+    # exactly [9,16) and the pointer at vaddr+16 survives; legacy
+    # semantics zero to the page end and wipe it (paper §IV.B) — every
+    # checkpoint restore exercises the fix.
+    pointer = json.dumps(
+        {"manifest_vaddr": mseg.p_vaddr, "manifest_len": len(mbytes)}
+    ).encode().ljust(POINTER_LEN, b" ")
+    anchor = w.add_segment(b"SEE++ckpt", memsz=16, tail=b"\0" * 7 + pointer)
+    w.add_section("DYNAMIC", PT_DYNAMIC, anchor.p_vaddr + 16, pointer)
+    return w.finish()
+
+
+def load_tree(blob: bytes, like=None, *, semantics: str = "linux"):
+    """Restore a pytree from a SELF image.
+
+    ``semantics="legacy"`` reproduces the paper's bug: the page-extension
+    zeroing destroys the manifest → :class:`SegfaultError`.
+    """
+    loader = ImageLoader(semantics)
+    img = loader.load(blob, verify=True)
+    pointer = json.loads(img.section_bytes("DYNAMIC"))
+    manifest = json.loads(
+        img.read(pointer["manifest_vaddr"], pointer["manifest_len"])
+    )
+    records: Dict[str, np.ndarray] = {}
+    for t in manifest["tensors"]:
+        data = img.read(t["vaddr"], t["nbytes"])
+        records[t["key"]] = _from_bytes(data, t["dtype"], t["shape"])
+    if like is None:
+        return records, manifest
+    return records_to_tree(records, like), manifest

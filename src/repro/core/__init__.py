@@ -1,0 +1,55 @@
+"""SEE++ core — the paper's contribution as a composable JAX subsystem.
+
+Subsystem map (see DESIGN.md §2 for the paper↔TPU correspondence):
+
+=================  =========================================================
+``policy``         legacy syscall-filter vs modern Sentry-emulation policies
+``sentry``         jaxpr-level interception, emulation, resource metering
+``vma`` / ``mm``   §IV.A virtual-memory management: allocation-direction
+                   alignment + hint preservation (the 182x fix)
+``arena``          device-memory arena / paged-KV allocator built on ``mm``
+``elf`` / ``loader``  §IV.B SELF format + MemSiz/FileSiz zeroing semantics
+``image``          §III.B standardized base image
+``gofer``          mediated (capability-checked) I/O
+``sandbox``        per-tenant facade combining all of the above
+``tasks``          §V.A serverless multi-tenant scheduler
+``artifacts``      §V.B artifact repository
+=================  =========================================================
+"""
+
+from .arena import DeviceArena, PagedKVAllocator
+from .artifacts import ArtifactRepository
+from .gofer import Capability, CapabilityError, Gofer
+from .image import DEFAULT_IMAGE, BaseImage, DtypePolicy, ImageSpec
+from .loader import ImageLoader, LoadedImage, SegfaultError
+from .mm import MemoryManager, MMConfig
+from .policy import (
+    DANGEROUS_PRIMITIVES,
+    LEGACY_ALLOWLIST,
+    LegacyFilterPolicy,
+    ModernEmulationPolicy,
+    SandboxPolicy,
+    SandboxViolation,
+)
+from .sandbox import Sandbox, SandboxResult
+from .sentry import (
+    BudgetExceeded,
+    ResourceMeter,
+    SentryInterpreter,
+    sandboxed,
+    static_verify,
+)
+from .tasks import ServerlessScheduler, TaskSpec, TaskState, TenantQuota
+from .vma import (
+    MAX_MAP_COUNT,
+    AddrRange,
+    Direction,
+    FileRangeAllocator,
+    HostMapping,
+    VMA,
+    VMAExhaustedError,
+    VMASet,
+    coalesce_host_mappings,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

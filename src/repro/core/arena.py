@@ -1,0 +1,175 @@
+"""Device-memory arena: the paper's VMA machinery made perf-critical on TPU.
+
+On TPU there is no host kernel to crash, but the *same* allocation-direction
+property decides how many **non-contiguous DMA descriptors** a paged
+KV-cache gather needs: a sequence whose logical pages land on contiguous
+backing offsets can be fetched HBM→VMEM in one long DMA; a fragmented
+sequence needs one descriptor per run.  :class:`DeviceArena` reuses
+:class:`~repro.core.mm.MemoryManager` (with the legacy or modern
+:class:`~repro.core.mm.MMConfig`) to back a page pool, and
+:class:`PagedKVAllocator` exposes the page tables consumed by
+``repro.kernels.paged_attention``.
+
+Fragment statistics from here feed ``benchmarks/vma_bench.py`` and the
+§Perf iteration on the decode cells.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .mm import MemoryManager, MMConfig
+from .vma import AddrRange
+
+__all__ = ["DeviceArena", "PagedKVAllocator", "SequencePages"]
+
+
+class DeviceArena:
+    """Page-granular arena over a MemoryManager-backed store."""
+
+    def __init__(self, config: MMConfig, page_bytes: int = 64 * 1024) -> None:
+        if page_bytes % config.granule and config.granule % page_bytes:
+            raise ValueError("page_bytes must align with the MM granule")
+        self.mm = MemoryManager(config)
+        self.page_bytes = page_bytes
+        self._regions: Dict[str, AddrRange] = {}
+        self._lengths: Dict[str, int] = {}  # touched bytes per region
+
+    # -- region (one per logical buffer / sequence) ------------------------
+
+    def create_region(self, name: str, capacity_bytes: int) -> None:
+        if name in self._regions:
+            raise ValueError(f"region {name!r} exists")
+        self._regions[name] = self.mm.mmap(capacity_bytes)
+        self._lengths[name] = 0
+
+    def destroy_region(self, name: str) -> None:
+        ar = self._regions.pop(name)
+        self._lengths.pop(name)
+        self.mm.munmap(ar)
+
+    def grow(self, name: str, nbytes: int) -> None:
+        """Touch (fault in) the next ``nbytes`` of the region."""
+        ar = self._regions[name]
+        off = self._lengths[name]
+        if off + nbytes > ar.length:
+            raise MemoryError(f"region {name!r} capacity exceeded")
+        self.mm.touch(ar.start + off, nbytes)
+        self._lengths[name] = off + nbytes
+
+    # -- physical view ------------------------------------------------------
+
+    def physical_pages(self, name: str) -> np.ndarray:
+        """Physical page index for each faulted logical page of ``name``."""
+        ar = self._regions[name]
+        pages = []
+        n_pages = self._lengths[name] // self.page_bytes
+        for i in range(n_pages):
+            addr = ar.start + i * self.page_bytes
+            m = self.mm._mappings.get(self.mm._align_down(addr))
+            if m is None:
+                break
+            delta = addr - m.addr.start
+            pages.append((m.offset + delta) // self.page_bytes)
+        return np.asarray(pages, dtype=np.int32)
+
+    def contiguous_runs(self, name: str) -> int:
+        """Number of contiguous physical runs = DMA descriptors needed."""
+        pages = self.physical_pages(name)
+        if pages.size == 0:
+            return 0
+        return int(1 + np.count_nonzero(np.diff(pages) != 1))
+
+    def fragmentation_report(self) -> Dict[str, int]:
+        return {
+            name: self.contiguous_runs(name)
+            for name in self._regions
+            if self._lengths[name]
+        }
+
+
+@dataclass
+class SequencePages:
+    seq_id: str
+    num_tokens: int
+    pages: np.ndarray  # physical page indices, int32
+
+
+class PagedKVAllocator:
+    """Paged KV-cache allocator for the serving path.
+
+    One page holds ``tokens_per_page`` tokens of one layer-group's K+V.
+    Sequences grow token-by-token; pages are faulted from the arena on
+    demand.  ``page_table(max_pages)`` emits the dense [num_seqs, max_pages]
+    int32 table the paged-attention kernel consumes (padded with -1).
+    """
+
+    def __init__(
+        self,
+        config: MMConfig,
+        *,
+        tokens_per_page: int,
+        token_bytes: int,
+        max_seq_pages: int = 4096,
+        pool_pages: Optional[int] = None,
+    ) -> None:
+        import dataclasses
+
+        self.tokens_per_page = tokens_per_page
+        page_bytes = tokens_per_page * token_bytes
+        # round page size up to the MM granule so one page == >=1 granule
+        page_bytes = max(page_bytes, config.granule)
+        page_bytes = (page_bytes + config.granule - 1) // config.granule * config.granule
+        if pool_pages is not None:
+            # bound the backing store to the physical page pool so page
+            # ids are dense slots in [0, pool_pages) — the paged-attention
+            # kernel's K/V pool arrays are sized by this
+            config = dataclasses.replace(
+                config, backing_size=pool_pages * page_bytes
+            )
+        self.pool_pages = pool_pages
+        self.arena = DeviceArena(config, page_bytes=page_bytes)
+        self.max_seq_pages = max_seq_pages
+        self._tokens: Dict[str, int] = {}
+
+    def add_sequence(self, seq_id: str) -> None:
+        self.arena.create_region(seq_id, self.max_seq_pages * self.arena.page_bytes)
+        self._tokens[seq_id] = 0
+
+    def drop_sequence(self, seq_id: str) -> None:
+        self.arena.destroy_region(seq_id)
+        self._tokens.pop(seq_id)
+
+    def append_tokens(self, seq_id: str, n: int = 1) -> None:
+        have = self._tokens[seq_id]
+        need_pages = -(-(have + n) // self.tokens_per_page)
+        have_pages = -(-have // self.tokens_per_page) if have else 0
+        if need_pages > have_pages:
+            self.arena.grow(seq_id, (need_pages - have_pages) * self.arena.page_bytes)
+        self._tokens[seq_id] = have + n
+
+    def sequence(self, seq_id: str) -> SequencePages:
+        return SequencePages(
+            seq_id, self._tokens[seq_id], self.arena.physical_pages(seq_id)
+        )
+
+    def page_table(self, max_pages: Optional[int] = None) -> np.ndarray:
+        seqs = sorted(self._tokens)
+        if max_pages is None:
+            max_pages = max(
+                (len(self.arena.physical_pages(s)) for s in seqs), default=0
+            )
+        table = np.full((len(seqs), max_pages), -1, dtype=np.int32)
+        for i, s in enumerate(seqs):
+            p = self.arena.physical_pages(s)
+            table[i, : len(p)] = p
+        return table
+
+    def seq_lens(self) -> np.ndarray:
+        return np.asarray([self._tokens[s] for s in sorted(self._tokens)], np.int32)
+
+    def total_runs(self) -> int:
+        return sum(self.arena.fragmentation_report().values())

@@ -1,0 +1,159 @@
+"""Sandbox policies: legacy primitive filtering vs modern Sentry emulation.
+
+The paper's legacy sandbox enforced security with a **syscall allowlist**
+(seccomp filtering) that needed constant curation; the modern sandbox
+(gVisor) instead **implements** the syscall surface in user space, so
+arbitrary workloads run without per-workload configuration.
+
+In this framework the "syscall" is the JAX **primitive** (DESIGN.md §2).
+
+* :class:`LegacyFilterPolicy` — a literal allowlist.  Anything off-list
+  raises :class:`SandboxViolation` (the SIGSYS analogue).  Faithful to the
+  paper's pain: the list ships with a *curated snapshot* of primitives and
+  must be hand-extended every time user code exercises a new one.
+* :class:`ModernEmulationPolicy` — deny-by-class: every primitive is
+  admitted and emulated by the Sentry **except** a tiny fixed set of
+  genuinely dangerous ones (host callbacks / arbitrary custom calls — the
+  analogue of syscalls you would never forward to the host kernel).  New
+  compute primitives need **no policy change** (the maintainability claim,
+  asserted by ``tests/test_artifacts.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import FrozenSet, Optional, Set
+
+__all__ = [
+    "SandboxViolation",
+    "SandboxPolicy",
+    "LegacyFilterPolicy",
+    "ModernEmulationPolicy",
+    "DANGEROUS_PRIMITIVES",
+    "LEGACY_ALLOWLIST",
+]
+
+
+class SandboxViolation(Exception):
+    """A primitive was rejected by the sandbox policy (SIGSYS analogue)."""
+
+    def __init__(self, primitive: str, policy: str, reason: str) -> None:
+        self.primitive = primitive
+        self.policy = policy
+        self.reason = reason
+        super().__init__(f"[{policy}] primitive {primitive!r} rejected: {reason}")
+
+
+#: Primitives that can execute arbitrary host code or move data across the
+#: sandbox boundary — the analogue of syscalls that are dangerous to allow
+#: through to the kernel.  Neither policy admits these from user code; the
+#: engine itself performs I/O through the Gofer (core/gofer.py).
+DANGEROUS_PRIMITIVES: FrozenSet[str] = frozenset(
+    {
+        "io_callback",
+        "pure_callback",
+        "callback",
+        "custom_call",
+        "xla_call_module",
+        "infeed",
+        "outfeed",
+        "host_callback_call",
+        "ffi_call",
+        "debug_callback",
+    }
+)
+
+#: The curated allowlist the legacy sandbox shipped with.  Deliberately a
+#: *snapshot*: broad enough for classic DataFrame/ML UDFs, but missing
+#: control-flow and newer numerics — exactly the maintenance treadmill the
+#: paper describes (every new workload pattern needs a config change).
+LEGACY_ALLOWLIST: FrozenSet[str] = frozenset(
+    {
+        # elementwise arithmetic
+        "add", "sub", "mul", "div", "neg", "abs", "sign", "max", "min",
+        "rem", "pow", "integer_pow", "sqrt", "rsqrt", "exp", "log", "log1p",
+        "expm1", "tanh", "logistic", "floor", "ceil", "round", "clamp",
+        "is_finite", "square",
+        # comparison / logic
+        "eq", "ne", "lt", "le", "gt", "ge", "and", "or", "not", "xor",
+        "select_n",
+        # shape / layout
+        "reshape", "transpose", "broadcast_in_dim", "concatenate", "slice",
+        "dynamic_slice", "dynamic_update_slice", "squeeze", "rev", "pad",
+        "gather", "scatter", "scatter-add", "scatter_add", "iota",
+        "convert_element_type", "bitcast_convert_type", "expand_dims",
+        # reductions
+        "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+        "reduce_and", "reduce_or", "argmax", "argmin",
+        # linear algebra (the classic ML core)
+        "dot_general", "conv_general_dilated",
+        # misc classics
+        "stop_gradient", "sort", "cumsum", "cummax", "cummin", "cumprod",
+        "split",
+        # structural call wrappers: not syscalls — both sandboxes recurse
+        # into their bodies and filter what's inside
+        "jit", "pjit", "closed_call", "core_call", "custom_jvp_call",
+        "custom_vjp_call", "custom_vjp_call_jaxpr", "remat2", "cond",
+        "while", "custom_lin", "reduce_precision",
+    }
+)
+
+
+@dataclass(frozen=True)
+class PolicyDecision:
+    admitted: bool
+    emulated: bool
+    reason: str
+
+
+class SandboxPolicy:
+    """Base policy interface."""
+
+    name: str = "base"
+
+    def check(self, primitive_name: str) -> PolicyDecision:  # pragma: no cover
+        raise NotImplementedError
+
+    def admit(self, primitive_name: str) -> None:
+        """Raise SandboxViolation unless the primitive is admitted."""
+        d = self.check(primitive_name)
+        if not d.admitted:
+            raise SandboxViolation(primitive_name, self.name, d.reason)
+
+
+@dataclass(frozen=True)
+class LegacyFilterPolicy(SandboxPolicy):
+    """Syscall-filtering analogue: static allowlist, manual curation."""
+
+    allowlist: FrozenSet[str] = LEGACY_ALLOWLIST
+    name: str = "legacy-filter"
+
+    def check(self, primitive_name: str) -> PolicyDecision:
+        if primitive_name in DANGEROUS_PRIMITIVES:
+            return PolicyDecision(False, False, "dangerous primitive")
+        if primitive_name in self.allowlist:
+            return PolicyDecision(True, False, "allowlisted")
+        return PolicyDecision(
+            False,
+            False,
+            "not in allowlist (legacy sandbox requires a config update)",
+        )
+
+    def extended(self, *names: str) -> "LegacyFilterPolicy":
+        """The manual maintenance step the paper wants to eliminate."""
+        return LegacyFilterPolicy(allowlist=self.allowlist | set(names))
+
+
+@dataclass(frozen=True)
+class ModernEmulationPolicy(SandboxPolicy):
+    """gVisor analogue: emulate everything, deny only the dangerous class."""
+
+    extra_denied: FrozenSet[str] = frozenset()
+    name: str = "modern-sentry"
+
+    def check(self, primitive_name: str) -> PolicyDecision:
+        if primitive_name in DANGEROUS_PRIMITIVES or primitive_name in self.extra_denied:
+            return PolicyDecision(
+                False, False, "dangerous primitive (never forwarded to host)"
+            )
+        return PolicyDecision(True, True, "emulated in user space")

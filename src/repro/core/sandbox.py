@@ -1,0 +1,104 @@
+"""Sandbox facade — one object per tenant execution environment.
+
+Composes the paper's pieces: a :class:`BaseImage` (standardized runtime),
+a :class:`SandboxPolicy` (legacy filter vs modern Sentry emulation), a
+:class:`MemoryManager` (the §IV.A allocator under test), a
+:class:`ResourceMeter` (tenant isolation) and an optional :class:`Gofer`
+(mediated I/O).  ``Sandbox.run`` is the single entry point the engine uses
+to execute user-defined functions next to the data.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from .gofer import Gofer
+from .image import DEFAULT_IMAGE, BaseImage
+from .mm import MemoryManager, MMConfig
+from .policy import ModernEmulationPolicy, SandboxPolicy
+from .sentry import ResourceMeter, sandboxed, static_verify
+
+__all__ = ["Sandbox", "SandboxResult", "AuditEvent"]
+
+
+@dataclass
+class AuditEvent:
+    when: float
+    what: str
+    detail: str
+
+
+@dataclass
+class SandboxResult:
+    value: Any
+    flops: float
+    bytes: float
+    eqn_count: int
+    wall_s: float
+
+
+class Sandbox:
+    """A per-tenant execution environment colocated with the engine."""
+
+    def __init__(
+        self,
+        *,
+        tenant: str = "default",
+        image: BaseImage = DEFAULT_IMAGE,
+        policy: Optional[SandboxPolicy] = None,
+        mm_config: Optional[MMConfig] = None,
+        flop_budget: Optional[float] = None,
+        byte_budget: Optional[float] = None,
+        gofer: Optional[Gofer] = None,
+        mode: str = "verify",
+    ) -> None:
+        self.tenant = tenant
+        self.image = image
+        self.policy = policy or ModernEmulationPolicy()
+        self.mm = MemoryManager(mm_config or MMConfig.modern())
+        self.gofer = gofer
+        self.mode = mode
+        self._flop_budget = flop_budget
+        self._byte_budget = byte_budget
+        self.audit: List[AuditEvent] = []
+        self._note("boot", f"image={image.describe()['digest']} policy={self.policy.name}")
+
+    def _note(self, what: str, detail: str = "") -> None:
+        self.audit.append(AuditEvent(time.time(), what, detail))
+
+    # ------------------------------------------------------------------ API
+
+    def run(self, fn: Callable, *args, **kwargs) -> SandboxResult:
+        """Execute ``fn(*args)`` inside the sandbox and meter it."""
+        meter = ResourceMeter(
+            flop_budget=self._flop_budget, byte_budget=self._byte_budget
+        )
+        wrapped = sandboxed(fn, self.policy, meter=meter, mode=self.mode)
+        t0 = time.perf_counter()
+        try:
+            value = wrapped(*args, **kwargs)
+        except Exception as e:
+            self._note("violation", f"{type(e).__name__}: {e}")
+            raise
+        wall = time.perf_counter() - t0
+        self._note(
+            "run",
+            f"{getattr(fn, '__name__', 'fn')} eqns={meter.eqn_count} "
+            f"flops={meter.flops:.3e}",
+        )
+        return SandboxResult(value, meter.flops, meter.bytes, meter.eqn_count, wall)
+
+    def verify_only(self, fn: Callable, *args, **kwargs) -> Dict[str, int]:
+        """Admission check without execution (load-time verification)."""
+        import jax
+
+        closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+        hist = static_verify(closed, self.policy)
+        self._note("verify", f"{getattr(fn, '__name__', 'fn')}: {sum(hist.values())} eqns")
+        return hist
+
+    def op(self, name: str) -> Callable:
+        """Resolve an op from the base image (never from host state)."""
+        return self.image.op(name)

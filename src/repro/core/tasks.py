@@ -1,0 +1,169 @@
+"""Serverless Tasks — multi-tenant scheduled execution (paper §V.A).
+
+The paper's Serverless Tasks run user workloads in a multi-tenant setup,
+*enabled* by the stronger isolation of the modern sandbox.  This module is
+the engine-side scheduler: tenants submit tasks (sandboxed callables with
+resource quotas); the scheduler admits them through load-time verification,
+executes them in priority order, enforces per-tenant concurrency and
+budget, retries transient failures, and never lets one tenant's violation
+take down another's task.  Deterministic (single-threaded) execution keeps
+tests reproducible; the scheduling policy itself is what we are modeling.
+"""
+
+from __future__ import annotations
+
+import enum
+import heapq
+import itertools
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .policy import SandboxViolation
+from .sandbox import Sandbox, SandboxResult
+from .sentry import BudgetExceeded
+
+__all__ = ["TaskState", "TaskSpec", "TaskRecord", "ServerlessScheduler", "TenantQuota"]
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    SUCCEEDED = "succeeded"
+    FAILED = "failed"
+    DENIED = "denied"        # sandbox policy violation at admission
+    THROTTLED = "throttled"  # quota exceeded
+
+
+@dataclass(frozen=True)
+class TenantQuota:
+    max_tasks_in_flight: int = 4
+    flop_budget_per_task: Optional[float] = None
+    byte_budget_per_task: Optional[float] = None
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    tenant: str
+    fn: Callable
+    args: Tuple = ()
+    priority: int = 10          # lower = sooner
+    max_retries: int = 1
+    name: str = ""
+
+
+@dataclass
+class TaskRecord:
+    task_id: int
+    spec: TaskSpec
+    state: TaskState = TaskState.PENDING
+    result: Optional[SandboxResult] = None
+    error: Optional[str] = None
+    attempts: int = 0
+    submitted_at: float = field(default_factory=time.time)
+    finished_at: Optional[float] = None
+
+
+class ServerlessScheduler:
+    """Priority scheduler running sandboxed tasks for many tenants."""
+
+    def __init__(
+        self,
+        sandbox_factory: Callable[[str, TenantQuota], Sandbox] | None = None,
+        quotas: Optional[Dict[str, TenantQuota]] = None,
+    ) -> None:
+        self._factory = sandbox_factory or self._default_factory
+        self._quotas = quotas or {}
+        self._queue: List[Tuple[int, int, int]] = []  # (priority, task_id tiebreak, id)
+        self._records: Dict[int, TaskRecord] = {}
+        self._ids = itertools.count(1)
+        self._sandboxes: Dict[str, Sandbox] = {}
+        self._in_flight: Dict[str, int] = {}
+
+    @staticmethod
+    def _default_factory(tenant: str, quota: TenantQuota) -> Sandbox:
+        return Sandbox(
+            tenant=tenant,
+            flop_budget=quota.flop_budget_per_task,
+            byte_budget=quota.byte_budget_per_task,
+        )
+
+    def quota(self, tenant: str) -> TenantQuota:
+        return self._quotas.get(tenant, TenantQuota())
+
+    def sandbox_for(self, tenant: str) -> Sandbox:
+        if tenant not in self._sandboxes:
+            self._sandboxes[tenant] = self._factory(tenant, self.quota(tenant))
+        return self._sandboxes[tenant]
+
+    # -------------------------------------------------------------- submit
+
+    def submit(self, spec: TaskSpec) -> int:
+        task_id = next(self._ids)
+        rec = TaskRecord(task_id, spec)
+        self._records[task_id] = rec
+        heapq.heappush(self._queue, (spec.priority, task_id, task_id))
+        return task_id
+
+    # ----------------------------------------------------------------- run
+
+    def run_pending(self, max_tasks: Optional[int] = None) -> List[TaskRecord]:
+        """Drain the queue (deterministically, in priority order)."""
+        done: List[TaskRecord] = []
+        n = 0
+        requeue: List[Tuple[int, int, int]] = []
+        while self._queue and (max_tasks is None or n < max_tasks):
+            _, _, task_id = heapq.heappop(self._queue)
+            rec = self._records[task_id]
+            tenant = rec.spec.tenant
+            quota = self.quota(tenant)
+            if self._in_flight.get(tenant, 0) >= quota.max_tasks_in_flight:
+                rec.state = TaskState.THROTTLED
+                requeue.append((rec.spec.priority, task_id, task_id))
+                continue
+            self._execute(rec)
+            done.append(rec)
+            n += 1
+        for item in requeue:
+            rec = self._records[item[2]]
+            rec.state = TaskState.PENDING
+            heapq.heappush(self._queue, item)
+        return done
+
+    def _execute(self, rec: TaskRecord) -> None:
+        sandbox = self.sandbox_for(rec.spec.tenant)
+        tenant = rec.spec.tenant
+        self._in_flight[tenant] = self._in_flight.get(tenant, 0) + 1
+        rec.state = TaskState.RUNNING
+        try:
+            while True:
+                rec.attempts += 1
+                try:
+                    rec.result = sandbox.run(rec.spec.fn, *rec.spec.args)
+                    rec.state = TaskState.SUCCEEDED
+                    break
+                except (SandboxViolation, BudgetExceeded) as e:
+                    # security/quota denials are terminal, never retried
+                    rec.state = TaskState.DENIED
+                    rec.error = str(e)
+                    break
+                except Exception as e:  # transient failure → bounded retry
+                    rec.error = f"{type(e).__name__}: {e}"
+                    if rec.attempts > rec.spec.max_retries:
+                        rec.state = TaskState.FAILED
+                        break
+        finally:
+            rec.finished_at = time.time()
+            self._in_flight[tenant] -= 1
+
+    # --------------------------------------------------------------- status
+
+    def record(self, task_id: int) -> TaskRecord:
+        return self._records[task_id]
+
+    def stats(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for rec in self._records.values():
+            out[rec.state.value] = out.get(rec.state.value, 0) + 1
+        return out

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+flash_attention — causal/sliding-window/softcap GQA attention
+paged_attention — decode over SEE++ arena pages (paper §IV.A hot path)
+wkv6            — RWKV6 recurrence
+segment_zero    — loader §IV.B zeroing semantics as a masked store
+"""

@@ -1,0 +1,2 @@
+from . import ops, ref
+from .flash_attention import flash_attention_pallas

@@ -1,0 +1,169 @@
+"""Flash attention Pallas TPU kernel (causal / sliding-window / softcap).
+
+Grid ``(B, K·G, num_q_blocks, num_kv_blocks)`` with the KV dimension
+innermost: the online-softmax running state (m, l, acc) lives in VMEM
+scratch and is carried across KV grid steps — the canonical TPU flash
+pattern.  Block shapes are multiples of the MXU tile (128 lanes); K/V for
+GQA are indexed per kv-head via the q-head → kv-head index map, so no
+head replication is materialized.
+
+VMEM working set per step (block_q=256, block_k=512, hd=128, fp32 scratch):
+q 128 KiB + k/v 2×128 KiB + scores 512 KiB + acc 128 KiB ≈ 1 MiB ≪ 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -2.0e38
+
+
+def _kernel(
+    # prefetched scalars
+    window_ref,                 # (1,) int32; 0 = global
+    # inputs
+    q_ref,                      # (1, 1, bq, hd)
+    k_ref,                      # (1, 1, bk, hd)
+    v_ref,                      # (1, 1, bk, hd)
+    # outputs
+    o_ref,                      # (1, 1, bq, hd)
+    # scratch
+    m_ref,                      # (bq,) f32
+    l_ref,                      # (bq,) f32
+    acc_ref,                    # (bq, hd) f32
+    *,
+    scale: float,
+    logit_cap: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # skip fully-masked blocks (causal: kv block entirely in the future)
+    run = True
+    if causal:
+        run = kj * block_k <= (qi + 1) * block_q - 1
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                               # (bq, bk)
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        w = window_ref[0]
+        mask &= jnp.where(w > 0, q_pos - k_pos < w, True)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "logit_cap", "causal", "block_q", "block_k", "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,            # (B, S, KG, hd)  — q heads flattened K*G
+    k: jnp.ndarray,            # (B, S, K, hd)
+    v: jnp.ndarray,
+    window,                    # int32 scalar (traced ok); 0 = global
+    *,
+    scale: float,
+    logit_cap: float = 0.0,
+    causal: bool = True,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Sq, KG, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = KG // K
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+
+    qT = q.transpose(0, 2, 1, 3)               # (B, KG, Sq, hd)
+    kT = k.transpose(0, 2, 1, 3)               # (B, K, Sk, hd)
+    vT = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, logit_cap=logit_cap, causal=causal,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+    )
+    window_arr = jnp.asarray(window, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KG, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j, w: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         functools.partial(_kv_index, G=G)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         functools.partial(_kv_index, G=G)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j, w: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qT.shape, q.dtype),
+        interpret=interpret,
+    )(window_arr, qT, kT, vT)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _kv_index(b, h, i, j, w, *, G):
+    return (b, h // G, j, 0)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention kernel (full softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,            # (B, Sq, KG, hd)
+    k: jnp.ndarray,            # (B, Sk, K, hd)
+    v: jnp.ndarray,
+    window,                    # int scalar; 0 = global
+    *,
+    scale: float,
+    logit_cap: float = 0.0,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    B, Sq, KG, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = KG // K
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qg, k.astype(jnp.float32))
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    mask &= jnp.where(
+        jnp.asarray(window) > 0,
+        q_pos[:, None] - k_pos[None, :] < jnp.asarray(window),
+        True,
+    )
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, KG, hd).astype(q.dtype)

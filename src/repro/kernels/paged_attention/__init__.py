@@ -1,0 +1,2 @@
+from . import ops, ref
+from .paged_attention import paged_attention_pallas

@@ -1,0 +1,27 @@
+"""Dispatching wrapper for paged decode attention.
+
+Accepts the page table straight from
+:meth:`repro.core.arena.PagedKVAllocator.page_table` (numpy int32) and the
+sequence lengths from :meth:`seq_lens`, closing the loop between the
+paper's memory manager and the serving hot path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .paged_attention import paged_attention_pallas
+
+__all__ = ["paged_attention"]
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lens, *, scale,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_attention_pallas(
+        q, k_pages, v_pages,
+        jnp.asarray(page_table, jnp.int32), jnp.asarray(lens, jnp.int32),
+        scale=scale, interpret=interpret,
+    )

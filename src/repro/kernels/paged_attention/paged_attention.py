@@ -1,0 +1,129 @@
+"""Paged decode attention over SEE++ arena pages (Pallas TPU kernel).
+
+One query token per sequence attends over a KV cache stored as
+**non-contiguous pages** allocated by :class:`repro.core.arena.
+PagedKVAllocator` — the TPU-native consequence of the paper's §IV.A memory
+management: the page table (physical page index per logical page) is
+scalar-prefetched so the index map can issue one HBM→VMEM DMA per page,
+and *contiguity of the physical pages* (legacy vs modern allocator)
+decides whether those DMAs coalesce into long strides.
+
+Grid ``(B, K·G, max_pages)`` with per-page online softmax in VMEM scratch.
+Invalid pages (table entry < 0, or beyond the sequence length) are masked;
+their DMA reads page 0 (clamped index) and discards the result.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_attention_pallas"]
+
+NEG_INF = -2.0e38
+
+
+def _kernel(
+    table_ref,                 # (B, max_pages) int32 prefetched
+    lens_ref,                  # (B,) int32 prefetched
+    q_ref,                     # (1, 1, hd)
+    k_ref,                     # (1, page, hd)  — one page of one kv head
+    v_ref,
+    o_ref,                     # (1, 1, hd)
+    m_ref, l_ref, acc_ref,     # VMEM scratch
+    *,
+    scale: float,
+    page_size: int,
+    max_pages: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = lens_ref[b]
+    page_id = table_ref[b, p]
+    valid_page = jnp.logical_and(page_id >= 0, p * page_size < seq_len)
+
+    @pl.when(valid_page)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (hd,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (page, hd)
+        s = jnp.sum(k * q[None, :], axis=1)                   # (page,)
+        pos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (page_size,), 0
+        )
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        pexp = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = corr * l_ref[0] + jnp.sum(pexp)
+        val = v_ref[0, :, 0, :].astype(jnp.float32)           # (page, hd)
+        acc_ref[...] = acc_ref[...] * corr + jnp.sum(
+            pexp[:, None] * val, axis=0, keepdims=True
+        )
+        m_ref[0] = m_new
+
+    @pl.when(p == max_pages - 1)
+    def _finish():
+        o_ref[0, 0, :] = (
+            acc_ref[0] / jnp.maximum(l_ref[0], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "interpret"),
+)
+def paged_attention_pallas(
+    q: jnp.ndarray,            # (B, KG, hd)
+    k_pages: jnp.ndarray,      # (num_pages, page_size, K, hd)
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,   # (B, max_pages) int32, -1 padded
+    lens: jnp.ndarray,         # (B,) int32
+    *,
+    scale: float,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, KG, hd = q.shape
+    num_pages, page_size, K, _ = k_pages.shape
+    G = KG // K
+    max_pages = page_table.shape[1]
+
+    kernel = functools.partial(
+        _kernel, scale=scale, page_size=page_size, max_pages=max_pages,
+    )
+
+    def _page_index(b, h, p, table, lens):
+        return (jnp.maximum(table[b, p], 0), 0, h // G, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KG, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, p, t, l: (b, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd), _page_index),
+            pl.BlockSpec((1, page_size, 1, hd), _page_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, p, t, l: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KG, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, lens, q, k_pages, v_pages)
+    return out

@@ -1,0 +1,32 @@
+"""Oracle: gather pages into a contiguous cache, run masked attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lens, *, scale):
+    """q: (B, KG, hd); pages: (P, page, K, hd); table: (B, MP); lens: (B,)."""
+    B, KG, hd = q.shape
+    _, page_size, K, _ = k_pages.shape
+    G = KG // K
+    MP = page_table.shape[1]
+    safe = jnp.maximum(page_table, 0)                       # (B, MP)
+    k = k_pages[safe]                                        # (B, MP, page, K, hd)
+    v = v_pages[safe]
+    S = MP * page_size
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32))
+    pos = jnp.arange(S)
+    mask = pos[None, :] < lens[:, None]                      # (B, S)
+    valid_page = (page_table >= 0)
+    mask &= jnp.repeat(valid_page, page_size, axis=1)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, KG, hd).astype(q.dtype)

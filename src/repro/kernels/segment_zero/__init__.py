@@ -1,0 +1,2 @@
+from . import ops, ref
+from .segment_zero import segment_zero_pallas

@@ -1,0 +1,15 @@
+"""Dispatching wrapper for segment_zero."""
+
+from __future__ import annotations
+
+import jax
+
+from .segment_zero import segment_zero_pallas
+
+__all__ = ["segment_zero"]
+
+
+def segment_zero(x, lo, hi, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return segment_zero_pallas(x, lo, hi, interpret=interpret)

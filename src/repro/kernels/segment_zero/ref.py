@@ -1,0 +1,8 @@
+"""Oracle for segment_zero."""
+
+import jax.numpy as jnp
+
+
+def segment_zero_ref(x, lo, hi):
+    idx = jnp.arange(x.shape[0])
+    return jnp.where((idx >= lo) & (idx < hi), jnp.zeros_like(x), x)

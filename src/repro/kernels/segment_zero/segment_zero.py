@@ -1,0 +1,60 @@
+"""Segment zero-fill Pallas kernel — the loader's §IV.B semantics on TPU.
+
+When a SELF tensor segment is DMA'd into device memory, the bytes between
+``filesz`` and ``memsz`` (lane-tile padding) must be zeroed **exactly** —
+zeroing the whole trailing tile would clobber the next segment packed into
+the same page (the paper's prophet bug, on-device).  This kernel applies
+``out[i] = 0 if lo <= i < hi else x[i]`` blockwise with the range scalars
+prefetched, so the loader can fuse the fix into the upload path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["segment_zero_pallas"]
+
+LANE = 128
+
+
+def _kernel(bounds_ref, x_ref, o_ref, *, block: int):
+    i = pl.program_id(0)
+    lo, hi = bounds_ref[0], bounds_ref[1]
+    idx = i * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    zero_mask = jnp.logical_and(idx >= lo, idx < hi)
+    x = x_ref[...]
+    o_ref[...] = jnp.where(zero_mask, jnp.zeros_like(x), x)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segment_zero_pallas(
+    x: jnp.ndarray,            # (N,) flat buffer
+    lo,                        # int32 scalar: zero range start (elements)
+    hi,                        # int32 scalar: zero range end
+    *,
+    block: int = 8 * LANE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    (n,) = x.shape
+    block = min(block, n)
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad)).reshape(1, n + pad)
+    bounds = jnp.stack([jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=((n + pad) // block,),
+        in_specs=[pl.BlockSpec((1, block), lambda i, b: (0, i))],
+        out_specs=pl.BlockSpec((1, block), lambda i, b: (0, i)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n + pad), x.dtype),
+        interpret=interpret,
+    )(bounds, xp)
+    return out[0, :n]

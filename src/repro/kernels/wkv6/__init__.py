@@ -1,0 +1,2 @@
+from . import ops, ref
+from .wkv6 import wkv6_pallas

@@ -1,0 +1,17 @@
+"""Dispatching wrapper for the WKV6 kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .wkv6 import wkv6_pallas
+
+__all__ = ["wkv6"]
+
+
+def wkv6(r, k, v, w, u, state0, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return wkv6_pallas(r, k, v, w, u,
+                       state0.astype(jnp.float32), interpret=interpret)

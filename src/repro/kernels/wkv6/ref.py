@@ -1,0 +1,24 @@
+"""Oracle: exact per-token WKV6 scan (pure jnp, fp32)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state0):
+    """r/k/v/w: (B, T, H, hd); u: (H, hd); state0: (B, H, hd, hd)."""
+    f32 = lambda x: x.astype(jnp.float32)
+    r, k, v, w = map(f32, (r, k, v, w))
+    u = f32(u)
+
+    def step(S, ts):
+        r_t, k_t, v_t, w_t = ts                   # (B, H, hd)
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = S * w_t[..., None] + kv
+        return S, y
+
+    xs = tuple(x.swapaxes(0, 1) for x in (r, k, v, w))  # (T, B, H, hd)
+    S, ys = jax.lax.scan(step, f32(state0), xs)
+    return S, ys.swapaxes(0, 1)

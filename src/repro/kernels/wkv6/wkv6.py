@@ -1,0 +1,113 @@
+"""WKV6 recurrence Pallas TPU kernel (RWKV6 "Finch" time mix).
+
+Per (batch, head): the (hd × hd) state lives in VMEM fp32 scratch and is
+carried across the chunk grid dimension; each grid step DMAs one (C, hd)
+chunk of r/k/v/w from HBM and runs the exact per-token recurrence with an
+inner ``fori_loop`` —
+
+    y_t = r_t · (S + u ⊙ k_t ⊗ v_t);   S ← w_t ⊙ S + k_t ⊗ v_t
+
+Numerics are exact (no exponent factorization): the closed-form chunk
+formulation needs ``exp(-cumsum log w)`` terms that overflow fp32 for
+strong data-dependent decays; the recurrence form never leaves [0,1]
+decay space.  An MXU-tiled closed-form variant is the recorded follow-up
+optimization (EXPERIMENTS.md §Perf notes).
+
+VMEM per step (C=128, hd=64): 4 × 32 KiB chunks + 16 KiB state ≈ 150 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv6_pallas"]
+
+
+def _kernel(
+    r_ref, k_ref, v_ref, w_ref,     # (1, 1, C, hd)
+    u_ref,                          # (1, hd)
+    s0_ref,                         # (1, 1, hd, hd) — initial state
+    y_ref,                          # (1, 1, C, hd)
+    sout_ref,                       # (1, 1, hd, hd)
+    state_ref,                      # VMEM (hd, hd) f32
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (C, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)             # (hd,)
+
+    def step(i, carry):
+        S = carry                                 # (hd, hd)
+        r_t, k_t, v_t, w_t = r[i], k[i], v[i], w[i]
+        kv = k_t[:, None] * v_t[None, :]          # (hd, hd)
+        y_t = jnp.sum((S + u[:, None] * kv) * r_t[:, None], axis=0)
+        y_ref[0, 0, i, :] = y_t.astype(y_ref.dtype)
+        return S * w_t[:, None] + kv
+
+    S = jax.lax.fori_loop(0, chunk, step, state_ref[...])
+    state_ref[...] = S
+
+    @pl.when(t == num_chunks - 1)
+    def _finish():
+        sout_ref[0, 0] = state_ref[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(
+    r: jnp.ndarray,            # (B, T, H, hd)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,            # decay in (0, 1)
+    u: jnp.ndarray,            # (H, hd)
+    state0: jnp.ndarray,       # (B, H, hd, hd) f32
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (final_state (B,H,hd,hd) f32, y (B,T,H,hd))."""
+    B, T, H, hd = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+
+    def tr(x):
+        return x.transpose(0, 2, 1, 3)            # (B, H, T, hd)
+
+    rT, kT, vT, wT = tr(r), tr(k), tr(v), tr(w)
+
+    kernel = functools.partial(_kernel, chunk=chunk, num_chunks=nc)
+    seq_spec = pl.BlockSpec((1, 1, chunk, hd), lambda b, h, t: (b, h, t, 0))
+    state_spec = pl.BlockSpec((1, 1, hd, hd), lambda b, h, t: (b, h, 0, 0))
+
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, hd), lambda b, h, t: (h, 0)),
+            state_spec,
+        ],
+        out_specs=[seq_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rT, kT, vT, wT, u, state0)
+    return s_out, y.transpose(0, 2, 1, 3)

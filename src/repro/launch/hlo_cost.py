@@ -1,0 +1,500 @@
+"""Static cost analysis over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once**, so a
+scan-over-layers module under-reports FLOPs, bytes and collective traffic
+by a factor of the layer count.  This module re-derives the three roofline
+terms from the HLO text itself:
+
+* builds the computation graph (fusions, while bodies/conditions,
+  conditional branches, calls),
+* extracts per-computation costs: dot/convolution FLOPs from shapes and
+  contracting dims, collective wire bytes (ring-adjusted by replica-group
+  size), and an HBM-traffic approximation (operands + results of
+  *top-level* ops in each computation — values inside a fusion stay in
+  registers/VMEM and are not charged),
+* resolves ``while`` trip counts from the loop condition's comparison
+  constant, and aggregates costs bottom-up with trip multiplication.
+
+Validated against ``compiled.cost_analysis()`` on loop-free modules
+(tests/test_hlo_cost.py) and against analytic 6·N·D on the dry-run cells.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-~]+)\s*\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_ASSIGN = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-~]+)\s*=\s*(.*)$")
+_CALLS = re.compile(r"calls=%?([\w\.\-~]+)")
+_BODY = re.compile(r"body=%?([\w\.\-~]+)")
+_COND = re.compile(r"condition=%?([\w\.\-~]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-~]+)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{(\{[\d,]*\})")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE.finditer(text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d] if dims else []
+        out.append((dtype, shape))
+    return out
+
+
+def _nbytes(dtype: str, shape: List[int]) -> int:
+    return _DTYPE_BYTES.get(dtype, 0) * math.prod(shape) if shape is not None else 0
+
+
+_OPERAND_NAME = re.compile(r"%([\w\.\-~]+)")
+
+
+@dataclass
+class _Op:
+    name: str
+    opcode: str
+    result: Tuple[str, List[int]]
+    line: str
+    operands: Tuple[str, ...] = ()
+    result_all: List[Tuple[str, List[int]]] = field(default_factory=list)
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    symtab: Dict[str, Tuple[str, List[int]]] = field(default_factory=dict)
+    # local (single-visit) costs
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: float = 0.0
+    collective_counts: Dict[str, Tuple[int, float]] = field(default_factory=dict)
+    # sub-calls: (computation name, multiplier)
+    calls: List[Tuple[str, float]] = field(default_factory=list)
+    max_constant: int = 0
+
+
+@dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    wire_bytes: float
+    collectives: Dict[str, Dict[str, float]]
+    while_trip_counts: List[int]
+
+
+def _split_assignment(rhs: str):
+    """Split '<type> <opcode>(<operands>), <attrs>' robustly.
+
+    Tuple result types nest parens and contain ``/*index=N*/`` comments, so
+    this walks balanced parens instead of using a regex.
+    """
+    rhs = rhs.strip()
+    # 1. skip the result type: either a balanced (...) tuple or one token
+    if rhs.startswith("("):
+        depth, i = 0, 0
+        while i < len(rhs):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        type_text, rest = rhs[: i + 1], rhs[i + 1:]
+    else:
+        parts = rhs.split(" ", 1)
+        if len(parts) < 2:
+            return None
+        type_text, rest = parts
+    rest = rest.strip()
+    # 2. opcode = leading token up to '('
+    j = rest.find("(")
+    if j <= 0:
+        return None
+    opcode = rest[:j].strip()
+    if not re.fullmatch(r"[\w\-]+", opcode or ""):
+        return None
+    # 3. operands = balanced paren group after opcode
+    depth, k = 0, j
+    while k < len(rest):
+        if rest[k] == "(":
+            depth += 1
+        elif rest[k] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        k += 1
+    operand_text = rest[j + 1: k]
+    attrs = rest[k + 1:]
+    return type_text, opcode, operand_text, attrs
+
+
+def _parse_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and ("->" in stripped or
+                                           stripped.startswith("ENTRY")):
+                m = _COMP_HEADER.match(stripped)
+                if m:
+                    cur = _Computation(m.group(1))
+                    if stripped.startswith("ENTRY"):
+                        entry = m.group(1)
+                    comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        m = _OP_ASSIGN.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        split = _split_assignment(rhs)
+        if split is None:
+            continue
+        type_text, opcode, operand_text, attrs = split
+        shapes = _shapes_in(type_text)
+        result = shapes[0] if shapes else ("opaque", [])
+        operands = tuple(_OPERAND_NAME.findall(operand_text))
+        op = _Op(name, opcode, result, line, operands)
+        op.result_all = shapes
+        cur.ops.append(op)
+        cur.symtab[name] = result
+        if opcode == "constant":
+            for c in _CONSTANT.finditer(stripped):
+                cur.max_constant = max(cur.max_constant, int(c.group(1)))
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _resolve(op: _Op, comp: "_Computation", i: int):
+    """Shape of the i-th operand, via the computation symbol table."""
+    if i < len(op.operands):
+        return comp.symtab.get(op.operands[i])
+    return None
+
+
+def _dot_flops(op: _Op, comp: "_Computation") -> float:
+    """2 × prod(result) × prod(lhs contracting dims)."""
+    lhs = _resolve(op, comp, 0)
+    cm = _CONTRACT.search(op.line)
+    if lhs is None or cm is None:
+        return 2.0 * math.prod(op.result[1] or [0])
+    cdims = [int(d) for d in cm.group(1).split(",") if d]
+    try:
+        contract = math.prod(lhs[1][d] for d in cdims) if cdims else 1
+    except IndexError:
+        contract = 1
+    return 2.0 * math.prod(op.result[1] or [1]) * contract
+
+
+def _conv_flops(op: _Op, comp: "_Computation") -> float:
+    out = math.prod(op.result[1] or [1])
+    rhs = _resolve(op, comp, 1)
+    if rhs and len(rhs[1]) >= 2:
+        return 2.0 * out * math.prod(rhs[1]) / max(rhs[1][-1], 1)
+    return 2.0 * out
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    return default
+
+
+def _wire_bytes(opcode: str, nbytes: float, n: int) -> float:
+    n = max(n, 2)
+    if opcode.startswith("all-reduce"):
+        return 2.0 * nbytes * (n - 1) / n
+    if opcode.startswith("all-gather"):
+        return nbytes * (n - 1) / n            # nbytes = gathered result
+    if opcode.startswith("reduce-scatter"):
+        return nbytes * (n - 1)                # nbytes = scattered result
+    if opcode.startswith("all-to-all"):
+        return nbytes * (n - 1) / n
+    return nbytes                               # collective-permute
+
+
+_PARAM_IDX = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_bytes(op: _Op, comp: "_Computation", fused: "_Computation") -> float:
+    """HBM traffic of one fusion, modeling in-place loop accumulation.
+
+    A fusion whose root is a ``dynamic-update-slice`` (or a tuple of them)
+    is XLA's residual-stacking pattern: on TPU the accumulator is updated
+    *in place* — traffic is the update window, not the full buffer, and
+    the aliased accumulator operand is not re-read.  Everything else:
+    params once + root once.
+    """
+    if not fused.ops:
+        return 0.0
+    by_name = {o.name: o for o in fused.ops}
+
+    def through_unary(o):
+        # look through dtype/layout unaries (convert/bitcast/copy): the CPU
+        # backend round-trips bf16 buffers via f32 for dots, wrapping the
+        # in-place DUS in converts that a TPU lowering would not emit.
+        seen = 0
+        while (o.opcode in ("convert", "bitcast", "copy", "reshape")
+               and len(o.operands) == 1 and o.operands[0] in by_name
+               and seen < 4):
+            o = by_name[o.operands[0]]
+            seen += 1
+        return o
+
+    root = fused.ops[-1]
+    roots = [root]
+    if root.opcode == "tuple":
+        roots = [by_name[n] for n in root.operands if n in by_name]
+    roots = [through_unary(r) for r in roots]
+
+    aliased_params = set()
+    out_bytes = 0.0
+    for r in roots:
+        if r.opcode in ("dynamic-update-slice", "scatter"):
+            upd_i = 1 if r.opcode == "dynamic-update-slice" else 2
+            upd = by_name.get(r.operands[upd_i]) \
+                if len(r.operands) > upd_i else None
+            win = _nbytes(*upd.result) if upd is not None else 0
+            out_bytes += 2.0 * win          # read window + write window
+            acc = by_name.get(r.operands[0]) if r.operands else None
+            if acc is not None:
+                acc = through_unary(acc)
+            if acc is not None and acc.opcode == "parameter":
+                m = _PARAM_IDX.search(acc.line)
+                if m:
+                    aliased_params.add(int(m.group(1)))
+        else:
+            out_bytes += _nbytes(*r.result)
+
+    # params consumed only through a slice/gather inside the fusion are
+    # read at window granularity (stacked scan params sliced per layer)
+    param_ops = {}
+    consumers: Dict[str, List[_Op]] = {}
+    for o in fused.ops:
+        if o.opcode == "parameter":
+            m = _PARAM_IDX.search(o.line)
+            if m:
+                param_ops[o.name] = int(m.group(1))
+        for operand in o.operands:
+            consumers.setdefault(operand, []).append(o)
+    window_params: Dict[int, float] = {}
+    for pname, pidx in param_ops.items():
+        # follow single-consumer unary chains (convert/bitcast/…): the CPU
+        # backend interposes dtype round-trips between a stacked buffer and
+        # the slice that actually reads it
+        name = pname
+        hops = 0
+        while hops < 4:
+            cons = consumers.get(name, [])
+            if (len(cons) == 1
+                    and cons[0].opcode in ("convert", "bitcast", "copy",
+                                           "reshape")):
+                name = cons[0].name
+                hops += 1
+                continue
+            break
+        cons = consumers.get(name, [])
+        if cons and all(c.opcode in ("dynamic-slice", "slice", "gather")
+                        and c.operands and c.operands[0] == name
+                        for c in cons):
+            window_params[pidx] = sum(_nbytes(*c.result) for c in cons)
+
+    in_bytes = 0.0
+    for i in range(len(op.operands)):
+        if i in aliased_params:
+            continue
+        if i in window_params:
+            in_bytes += window_params[i]
+            continue
+        shp = _resolve(op, comp, i)
+        if shp is not None:
+            in_bytes += _nbytes(*shp)
+    return in_bytes + out_bytes
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
+    "while", "conditional", "call",
+}
+
+#: Ops the TPU compiler fuses into producers/consumers: charged zero HBM
+#: traffic.  The CPU backend (our dry-run compiler) leaves these as loose
+#: top-level ops; counting them would model CPU fusion granularity, not
+#: TPU (EXPERIMENTS.md §Roofline methodology).
+_FUSIBLE_ELEMENTWISE = {
+    "convert", "multiply", "add", "subtract", "divide", "negate", "abs",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "power", "maximum", "minimum", "select",
+    "compare", "and", "or", "not", "xor", "broadcast", "iota", "reshape",
+    "transpose", "clamp", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "erf", "expm1", "log1p", "cosine", "sine",
+    "is-finite", "reduce-precision", "concatenate", "pad", "reverse",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "stochastic-convert", "real", "imag", "atan2", "rem", "map",
+}
+
+
+def _local_costs(comp: _Computation, comps: Dict[str, _Computation]) -> None:
+    for op in comp.ops:
+        result_bytes = sum(_nbytes(d, shp) for d, shp in op.result_all) \
+            if op.result_all else _nbytes(*op.result)
+        code = op.opcode
+        if code == "dot":
+            comp.flops += _dot_flops(op, comp)
+        elif code == "convolution":
+            comp.flops += _conv_flops(op, comp)
+        elif any(code.startswith(c) for c in COLLECTIVE_OPS):
+            if code.endswith("-done"):
+                continue
+            n = _group_size(op.line)
+            wire = _wire_bytes(code, result_bytes, n)
+            comp.wire += wire
+            key = code.replace("-start", "")
+            cnt, tot = comp.collective_counts.get(key, (0, 0.0))
+            comp.collective_counts[key] = (cnt + 1, tot + wire)
+        elif code == "fusion":
+            m = _CALLS.search(op.line)
+            if m:
+                comp.calls.append((m.group(1), 1.0))
+                fused = comps.get(m.group(1))
+                if fused is not None:
+                    comp.bytes += _fusion_bytes(op, comp, fused)
+                    continue  # bytes fully accounted; skip generic charge
+        elif code == "while":
+            bm, cm_ = _BODY.search(op.line), _COND.search(op.line)
+            trips = 1
+            if cm_ and cm_.group(1) in comps:
+                trips = max(comps[cm_.group(1)].max_constant, 1)
+            if bm:
+                comp.calls.append((bm.group(1), float(trips)))
+                comp.calls.append(("__trip__%d" % trips, 0.0))
+        elif code == "conditional":
+            m = _BRANCHES.search(op.line)
+            if m:
+                for b in m.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        comp.calls.append((b, 1.0))
+        elif code in ("call", "custom-call"):
+            m = _TO_APPLY.search(op.line) or _CALLS.search(op.line)
+            if m:
+                comp.calls.append((m.group(1), 1.0))
+
+        # HBM-traffic approximation: top-level op operands + result —
+        # EXCEPT slicing ops, which touch only the sliced window.  A
+        # dynamic-slice of the stacked (L, …) scan parameters inside the
+        # layer loop reads one layer, not the whole stack; charging the
+        # full operand would overcount HBM traffic by ~L×.
+        if code in _SKIP_BYTES_OPS:
+            continue
+        if code in _FUSIBLE_ELEMENTWISE:
+            continue
+        if code == "copy":
+            comp.bytes += result_bytes            # layout change: one write
+            continue
+        if code in ("dynamic-slice", "slice"):
+            comp.bytes += 2.0 * result_bytes          # read window + write
+            continue
+        if code == "gather":
+            idx = _resolve(op, comp, 1)
+            comp.bytes += 2.0 * result_bytes + (_nbytes(*idx) if idx else 0)
+            continue
+        if code == "dynamic-update-slice":
+            upd = _resolve(op, comp, 1)
+            comp.bytes += 2.0 * (_nbytes(*upd) if upd else result_bytes)
+            continue
+        if code == "scatter":
+            upd = _resolve(op, comp, 2)
+            comp.bytes += 2.0 * (_nbytes(*upd) if upd else result_bytes)
+            continue
+        operand_bytes = 0
+        for i in range(len(op.operands)):
+            shp = _resolve(op, comp, i)
+            if shp is not None:
+                operand_bytes += _nbytes(*shp)
+        comp.bytes += result_bytes + operand_bytes
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    for comp in comps.values():
+        if comp.name != "__entry__" or comps.get(comp.name) is comp:
+            pass
+    seen_local = set()
+    for name, comp in list(comps.items()):
+        if id(comp) in seen_local:
+            continue
+        seen_local.add(id(comp))
+        _local_costs(comp, comps)
+
+    entry = comps.get("__entry__")
+    if entry is None:  # fall back: biggest computation
+        entry = max(comps.values(), key=lambda c: len(c.ops))
+
+    totals: Dict[str, Tuple[float, float, float, Dict]] = {}
+    trip_counts: List[int] = []
+
+    def total(name: str, stack: Tuple[str, ...] = ()) -> Tuple[float, float, float, Dict]:
+        if name.startswith("__trip__"):
+            trip_counts.append(int(name[8:]))
+            return (0.0, 0.0, 0.0, {})
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return (0.0, 0.0, 0.0, {})
+        if name in totals:
+            return totals[name]
+        f, b, w = comp.flops, comp.bytes, comp.wire
+        colls = {k: dict(count=v[0], wire=v[1]) for k, v in
+                 comp.collective_counts.items()}
+        for callee, mult in comp.calls:
+            cf, cb, cw, cc = total(callee, stack + (name,))
+            f += mult * cf
+            b += mult * cb
+            w += mult * cw
+            for k, v in cc.items():
+                d = colls.setdefault(k, dict(count=0, wire=0.0))
+                d["count"] += mult * v["count"]
+                d["wire"] += mult * v["wire"]
+        totals[name] = (f, b, w, colls)
+        return totals[name]
+
+    f, b, w, colls = total(entry.name)
+    return HloCost(flops=f, bytes=b, wire_bytes=w, collectives=colls,
+                   while_trip_counts=sorted(trip_counts, reverse=True))

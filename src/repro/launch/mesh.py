@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches JAX device state — smoke tests see one
+CPU device; only ``dryrun.py`` forces 512 host devices.
+
+Topology: one v5e pod = 256 chips arranged ``(data=16, model=16)``; the
+multi-pod mesh adds a leading pure-DP ``pod`` axis (DCN between pods, ICI
+within — the ``pod`` axis only ever carries gradient all-reduces, which is
+what DCN can sustain).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "MESH_AXES"]
+
+MESH_AXES = ("data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: Optional[int] = None, model: int = 1):
+    """Mesh over whatever devices exist (tests / single-host runs)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,78 @@
+"""Step functions shared by the trainer, server and dry-run."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (
+    AdamWConfig,
+    ScheduleConfig,
+    adamw_init,
+    adamw_update,
+    lr_at,
+)
+
+__all__ = ["make_train_step", "make_prefill_fn", "make_decode_fn", "make_batch_stub"]
+
+
+def make_train_step(
+    model,
+    schedule: ScheduleConfig = ScheduleConfig(),
+    opt_cfg: AdamWConfig = AdamWConfig(),
+) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        lr = lr_at(opt_state["step"], schedule)
+        params, opt_state, gnorm = adamw_update(
+            grads, opt_state, params, lr, opt_cfg
+        )
+        metrics = dict(metrics)
+        metrics.update(loss=loss, gnorm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_fn(model, *, max_seq: Optional[int] = None) -> Callable:
+    cfg = model.cfg
+
+    def prefill(params, batch):
+        kw = {}
+        if cfg.family == "audio":
+            kw["frames"] = batch["frames"]
+        elif cfg.num_patches:
+            kw["patch_embeds"] = batch["patch_embeds"]
+        return model.prefill(params, batch["tokens"], max_seq=max_seq, **kw)
+
+    return prefill
+
+
+def make_decode_fn(model) -> Callable:
+    def decode(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    return decode
+
+
+def make_batch_stub(cfg, *, batch: int, seq: int, kind: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    stub: Dict[str, Any] = {"tokens": tok}
+    if kind == "train":
+        stub["targets"] = tok
+        stub["loss_mask"] = jax.ShapeDtypeStruct((batch, seq), jnp.float32)
+    if cfg.family == "audio":
+        stub["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_len, cfg.d_model), jnp.bfloat16
+        )
+    elif cfg.num_patches:
+        stub["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), jnp.bfloat16
+        )
+    return stub

@@ -1,0 +1,4 @@
+from .common import ArchConfig, constrain, current_mesh, mesh_context
+from .model import build_model
+
+__all__ = ["ArchConfig", "build_model", "constrain", "current_mesh", "mesh_context"]

@@ -1,0 +1,307 @@
+"""Attention: GQA with RoPE, sliding windows, softcap — train/prefill/decode.
+
+Three execution paths:
+
+* ``blockwise_attn`` — the XLA reference path: ``lax.scan`` over KV chunks
+  with an online-softmax accumulator (memory O(S·chunk), never
+  materializes S×S) — required for the 32k prefill cells on any backend.
+  Per-layer ``window``/``rope_base`` arrive as traced scalars so the same
+  scan body serves gemma-style local/global alternation.
+* ``repro.kernels.flash_attention`` — the Pallas TPU kernel with identical
+  semantics (``impl="pallas"``).
+* ``decode_attn`` — single-token attention over a KV cache laid out either
+  ``heads``-sharded (baseline TP) or ``seq``-sharded (flash-decoding style,
+  used by the §Perf hillclimb).
+
+Shardings (see DESIGN.md §3): residual stream is sequence-parallel
+``(data, model, -)``; inside attention, seq is gathered and heads are
+sharded over ``model`` (GSPMD pads non-divisible head counts — the padding
+waste is visible in the roofline useful-FLOP ratio and is attacked in
+§Perf).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, axis_size, constrain, rms_norm, rope, softcap
+
+__all__ = [
+    "attn_params_shape",
+    "init_attn_params",
+    "attention_block",
+    "blockwise_attn",
+    "decode_attn",
+    "update_cache",
+]
+
+NEG_INF = -2.0e38
+_SENTINEL = 2 ** 30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def attn_params_shape(cfg: ArchConfig) -> Dict[str, Any]:
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    shapes = {
+        "wq": (D, H, hd),
+        "wk": (D, K, hd),
+        "wv": (D, K, hd),
+        "wo": (H * hd, D),
+    }
+    if cfg.qkv_bias:
+        shapes.update({"bq": (H, hd), "bk": (K, hd), "bv": (K, hd)})
+    if cfg.qk_norm:
+        shapes.update({"q_norm": (hd,), "k_norm": (hd,)})
+    return shapes
+
+
+def init_attn_params(rng, cfg: ArchConfig, dtype) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for name, shape in attn_params_shape(cfg).items():
+        rng, sub = jax.random.split(rng)
+        if name.startswith(("b",)):
+            out[name] = jnp.zeros(shape, dtype)
+        elif name.endswith("_norm"):
+            out[name] = jnp.ones(shape, dtype)
+        else:
+            fan_in = shape[0] if name != "wo" else shape[0]
+            out[name] = (
+                jax.random.normal(sub, shape) / math.sqrt(cfg.d_model)
+            ).astype(dtype)
+    return out
+
+
+# --------------------------------------------------------------------------
+# blockwise (online-softmax) attention — XLA path
+# --------------------------------------------------------------------------
+
+def blockwise_attn(
+    q: jnp.ndarray,            # (B, Sq, K, G, hd) — q already grouped
+    k: jnp.ndarray,            # (B, Sk, K, hd)
+    v: jnp.ndarray,            # (B, Sk, K, hd)
+    *,
+    q_positions: jnp.ndarray,  # (Sq,) absolute positions of queries
+    k_positions: jnp.ndarray,  # (Sk,)
+    window,                    # traced int32 scalar; 0 => global
+    scale: float,
+    logit_cap: float = 0.0,
+    causal: bool = True,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Memory-efficient attention; returns (B, Sq, K, G, hd)."""
+    B, Sq, K, G, hd = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        # ragged KV (e.g. whisper's 1500 encoder frames): pad and mask the
+        # tail out via sentinel positions (see ``valid`` below).
+        k = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        sentinel = jnp.full((pad,), _SENTINEL, k_positions.dtype)
+        k_positions = jnp.concatenate([k_positions, sentinel])
+        Sk += pad
+    n_chunks = Sk // chunk
+
+    qf = (q.astype(jnp.float32) * scale)
+    kc = k.reshape(B, n_chunks, chunk, K, hd)
+    vc = v.reshape(B, n_chunks, chunk, K, hd)
+    kpos = k_positions.reshape(n_chunks, chunk)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_j, v_j, kp_j = xs                     # (B,C,K,hd), (B,C,K,hd), (C,)
+        s = jnp.einsum(
+            "bqkgh,bckh->bqkgc", qf, k_j.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        if logit_cap:
+            s = softcap(s, logit_cap)
+        mask = jnp.broadcast_to(kp_j[None, :] < _SENTINEL, (Sq, chunk))
+        if causal:
+            mask &= kp_j[None, :] <= q_positions[:, None]
+        mask &= jnp.where(
+            window > 0,
+            q_positions[:, None] - kp_j[None, :] < window,
+            True,
+        )
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        l_corr = jnp.exp(m_prev - m_new)
+        l_new = l_corr * l_prev + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bqkgc,bckh->bqkgh", p, v_j.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        acc = acc * l_corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Sq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, K, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, K, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kpos),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# full attention block (train / prefill)
+# --------------------------------------------------------------------------
+
+def attention_block(
+    x: jnp.ndarray,                   # (B, S, D) seq-parallel
+    p: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+    *,
+    window,                           # traced per-layer scalar
+    rope_base,                        # traced per-layer scalar
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    impl: str = "xla",
+    return_kv: bool = False,
+):
+    B, S, D = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // K
+
+    heads_divisible = H % max(axis_size("model"), 1) == 0
+    if heads_divisible:
+        # gather sequence (seq-parallel -> full seq, heads sharded next)
+        x = constrain(x, "data", None, None)
+    else:
+        # §Perf-B5: sequence-parallel attention — qkv computed on the
+        # seq-sharded stream (weights replicated over model), only K/V
+        # gathered (K·hd ≪ D), q and the output stay seq-sharded, and the
+        # out-projection is a local matmul (no per-layer all-reduce).
+        x = constrain(x, "data", "model", None)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if positions is None:
+        positions = jnp.arange(S)
+    if rope_base is not None:
+        q = rope(q, positions, rope_base)
+        k = rope(k, positions, rope_base)
+
+    # Attention compute sharding over the model axis: by q-heads when the
+    # head count divides (gemma/qwen3-moe), else by query-sequence
+    # (context-parallel) — both always legal, chosen statically per arch.
+    if heads_divisible:
+        q = constrain(q, "data", None, "model", None)
+    else:
+        q = constrain(q, "data", "model", None, None)
+    k = constrain(k, "data", None, None, None)   # kv heads < axis: replicate
+    v = constrain(v, "data", None, None, None)
+
+    scale = cfg.query_scale or (1.0 / math.sqrt(hd))
+    qg = q.reshape(B, S, K, G, hd)
+
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(
+            qg, k, v, q_positions=positions, k_positions=positions,
+            window=window, scale=scale, logit_cap=cfg.attn_logit_softcap,
+            causal=causal,
+        )
+    else:
+        out = blockwise_attn(
+            qg, k, v, q_positions=positions, k_positions=positions,
+            window=window, scale=scale, logit_cap=cfg.attn_logit_softcap,
+            causal=causal,
+        )
+    if heads_divisible:
+        out = constrain(out, "data", None, "model", None, None)
+    else:
+        out = constrain(out, "data", "model", None, None, None)
+    y = out.reshape(B, S, H * hd)
+    y = y @ p["wo"]
+    y = constrain(y, "data", "model", None)      # sequence-parallel out
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# --------------------------------------------------------------------------
+# decode path
+# --------------------------------------------------------------------------
+
+def update_cache(cache_k, cache_v, k_new, v_new, pos, *, layout: str = "seq"):
+    """Insert one token's K/V at per-sequence positions.
+
+    cache: (B, S, K, hd); k_new/v_new: (B, K, hd); pos: (B,) int32.
+    """
+    B = cache_k.shape[0]
+    b_idx = jnp.arange(B)
+    cache_k = cache_k.at[b_idx, pos].set(k_new.astype(cache_k.dtype))
+    cache_v = cache_v.at[b_idx, pos].set(v_new.astype(cache_v.dtype))
+    if layout == "heads":
+        cache_k = constrain(cache_k, "data", None, "model", None)
+        cache_v = constrain(cache_v, "data", None, "model", None)
+    else:  # flash-decoding: shard the sequence axis
+        cache_k = constrain(cache_k, "data", "model", None, None)
+        cache_v = constrain(cache_v, "data", "model", None, None)
+    return cache_k, cache_v
+
+
+def decode_attn(
+    q: jnp.ndarray,          # (B, H, hd) — current token's queries (roped)
+    cache_k: jnp.ndarray,    # (B, S, K, hd)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,        # (B,) current position (cache valid < pos+1)
+    cfg: ArchConfig,
+    *,
+    window,
+    layout: str = "seq",
+) -> jnp.ndarray:
+    B, S, K, hd = cache_k.shape
+    H = cfg.num_heads
+    G = H // K
+    scale = cfg.query_scale or (1.0 / math.sqrt(hd))
+
+    # NOTE: the cache is consumed in its storage dtype — upcasting it
+    # (`cache.astype(f32)`) makes XLA convert the whole stacked cache to
+    # f32 inside the layer loop (§Perf-C2: a full-stack round-trip per
+    # layer).  The einsum accumulates in f32 via preferred_element_type.
+    qg = (q.reshape(B, K, G, hd).astype(jnp.float32) * scale).astype(q.dtype)
+    if layout == "heads":
+        qg = constrain(qg, "data", "model", None, None)
+    s = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, cache_k,
+        preferred_element_type=jnp.float32,
+    )
+    if cfg.attn_logit_softcap:
+        s = softcap(s, cfg.attn_logit_softcap)
+    idx = jnp.arange(S)
+    mask = idx[None, :] <= pos[:, None]                       # (B, S)
+    mask &= jnp.where(window > 0, pos[:, None] - idx[None, :] < window, True)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskh->bkgh", w.astype(cache_v.dtype), cache_v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, H * hd)

@@ -1,0 +1,334 @@
+"""Shared model config, primitive layers and mesh-context helpers.
+
+One :class:`ArchConfig` describes every assigned architecture (dense GQA
+transformers, MoE, RWKV6, Hymba hybrid, Whisper enc-dec, LLaVA VLM).  All
+stacks scan over layers with stacked parameters; per-layer heterogeneity
+(local/global attention windows, per-layer RoPE bases) is carried by
+``(L,)`` flag vectors fed to the scan as xs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ArchConfig",
+    "mesh_context",
+    "constrain",
+    "current_mesh",
+    "fit_spec",
+    "axis_size",
+    "rms_norm",
+    "rope",
+    "rope_angles",
+    "gated_mlp",
+    "layer_windows",
+    "layer_rope_bases",
+    "softcap",
+    "Dense",
+    "take_embedding",
+]
+
+# --------------------------------------------------------------------------
+# architecture configuration
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Complete static description of one architecture."""
+
+    arch_id: str
+    family: str                       # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None    # default d_model // num_heads
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    query_scale: Optional[float] = None   # default 1/sqrt(head_dim)
+    rope_base: float = 10_000.0
+    rope_base_local: Optional[float] = None   # gemma3: different base for local
+    # sliding-window pattern: ratio "local:global"; 0 window = global/full
+    local_window: int = 0
+    pattern_local: int = 0            # e.g. gemma3: 5 local per 1 global
+    pattern_global: int = 1
+    post_norms: bool = False          # gemma2-style sandwich norms
+    embed_scale: bool = False         # gemma: embeddings * sqrt(d_model)
+    tie_embeddings: bool = True
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    expert_d_ff: int = 0
+    num_shared_experts: int = 0
+    router_score: str = "softmax_topk"    # | "sigmoid_top1"
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+    # SSM / RWKV
+    ssm_state_size: int = 0
+    rwkv_head_size: int = 64
+    ssm_d_inner: int = 0              # hymba mamba branch width
+
+    # enc-dec / multimodal frontends (stubs provide embeddings directly)
+    encoder_layers: int = 0
+    encoder_len: int = 0              # whisper: 1500 frame positions
+    num_patches: int = 0              # vlm: patch-embedding prefix length
+
+    norm_eps: float = 1e-6
+    activation: str = "silu"          # | "gelu" | "gelu_tanh"
+    gated: bool = True                # False: plain 2-matrix MLP (starcoder2)
+    dtype: str = "bfloat16"
+
+    # ---- derived ----
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k cell (see DESIGN.md §4)."""
+        return self.family in ("ssm", "hybrid") or self.local_window > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once if tied)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        H, K, hd = self.num_heads, self.num_kv_heads, self.hd
+        attn = D * (H * hd) + 2 * D * (K * hd) + (H * hd) * D
+        if self.qkv_bias:
+            attn += (H + 2 * K) * hd
+        if self.is_moe:
+            ff = self.num_experts * 3 * D * self.expert_d_ff + D * self.num_experts
+            ff += self.num_shared_experts * 3 * D * self.expert_d_ff
+        else:
+            ff = 3 * D * F
+        ssm = 0
+        if self.family == "ssm":  # rwkv6: r,k,v,g,o + decay lora + channel mix
+            attn = 0
+            ssm = L and (5 * D * D + 2 * D * 64 + 2 * D * (int(3.5 * D)))
+            ssm //= L if L else 1
+        if self.family == "hybrid":
+            di = self.ssm_d_inner or self.d_model
+            ssm = 2 * D * di + di * D + di * (2 * self.ssm_state_size + 2)
+        per_layer = attn + ff + ssm + 2 * D
+        total = L * per_layer + V * D + D
+        if not self.tie_embeddings:
+            total += V * D
+        if self.encoder_layers:
+            total += self.encoder_layers * (4 * D * D + 2 * D * F + 2 * D)
+            total += L * (D * (H * hd) + 2 * D * (K * hd) + (H * hd) * D + 2 * D)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        D, L = self.d_model, self.num_layers
+        dense = self.param_count() - L * (
+            self.num_experts * 3 * D * self.expert_d_ff
+        )
+        active = L * (self.experts_per_token * 3 * D * self.expert_d_ff)
+        return int(dense + active)
+
+
+# --------------------------------------------------------------------------
+# mesh context: models call ``constrain`` without threading the mesh through
+# --------------------------------------------------------------------------
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    token = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def fit_spec(mesh, spec, shape) -> P:
+    """Make ``spec`` legal for ``shape`` on ``mesh``.
+
+    Per dimension: axis names missing from the mesh are dropped, and the
+    axis tuple is truncated to the largest prefix whose size product
+    divides the dimension (JAX requires exact divisibility — there is no
+    GSPMD padding for jit shardings).  This gives each architecture an
+    automatic, safe fallback (e.g. 36 q-heads on a 16-way ``model`` axis
+    fall back to replication; the compute is then split by other means —
+    see ``attention_block``'s seq-q sharding).
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    axes = dict(mesh.shape)
+    out = []
+    for dim, entry in zip(shape, entries[: len(shape)]):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, (tuple, list)) else (entry,)
+        names = [a for a in names if a in axes]
+        kept, prod = [], 1
+        for a in names:
+            if dim % (prod * axes[a]) == 0:
+                kept.append(a)
+                prod *= axes[a]
+            else:
+                break
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def axis_size(name: str) -> int:
+    mesh = _MESH.get()
+    if mesh is None:
+        return 1
+    return dict(mesh.shape).get(name, 1)
+
+
+def constrain(x, *spec):
+    """``with_sharding_constraint`` against the ambient mesh (no-op without).
+
+    Axis names not on the mesh are dropped and non-dividing axes fall back
+    to replication (``fit_spec``), so the same model code runs on the
+    production mesh, the multi-pod mesh and a single CPU device.
+    """
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    cleaned = fit_spec(mesh, spec, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, cleaned))
+
+
+# --------------------------------------------------------------------------
+# primitive layers (pure functions; params are dict leaves)
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6, *, plus_one: bool = False):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (x * w).astype(dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_angles(positions, head_dim: int, base):
+    """Rotary angles for ``positions`` (any shape) → (…, head_dim/2)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    inv_freq = jnp.asarray(base, jnp.float32) ** -exponent
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def rope(x, positions, base):
+    """Apply rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    ang = rope_angles(positions, hd, base)          # (..., S, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]                          # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _act(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def gated_mlp(x, w_in, w_gate, w_out, activation: str = "silu"):
+    """SwiGLU/GeGLU: act(x·w_gate) * (x·w_in) · w_out.
+
+    ``w_gate=None`` gives the plain two-matrix MLP (starcoder2, whisper).
+    """
+    act = _act(activation)
+    if w_gate is None:
+        h = act(x @ w_in)
+    else:
+        h = act(x @ w_gate) * (x @ w_in)
+    h = constrain(h, "data", None, "model")
+    return h @ w_out
+
+
+class Dense:
+    """Weight-init helpers (functional; no module state)."""
+
+    @staticmethod
+    def init(rng, shape, scale: Optional[float] = None, dtype=jnp.float32):
+        fan_in = shape[0] if len(shape) > 1 else 1
+        scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def take_embedding(table, tokens):
+    """Vocab-sharded embedding lookup."""
+    return jnp.take(table, tokens, axis=0)
+
+
+# --------------------------------------------------------------------------
+# per-layer flag vectors
+# --------------------------------------------------------------------------
+
+
+def layer_windows(cfg: ArchConfig) -> np.ndarray:
+    """(L,) int32 sliding-window size per layer; 0 = global/full attention."""
+    L = cfg.num_layers
+    if cfg.local_window == 0:
+        return np.zeros(L, np.int32)
+    out = np.zeros(L, np.int32)
+    period = cfg.pattern_local + cfg.pattern_global
+    for i in range(L):
+        # local layers first within each period, global layer(s) last —
+        # matches gemma2 (alternating, global on odd) and gemma3 (5:1).
+        out[i] = cfg.local_window if (i % period) < cfg.pattern_local else 0
+    return out
+
+
+def layer_rope_bases(cfg: ArchConfig) -> np.ndarray:
+    """(L,) float32 RoPE base per layer (gemma3 uses 10k local / 1M global)."""
+    w = layer_windows(cfg)
+    base_local = cfg.rope_base_local or cfg.rope_base
+    return np.where(w > 0, base_local, cfg.rope_base).astype(np.float32)

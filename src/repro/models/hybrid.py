@@ -1,0 +1,328 @@
+"""Hymba-style hybrid: parallel attention + Mamba(SSM) heads per layer.
+
+Each layer feeds the same normed input to (a) a GQA attention branch
+(sliding-window on most layers, global on {first, middle, last} as in the
+Hymba paper) and (b) a selective-SSM branch; branch outputs are RMS-
+normalized and averaged before the residual add (arXiv:2411.13676).
+Meta-tokens and the Mamba depthwise conv are omitted — backbone-only scope,
+recorded in DESIGN.md §4.
+
+SSM recurrence uses the same chunk-checkpointed scan discipline as RWKV6,
+so training memory is O(T/C·state + C·tokens).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (
+    attention_block,
+    decode_attn,
+    init_attn_params,
+    update_cache,
+)
+from .common import ArchConfig, constrain, gated_mlp, rms_norm, rope, take_embedding
+
+__all__ = ["HybridLM", "ssm_scan", "ssm_step"]
+
+
+def hymba_windows(cfg: ArchConfig) -> np.ndarray:
+    """Sliding window everywhere except first/middle/last layers (global)."""
+    L = cfg.num_layers
+    out = np.full(L, cfg.local_window or 1024, np.int32)
+    for g in (0, L // 2, L - 1):
+        out[g] = 0
+    return out
+
+
+# --------------------------------------------------------------------------
+# selective SSM
+# --------------------------------------------------------------------------
+
+def ssm_step(h, x, dt, B_t, C_t, A):
+    """h: (..., di, N); x/dt: (..., di); B_t/C_t: (..., N); A: (di, N)."""
+    dA = jnp.exp(dt[..., None] * A)                        # (..., di, N)
+    dBx = (dt * x)[..., None] * B_t[..., None, :]          # (..., di, N)
+    h = h * dA + dBx
+    y = jnp.einsum("...dn,...n->...d", h, C_t)
+    return h, y
+
+
+def ssm_scan(x, dt, Bp, Cp, A, h0, *, chunk: int = 64):
+    """x/dt: (B, T, di); Bp/Cp: (B, T, N) → y (B, T, di), final h."""
+    Bsz, T, di = x.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    n = T // chunk
+    f32 = lambda v: v.astype(jnp.float32)
+    xs = tuple(
+        v.reshape(Bsz, n, chunk, *v.shape[2:]).swapaxes(0, 1)
+        for v in map(f32, (x, dt, Bp, Cp))
+    )
+
+    @jax.checkpoint
+    def chunk_fn(h, cs):
+        xj, dtj, bj, cj = cs
+
+        def tok(h, ts):
+            xt, dtt, bt, ct = ts
+            return ssm_step(h, xt, dtt, bt, ct, A)
+
+        h, ys = jax.lax.scan(
+            tok, h,
+            tuple(v.swapaxes(0, 1) for v in (xj, dtj, bj, cj)),
+        )
+        return h, ys.swapaxes(0, 1)
+
+    h, ys = jax.lax.scan(chunk_fn, f32(h0), xs)
+    return h, ys.swapaxes(0, 1).reshape(Bsz, T, di).astype(x.dtype)
+
+
+class HybridLM:
+    def __init__(self, cfg: ArchConfig, *, impl: str = "xla", remat: str = "full",
+                 decode_layout: str = "seq"):
+        assert cfg.family == "hybrid"
+        self.cfg = cfg
+        self.impl = impl
+        self.remat = remat
+        self.decode_layout = decode_layout
+        self.windows = hymba_windows(cfg)
+        self.di = cfg.ssm_d_inner or 2 * cfg.d_model
+        self.N = cfg.ssm_state_size
+
+    # ------------------------------------------------------------- params
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        D, di, N = cfg.d_model, self.di, self.N
+        dtype = jnp.dtype(cfg.dtype)
+
+        def init_layer(r):
+            ks = jax.random.split(r, 8)
+            s = 1.0 / math.sqrt(D)
+            nrm = lambda k, shape, sc=s: (jax.random.normal(k, shape) * sc).astype(dtype)
+            return {
+                "ln1": jnp.ones((D,), dtype), "ln2": jnp.ones((D,), dtype),
+                "attn": init_attn_params(ks[0], cfg, dtype),
+                "attn_norm": jnp.ones((D,), dtype),
+                "ssm_norm": jnp.ones((D,), dtype),
+                "ssm": {
+                    "w_in": nrm(ks[1], (D, 2 * di)),
+                    "w_dt": nrm(ks[2], (di, di), 1.0 / math.sqrt(di)),
+                    "dt_bias": jnp.zeros((di,), jnp.float32),
+                    "w_B": nrm(ks[3], (di, N), 1.0 / math.sqrt(di)),
+                    "w_C": nrm(ks[4], (di, N), 1.0 / math.sqrt(di)),
+                    "A_log": jnp.log(
+                        jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))
+                    ),
+                    "D_skip": jnp.ones((di,), jnp.float32),
+                    "w_out": nrm(ks[5], (di, D), 1.0 / math.sqrt(di)),
+                },
+                "mlp": {
+                    "wg": nrm(ks[6], (D, cfg.d_ff)),
+                    "wu": nrm(ks[7], (D, cfg.d_ff)),
+                    "wd": nrm(jax.random.fold_in(r, 7), (cfg.d_ff, D),
+                              1.0 / math.sqrt(cfg.d_ff)),
+                },
+            }
+
+        layers = jax.vmap(init_layer)(jax.random.split(rng, cfg.num_layers))
+        return {
+            "embed": (
+                jax.random.normal(jax.random.fold_in(rng, 1), (cfg.vocab_size, D))
+                / math.sqrt(D)
+            ).astype(dtype),
+            "layers": layers,
+            "final_norm": jnp.ones((D,), dtype),
+        }
+
+    # ----------------------------------------------------------- branches
+
+    def _ssm_branch(self, x, p, h0):
+        """x: (B, T, D) → (B, T, D), final state."""
+        di, N = self.di, self.N
+        B, T, D = x.shape
+        xz = x @ p["w_in"]
+        xc, z = jnp.split(xz, 2, axis=-1)
+        xc = constrain(xc, "data", None, "model")
+        dt = jax.nn.softplus(xc @ p["w_dt"] + p["dt_bias"])
+        Bp = xc @ p["w_B"]
+        Cp = xc @ p["w_C"]
+        A = -jnp.exp(p["A_log"])
+        h, y = ssm_scan(xc, dt, Bp, Cp, A, h0)
+        y = y + p["D_skip"].astype(y.dtype) * xc
+        y = y * jax.nn.silu(z)
+        return y @ p["w_out"], h
+
+    def _layer(self, h, p, window):
+        cfg = self.cfg
+        B, T, D = h.shape
+        a_in = rms_norm(h, p["ln1"], cfg.norm_eps)
+        attn_y = attention_block(
+            a_in, p["attn"], cfg, window=window, rope_base=cfg.rope_base,
+            impl=self.impl,
+        )
+        h0 = jnp.zeros((B, self.di, self.N), jnp.float32)
+        h0 = constrain(h0, "data", "model", None)
+        ssm_y, _ = self._ssm_branch(a_in, p["ssm"], h0)
+        fused = 0.5 * (
+            rms_norm(attn_y, p["attn_norm"], cfg.norm_eps)
+            + rms_norm(ssm_y, p["ssm_norm"], cfg.norm_eps)
+        )
+        h = h + fused
+        m = rms_norm(h, p["ln2"], cfg.norm_eps)
+        m = gated_mlp(m, p["mlp"]["wu"], p["mlp"]["wg"], p["mlp"]["wd"],
+                      cfg.activation)
+        return constrain(h + m, "data", "model", None), jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------ forward
+
+    def forward(self, params, tokens, *, patch_embeds=None):
+        cfg = self.cfg
+        h = take_embedding(params["embed"], tokens)
+        h = constrain(h, "data", "model", None)
+
+        def body(h, xs):
+            p, window = xs
+            fn = jax.checkpoint(self._layer) if self.remat == "full" else self._layer
+            return fn(h, p, window)
+
+        h, _ = jax.lax.scan(body, h, (params["layers"], jnp.asarray(self.windows)))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,vd->btv", h, params["embed"])
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"])
+        targets = batch["targets"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(targets, jnp.float32)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum((lse - ll) * mask) / denom
+        return ce, {"ce": ce, "aux": aux, "tokens": denom}
+
+    # ------------------------------------------------------------ serving
+
+    def init_decode_state(self, batch_size: int, max_seq: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+        return {
+            "cache_k": jnp.zeros((L, batch_size, max_seq, K, hd), dtype),
+            "cache_v": jnp.zeros((L, batch_size, max_seq, K, hd), dtype),
+            "ssm_h": jnp.zeros((L, batch_size, self.di, self.N), jnp.float32),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def prefill(self, params, tokens, *, max_seq: Optional[int] = None,
+                patch_embeds=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        max_seq = max_seq or S
+        positions = jnp.arange(S)
+        h = take_embedding(params["embed"], tokens)
+
+        def body(h, xs):
+            p, window = xs
+            a_in = rms_norm(h, p["ln1"], cfg.norm_eps)
+            attn_y, (k, v) = attention_block(
+                a_in, p["attn"], cfg, window=window, rope_base=cfg.rope_base,
+                positions=positions, impl=self.impl, return_kv=True,
+            )
+            h0 = jnp.zeros((B, self.di, self.N), jnp.float32)
+            ssm_y, hs = self._ssm_branch(a_in, p["ssm"], h0)
+            fused = 0.5 * (
+                rms_norm(attn_y, p["attn_norm"], cfg.norm_eps)
+                + rms_norm(ssm_y, p["ssm_norm"], cfg.norm_eps)
+            )
+            h = h + fused
+            m = rms_norm(h, p["ln2"], cfg.norm_eps)
+            m = gated_mlp(m, p["mlp"]["wu"], p["mlp"]["wg"], p["mlp"]["wd"],
+                          cfg.activation)
+            h = h + m
+            if max_seq > S:
+                pad = [(0, 0), (0, max_seq - S), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            return h, (k, v, hs)
+
+        h, (ck, cv, ssm_h) = jax.lax.scan(
+            body, h, (params["layers"], jnp.asarray(self.windows))
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", h[:, -1], params["embed"])
+        state = {"cache_k": ck, "cache_v": cv, "ssm_h": ssm_h,
+                 "pos": jnp.full((B,), S, jnp.int32)}
+        return state, logits
+
+    def decode_step(self, params, state, tokens):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = state["pos"]
+        h = take_embedding(params["embed"], tokens)
+        b_idx = jnp.arange(B)
+
+        # §Perf-C2: cache stack rides the carry; per-layer slice → token
+        # insert → write-back (see transformer.py)
+        def body(carry, xs):
+            h, ck_stack, cv_stack, hs_stack, l = carry
+            p, window = xs
+            a_in = rms_norm(h, p["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bd,dhk->bhk", a_in, p["attn"]["wq"])
+            k = jnp.einsum("bd,dhk->bhk", a_in, p["attn"]["wk"])
+            v = jnp.einsum("bd,dhk->bhk", a_in, p["attn"]["wv"])
+            q = rope(q[:, None], pos[:, None], cfg.rope_base)[:, 0]
+            k = rope(k[:, None], pos[:, None], cfg.rope_base)[:, 0]
+            ck = jax.lax.dynamic_index_in_dim(ck_stack, l, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_stack, l, 0, keepdims=False)
+            hs = jax.lax.dynamic_index_in_dim(hs_stack, l, 0, keepdims=False)
+            ck = ck.at[b_idx, pos].set(k.astype(ck.dtype))
+            cv = cv.at[b_idx, pos].set(v.astype(cv.dtype))
+            attn_o = decode_attn(q, ck, cv, pos, cfg, window=window,
+                                 layout=self.decode_layout)
+            attn_y = attn_o.astype(h.dtype) @ p["attn"]["wo"]
+            # single-token ssm
+            ps = p["ssm"]
+            xz = a_in @ ps["w_in"]
+            xc, z = jnp.split(xz, 2, axis=-1)
+            dt = jax.nn.softplus(xc @ ps["w_dt"] + ps["dt_bias"])
+            Bp, Cp = xc @ ps["w_B"], xc @ ps["w_C"]
+            A = -jnp.exp(ps["A_log"])
+            hs, y = ssm_step(hs, xc.astype(jnp.float32), dt.astype(jnp.float32),
+                             Bp.astype(jnp.float32), Cp.astype(jnp.float32), A)
+            y = (y + ps["D_skip"] * xc).astype(h.dtype) * jax.nn.silu(z)
+            ssm_y = y @ ps["w_out"]
+            fused = 0.5 * (
+                rms_norm(attn_y, p["attn_norm"], cfg.norm_eps)
+                + rms_norm(ssm_y, p["ssm_norm"], cfg.norm_eps)
+            )
+            h = h + fused
+            m = rms_norm(h, p["ln2"], cfg.norm_eps)
+            m = gated_mlp(m, p["mlp"]["wu"], p["mlp"]["wg"], p["mlp"]["wd"],
+                          cfg.activation)
+            ck_stack = jax.lax.dynamic_update_slice_in_dim(
+                ck_stack, ck[None], l, 0)
+            cv_stack = jax.lax.dynamic_update_slice_in_dim(
+                cv_stack, cv[None], l, 0)
+            hs_stack = jax.lax.dynamic_update_slice_in_dim(
+                hs_stack, hs[None].astype(hs_stack.dtype), l, 0)
+            return (h + m, ck_stack, cv_stack, hs_stack, l + 1), None
+
+        (h, ck, cv, ssm_h, _), _ = jax.lax.scan(
+            body,
+            (h, state["cache_k"], state["cache_v"], state["ssm_h"],
+             jnp.asarray(0, jnp.int32)),
+            (params["layers"], jnp.asarray(self.windows)),
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", h, params["embed"])
+        return {"cache_k": ck, "cache_v": cv, "ssm_h": ssm_h,
+                "pos": pos + 1}, logits

@@ -1,0 +1,32 @@
+"""Model factory: family → implementation dispatch."""
+
+from __future__ import annotations
+
+from typing import Any
+
+from .common import ArchConfig
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .rwkv import RwkvLM
+from .transformer import TransformerLM
+
+__all__ = ["build_model"]
+
+_FAMILIES = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "vlm": TransformerLM,
+    "ssm": RwkvLM,
+    "hybrid": HybridLM,
+    "audio": EncDecLM,
+}
+
+
+def build_model(cfg: ArchConfig, **kw) -> Any:
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for {cfg.arch_id}") from None
+    if cfg.family == "audio":
+        kw.setdefault("max_target_positions", 32768 + 8)
+    return cls(cfg, **kw)

@@ -1,0 +1,341 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Per-layer time-mix (WKV6 recurrence over a per-head (hd×hd) state with
+per-channel data-dependent decay ``w_t = exp(-exp(w0 + lora(x_t)))`` and
+bonus ``u``) and channel-mix (squared-ReLU FFN), both with token-shift
+ddlerp mixing as in the paper (arXiv:2404.05892).
+
+Memory discipline for training: the recurrence runs as an **outer scan over
+chunks** (state checkpointed at chunk boundaries) with a **rematerialized
+inner per-token scan** — backward recomputes inside each chunk, so residual
+memory is O(T/C · state + C · tokens) instead of O(T · state).  The Pallas
+kernel (``repro.kernels.wkv6``) implements the chunked closed form; this
+module is the exact XLA path and the oracle the kernel is tested against.
+
+No KV cache exists (DESIGN.md §4): serving state is O(1) per sequence —
+this is why rwkv6-3b runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, constrain, rms_norm, softcap, take_embedding
+
+__all__ = ["RwkvLM", "wkv6_scan", "wkv6_step"]
+
+TM_LORA = 32
+DECAY_LORA = 64
+
+
+# --------------------------------------------------------------------------
+# WKV6 recurrence
+# --------------------------------------------------------------------------
+
+def wkv6_step(state, r, k, v, w, u):
+    """One token.  state: (..., H, hd, hd); r/k/v/w: (..., H, hd); u: (H, hd).
+
+    y_t[j] = sum_i r[i] * (S[i,j] + u[i] k[i] v[j]);  S = w⊙S + k^T v.
+    """
+    rk = r * u * k                                    # (..., H, hd)
+    y = jnp.einsum("...hi,...hij->...hj", r, state) + jnp.einsum(
+        "...hi,...hj->...hj", rk, v
+    )
+    state = state * w[..., None] + jnp.einsum("...hi,...hj->...hij", k, v)
+    return state, y
+
+
+def wkv6_scan(r, k, v, w, u, state0, *, chunk: int = 64):
+    """(B, T, H, hd) inputs → (B, T, H, hd) outputs + final state.
+
+    Outer scan over T/chunk chunks (checkpointed), inner exact per-token
+    scan.  All recurrence math in fp32.
+    """
+    B, T, H, hd = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    f32 = lambda x: x.astype(jnp.float32)
+    rc, kc, vc, wc = (
+        x.reshape(B, n, chunk, H, hd).swapaxes(0, 1) for x in map(f32, (r, k, v, w))
+    )
+    u = f32(u)
+
+    @jax.checkpoint
+    def chunk_fn(state, xs):
+        rj, kj, vj, wj = xs                            # (B, C, H, hd)
+
+        def tok(state, ts):
+            rt, kt, vt, wt = ts
+            return wkv6_step(state, rt, kt, vt, wt, u)
+
+        state, ys = jax.lax.scan(
+            tok, state,
+            (rj.swapaxes(0, 1), kj.swapaxes(0, 1), vj.swapaxes(0, 1),
+             wj.swapaxes(0, 1)),
+        )
+        return state, ys.swapaxes(0, 1)               # (B, C, H, hd)
+
+    state, ys = jax.lax.scan(chunk_fn, f32(state0), (rc, kc, vc, wc))
+    y = ys.swapaxes(0, 1).reshape(B, T, H, hd)
+    return state, y.astype(r.dtype)
+
+
+# --------------------------------------------------------------------------
+# layer pieces
+# --------------------------------------------------------------------------
+
+def _token_shift(x, prev=None):
+    """shift(x)[t] = x[t-1]; position 0 gets ``prev`` (or zeros)."""
+    shifted = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return shifted.at[:, :1].set(first.astype(x.dtype))
+
+
+def _group_norm(x, scale, bias, H, eps=64e-5):
+    """RWKV's per-head GroupNorm on (..., H*hd)."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], H, shp[-1] // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(shp) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+class RwkvLM:
+    def __init__(self, cfg: ArchConfig, *, impl: str = "xla", remat: str = "full",
+                 decode_layout: str = "none"):
+        assert cfg.family == "ssm"
+        self.cfg = cfg
+        self.impl = impl
+        self.H = cfg.d_model // cfg.rwkv_head_size
+        self.hd = cfg.rwkv_head_size
+
+    # ------------------------------------------------------------- params
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        D, F, H, hd = cfg.d_model, cfg.d_ff, self.H, self.hd
+        dtype = jnp.dtype(cfg.dtype)
+
+        def init_layer(r):
+            keys = jax.random.split(r, 12)
+            s = 1.0 / math.sqrt(D)
+            n = lambda k, shape, sc=s: (jax.random.normal(k, shape) * sc).astype(dtype)
+            return {
+                "ln1": jnp.ones((D,), dtype), "ln2": jnp.ones((D,), dtype),
+                "mu_x": jnp.zeros((D,), dtype),
+                "mu_rkvwg": jnp.zeros((5, D), dtype),
+                "tm_w1": n(keys[0], (D, 5 * TM_LORA)),
+                "tm_w2": n(keys[1], (5, TM_LORA, D), 0.1),
+                "w0": jnp.full((D,), -2.0, jnp.float32),
+                "dw1": n(keys[2], (D, DECAY_LORA)),
+                "dw2": n(keys[3], (DECAY_LORA, D), 0.1),
+                "u": (jax.random.normal(keys[4], (H, hd)) * 0.1).astype(jnp.float32),
+                "wr": n(keys[5], (D, D)), "wk": n(keys[6], (D, D)),
+                "wv": n(keys[7], (D, D)), "wg": n(keys[8], (D, D)),
+                "wo": n(keys[9], (D, D)),
+                "lnx_scale": jnp.ones((D,), dtype),
+                "lnx_bias": jnp.zeros((D,), dtype),
+                "cmu_k": jnp.zeros((D,), dtype), "cmu_r": jnp.zeros((D,), dtype),
+                "wck": n(keys[10], (D, F)),
+                "wcv": n(keys[11], (F, D), 1.0 / math.sqrt(F)),
+                "wcr": n(jax.random.fold_in(r, 99), (D, D)),
+            }
+
+        layers = jax.vmap(init_layer)(jax.random.split(rng, cfg.num_layers))
+        return {
+            "embed": (
+                jax.random.normal(jax.random.fold_in(rng, 1), (cfg.vocab_size, D))
+                / math.sqrt(D)
+            ).astype(dtype),
+            "layers": layers,
+            "final_norm": jnp.ones((D,), dtype),
+        }
+
+    # ----------------------------------------------------------- time mix
+
+    def _ddlerp(self, x, xx, p):
+        """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+        B, T, D = x.shape
+        base = x + xx * p["mu_x"]
+        lora = jnp.tanh(base @ p["tm_w1"]).reshape(B, T, 5, TM_LORA)
+        delta = jnp.einsum("btfl,fld->btfd", lora, p["tm_w2"])
+        mixed = x[:, :, None] + xx[:, :, None] * (p["mu_rkvwg"] + delta)
+        return [mixed[:, :, i] for i in range(5)]
+
+    def _time_mix(self, x, p, state, prev):
+        cfg = self.cfg
+        B, T, D = x.shape
+        H, hd = self.H, self.hd
+        xx = _token_shift(x, prev) - x
+        xr, xk, xv, xw, xg = self._ddlerp(x, xx, p)
+        r = (xr @ p["wr"]).reshape(B, T, H, hd)
+        k = (xk @ p["wk"]).reshape(B, T, H, hd)
+        v = (xv @ p["wv"]).reshape(B, T, H, hd)
+        g = jax.nn.silu(xg @ p["wg"])
+        dec = p["w0"] + jnp.tanh(xw @ p["dw1"]) @ p["dw2"]
+        w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(B, T, H, hd)
+        # §Perf-A2: the recurrence is embarrassingly parallel over batch
+        # and heads; heads (40) don't divide the model axis, so shard batch
+        # over BOTH axes — the chunk scan then runs with zero collectives
+        # and 1/16 the per-chip state/IO of the hd_v-sharded baseline.
+        r = constrain(r, ("data", "model"), None, None, None)
+        k = constrain(k, ("data", "model"), None, None, None)
+        v = constrain(v, ("data", "model"), None, None, None)
+        w = constrain(w, ("data", "model"), None, None, None)
+        if self.impl == "pallas":
+            from repro.kernels.wkv6 import ops as wkv_ops
+            state, y = wkv_ops.wkv6(r, k, v, w, p["u"], state)
+        else:
+            state, y = wkv6_scan(r, k, v, w, p["u"], state)
+        y = y.reshape(B, T, D)
+        y = _group_norm(y, p["lnx_scale"], p["lnx_bias"], H)
+        return (y * g) @ p["wo"], state, x[:, -1]
+
+    def _channel_mix(self, x, p, prev):
+        xx = _token_shift(x, prev) - x
+        xk = x + xx * p["cmu_k"]
+        xr = x + xx * p["cmu_r"]
+        h = jnp.square(jax.nn.relu(xk @ p["wck"]))
+        h = constrain(h, "data", None, "model")
+        return jax.nn.sigmoid(xr @ p["wcr"]) * (h @ p["wcv"]), x[:, -1]
+
+    # ------------------------------------------------------------ forward
+
+    def _layer(self, h, p, state_tm):
+        cfg = self.cfg
+        h = constrain(h, "data", None, None)       # gather seq for mixing
+        a = rms_norm(h, p["ln1"], cfg.norm_eps)
+        a, state_tm, _ = self._time_mix(a, p, state_tm, None)
+        h = h + a
+        m = rms_norm(h, p["ln2"], cfg.norm_eps)
+        m, _ = self._channel_mix(m, p, None)
+        # §Perf-A1: the carry saved by the layer scan is sequence-sharded
+        return constrain(h + m, "data", "model", None), state_tm
+
+    def forward(self, params, tokens, *, patch_embeds=None):
+        cfg = self.cfg
+        B, T = tokens.shape
+        H, hd = self.H, self.hd
+        h = take_embedding(params["embed"], tokens)
+        h = constrain(h, "data", "model", None)
+
+        def body(h, p):
+            state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+            state0 = constrain(state0, ("data", "model"), None, None, None)
+            # §Perf-A1: full layer remat — only the seq-sharded carry is
+            # saved; everything else (fp32 r/k/v/w, chunk states) recomputes
+            fn = jax.checkpoint(self._layer)
+            h, _ = fn(h, p, state0)
+            return h, jnp.zeros((), jnp.float32)
+
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,vd->btv", h, params["embed"])
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"])
+        targets = batch["targets"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(targets, jnp.float32)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum((lse - ll) * mask) / denom
+        return ce, {"ce": ce, "aux": aux, "tokens": denom}
+
+    # ------------------------------------------------------------ serving
+
+    def init_decode_state(self, batch_size: int, max_seq: int, dtype=None):
+        cfg = self.cfg
+        L, D, H, hd = cfg.num_layers, cfg.d_model, self.H, self.hd
+        return {
+            "wkv": jnp.zeros((L, batch_size, H, hd, hd), jnp.float32),
+            "tm_prev": jnp.zeros((L, batch_size, D), jnp.dtype(cfg.dtype)),
+            "cm_prev": jnp.zeros((L, batch_size, D), jnp.dtype(cfg.dtype)),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def prefill(self, params, tokens, *, max_seq: Optional[int] = None,
+                patch_embeds=None):
+        cfg = self.cfg
+        B, T = tokens.shape
+        H, hd = self.H, self.hd
+        h = take_embedding(params["embed"], tokens)
+
+        def body(h, p):
+            a = rms_norm(h, p["ln1"], cfg.norm_eps)
+            state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+            a2, state, tm_prev = self._time_mix(a, p, state0, None)
+            h = h + a2
+            m = rms_norm(h, p["ln2"], cfg.norm_eps)
+            m2, cm_prev = self._channel_mix(m, p, None)
+            return h + m2, (state, a[:, -1], m[:, -1])
+
+        h, (wkv, tm_prev, cm_prev) = jax.lax.scan(body, h, params["layers"])
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", h[:, -1], params["embed"])
+        state = {
+            "wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev,
+            "pos": jnp.full((B,), T, jnp.int32),
+        }
+        return state, logits
+
+    def decode_step(self, params, state, tokens):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        D, H, hd = cfg.d_model, self.H, self.hd
+        h = take_embedding(params["embed"], tokens)
+
+        def body(h, xs):
+            p, wkv, tm_prev, cm_prev = xs
+            a = rms_norm(h, p["ln1"], cfg.norm_eps)
+            # single-token time mix (closed form of _time_mix with T=1)
+            xx = tm_prev.astype(a.dtype) - a
+            base = a + xx * p["mu_x"]
+            lora = jnp.tanh(base @ p["tm_w1"]).reshape(B, 5, TM_LORA)
+            delta = jnp.einsum("bfl,fld->bfd", lora, p["tm_w2"])
+            mixed = a[:, None] + xx[:, None] * (p["mu_rkvwg"] + delta)
+            xr, xk, xv, xw, xg = [mixed[:, i] for i in range(5)]
+            r = (xr @ p["wr"]).reshape(B, H, hd).astype(jnp.float32)
+            k = (xk @ p["wk"]).reshape(B, H, hd).astype(jnp.float32)
+            v = (xv @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+            g = jax.nn.silu(xg @ p["wg"])
+            dec = p["w0"] + jnp.tanh(xw @ p["dw1"]) @ p["dw2"]
+            w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(B, H, hd)
+            wkv, y = wkv6_step(wkv, r, k, v, w, p["u"])
+            y = _group_norm(y.reshape(B, D).astype(a.dtype),
+                            p["lnx_scale"], p["lnx_bias"], H)
+            h = h + (y * g) @ p["wo"]
+            # channel mix
+            m = rms_norm(h, p["ln2"], cfg.norm_eps)
+            xx2 = cm_prev.astype(m.dtype) - m
+            xk2 = m + xx2 * p["cmu_k"]
+            xr2 = m + xx2 * p["cmu_r"]
+            cm = jax.nn.sigmoid(xr2 @ p["wcr"]) * (
+                jnp.square(jax.nn.relu(xk2 @ p["wck"])) @ p["wcv"]
+            )
+            return h + cm, (wkv, a, m)
+
+        h, (wkv, tm_prev, cm_prev) = jax.lax.scan(
+            body, h,
+            (params["layers"], state["wkv"], state["tm_prev"], state["cm_prev"]),
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", h, params["embed"])
+        new_state = {
+            "wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev,
+            "pos": state["pos"] + 1,
+        }
+        return new_state, logits

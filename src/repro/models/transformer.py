@@ -1,0 +1,335 @@
+"""Unified decoder-only transformer: dense / MoE / VLM-prefix families.
+
+Covers gemma2-9b, gemma3-12b, starcoder2-7b, qwen2.5-32b, qwen3-moe-235b,
+llama4-scout, llava-next-34b.  One ``lax.scan`` over stacked layer params;
+per-layer local/global windows and RoPE bases ride along as ``(L,)`` xs.
+
+API (shared by every family, see ``model.py``):
+  ``init(rng)``                         → params
+  ``loss(params, batch)``               → (scalar, metrics)
+  ``prefill(params, tokens, ...)``      → (decode_state, last_logits)
+  ``decode_step(params, state, tok)``   → (state, logits)
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (
+    attention_block,
+    attn_params_shape,
+    decode_attn,
+    init_attn_params,
+    update_cache,
+)
+from .common import (
+    ArchConfig,
+    constrain,
+    gated_mlp,
+    layer_rope_bases,
+    layer_windows,
+    rms_norm,
+    rope,
+    softcap,
+    take_embedding,
+)
+from .moe import init_moe_params, moe_block, moe_params_shape
+
+__all__ = ["TransformerLM"]
+
+
+def _mlp_params_shape(cfg: ArchConfig) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    return {"wg": (D, F), "wu": (D, F), "wd": (F, D)}
+
+
+class TransformerLM:
+    """Functional model wrapper (no state besides config)."""
+
+    def __init__(self, cfg: ArchConfig, *, impl: str = "xla",
+                 remat: str = "full", decode_layout: str = "seq"):
+        self.cfg = cfg
+        self.impl = impl
+        self.remat = remat
+        self.decode_layout = decode_layout
+        self.windows = layer_windows(cfg)
+        self.rope_bases = layer_rope_bases(cfg)
+
+    # ------------------------------------------------------------- params
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        r_embed, r_layers, r_extra = jax.random.split(rng, 3)
+
+        def init_layer(r):
+            ra, rm = jax.random.split(r)
+            p = {
+                "ln1": jnp.ones((cfg.d_model,), dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype),
+                "attn": init_attn_params(ra, cfg, dtype),
+            }
+            if cfg.post_norms:
+                p["ln1_post"] = jnp.ones((cfg.d_model,), dtype)
+                p["ln2_post"] = jnp.ones((cfg.d_model,), dtype)
+            if cfg.is_moe:
+                p["moe"] = init_moe_params(rm, cfg, dtype)
+            else:
+                rg, ru, rd = jax.random.split(rm, 3)
+                D, F = cfg.d_model, cfg.d_ff
+                s = 1.0 / math.sqrt(D)
+                p["mlp"] = {
+                    "wu": (jax.random.normal(ru, (D, F)) * s).astype(dtype),
+                    "wd": (jax.random.normal(rd, (F, D)) / math.sqrt(F)).astype(dtype),
+                }
+                if cfg.gated:
+                    p["mlp"]["wg"] = (
+                        jax.random.normal(rg, (D, F)) * s
+                    ).astype(dtype)
+            return p
+
+        layers = jax.vmap(init_layer)(jax.random.split(r_layers, cfg.num_layers))
+        params = {
+            "embed": (
+                jax.random.normal(r_embed, (cfg.vocab_size, cfg.d_model))
+                / math.sqrt(cfg.d_model)
+            ).astype(dtype),
+            "layers": layers,
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = (
+                jax.random.normal(r_extra, (cfg.vocab_size, cfg.d_model))
+                / math.sqrt(cfg.d_model)
+            ).astype(dtype)
+        return params
+
+    # ------------------------------------------------------------ forward
+
+    def _embed_inputs(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        h = take_embedding(params["embed"], tokens)
+        if cfg.embed_scale:
+            h = (h.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(h.dtype)
+        if patch_embeds is not None and cfg.num_patches:
+            # VLM/audio early fusion: modality embeddings occupy the prefix
+            np_ = patch_embeds.shape[1]
+            h = jnp.concatenate([patch_embeds.astype(h.dtype), h[:, np_:]], axis=1)
+        return constrain(h, "data", "model", None)
+
+    def _layer(self, h, p, window, rope_base, positions):
+        cfg = self.cfg
+        a = rms_norm(h, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norms)
+        a = attention_block(
+            a, p["attn"], cfg, window=window, rope_base=rope_base,
+            positions=positions, impl=self.impl,
+        )
+        if cfg.post_norms:
+            a = rms_norm(a, p["ln1_post"], cfg.norm_eps, plus_one=True)
+        h = h + a
+        m = rms_norm(h, p["ln2"], cfg.norm_eps, plus_one=cfg.post_norms)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.is_moe:
+            m, aux = moe_block(m, p["moe"], cfg)
+        else:
+            m = gated_mlp(m, p["mlp"]["wu"], p["mlp"].get("wg"), p["mlp"]["wd"],
+                          cfg.activation)
+            m = constrain(m, "data", "model", None)
+        if cfg.post_norms:
+            m = rms_norm(m, p["ln2_post"], cfg.norm_eps, plus_one=True)
+        h = h + m
+        return constrain(h, "data", "model", None), aux
+
+    def forward(self, params, tokens, *, patch_embeds=None):
+        """(B, S) tokens → (B, S, V) logits (+ aux loss)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        h = self._embed_inputs(params, tokens, patch_embeds)
+
+        def body(h, xs):
+            p, window, base = xs
+            fn = self._layer
+            if self.remat == "full":
+                fn = jax.checkpoint(fn, policy=None)
+            elif self.remat == "dots":
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                )
+            h, aux = fn(h, p, window, base, positions)
+            return h, aux
+
+        h, auxes = jax.lax.scan(
+            body, h,
+            (params["layers"], jnp.asarray(self.windows), jnp.asarray(self.rope_bases)),
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps, plus_one=cfg.post_norms)
+        logits = self._unembed(params, h)
+        return logits, jnp.sum(auxes)
+
+    def _unembed(self, params, h):
+        cfg = self.cfg
+        table = params.get("unembed", params["embed"])
+        logits = jnp.einsum("...d,vd->...v", h, table)
+        if cfg.final_logit_softcap:
+            logits = softcap(logits, cfg.final_logit_softcap)
+        return logits
+
+    # --------------------------------------------------------------- loss
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        logits, aux = self.forward(
+            params, batch["tokens"], patch_embeds=batch.get("patch_embeds")
+        )
+        targets = batch["targets"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(targets, jnp.float32)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll) / denom
+        total = ce + cfg.router_aux_coef * aux
+        return total, {"ce": ce, "aux": aux, "tokens": denom}
+
+    # ------------------------------------------------------------ serving
+
+    def init_decode_state(self, batch_size: int, max_seq: int,
+                          dtype=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+        return {
+            "cache_k": jnp.zeros((L, batch_size, max_seq, K, hd), dtype),
+            "cache_v": jnp.zeros((L, batch_size, max_seq, K, hd), dtype),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def prefill(self, params, tokens, *, max_seq: Optional[int] = None,
+                patch_embeds=None):
+        """Run the prompt, return (decode_state, logits at last position)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        max_seq = max_seq or S
+        positions = jnp.arange(S)
+        h = self._embed_inputs(params, tokens, patch_embeds)
+
+        def body(h, xs):
+            p, window, base = xs
+            a = rms_norm(h, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norms)
+            a, (k, v) = attention_block(
+                a, p["attn"], cfg, window=window, rope_base=base,
+                positions=positions, impl=self.impl, return_kv=True,
+            )
+            if cfg.post_norms:
+                a = rms_norm(a, p["ln1_post"], cfg.norm_eps, plus_one=True)
+            h = h + a
+            m = rms_norm(h, p["ln2"], cfg.norm_eps, plus_one=cfg.post_norms)
+            if cfg.is_moe:
+                m, _ = moe_block(m, p["moe"], cfg)
+            else:
+                m = gated_mlp(m, p["mlp"]["wu"], p["mlp"].get("wg"), p["mlp"]["wd"],
+                              cfg.activation)
+            if cfg.post_norms:
+                m = rms_norm(m, p["ln2_post"], cfg.norm_eps, plus_one=True)
+            h = constrain(h + m, "data", "model", None)
+            if max_seq > S:
+                pad = [(0, 0), (0, max_seq - S), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            spec = ("data", None, "model", None) if self.decode_layout == "heads" \
+                else ("data", "model", None, None)
+            return h, (constrain(k, *spec), constrain(v, *spec))
+
+        h, (cache_k, cache_v) = jax.lax.scan(
+            body, h,
+            (params["layers"], jnp.asarray(self.windows), jnp.asarray(self.rope_bases)),
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps, plus_one=cfg.post_norms)
+        logits = self._unembed(params, h[:, -1])
+        state = {
+            "cache_k": cache_k,
+            "cache_v": cache_v,
+            "pos": jnp.full((B,), S, jnp.int32),
+        }
+        return state, logits
+
+    def decode_step(self, params, state, tokens):
+        """tokens: (B,) — one new token per sequence."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        pos = state["pos"]
+        h = take_embedding(params["embed"], tokens)
+        if cfg.embed_scale:
+            h = (h.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(h.dtype)
+        h = constrain(h, "data", None)
+        b_idx = jnp.arange(B)
+
+        # §Perf-C2: the cache stack rides the scan CARRY and is updated by
+        # a token-sized in-place scatter — carrying it as scan xs/ys made
+        # XLA round-trip the full stack (convert→DUS→convert) every layer.
+        def body(carry, xs):
+            h, ck_stack, cv_stack, l = carry
+            p, window, base = xs
+            a = rms_norm(h, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norms)
+            q = jnp.einsum("bd,dhk->bhk", a, p["attn"]["wq"])
+            k = jnp.einsum("bd,dhk->bhk", a, p["attn"]["wk"])
+            v = jnp.einsum("bd,dhk->bhk", a, p["attn"]["wv"])
+            if cfg.qkv_bias:
+                q, k, v = q + p["attn"]["bq"], k + p["attn"]["bk"], v + p["attn"]["bv"]
+            if cfg.qk_norm:
+                q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+            q = rope(q[:, None], pos[:, None], base)[:, 0] if base is not None else q
+            k = rope(k[:, None], pos[:, None], base)[:, 0] if base is not None else k
+            # slice the layer cache, insert the token, write the layer
+            # back — bounded to ~3 layer-cache sweeps per layer and XLA
+            # can alias the stack carry (a mixed-dynamic scatter into the
+            # stack forced full-stack copies instead)
+            ck = jax.lax.dynamic_index_in_dim(ck_stack, l, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_stack, l, 0, keepdims=False)
+            ck = ck.at[b_idx, pos].set(k.astype(ck.dtype))
+            cv = cv.at[b_idx, pos].set(v.astype(cv.dtype))
+            spec = ("data", None, "model", None) if self.decode_layout == "heads" \
+                else ("data", "model", None, None)
+            ck, cv = constrain(ck, *spec), constrain(cv, *spec)
+            ck_stack = jax.lax.dynamic_update_slice_in_dim(
+                ck_stack, ck[None], l, 0)
+            cv_stack = jax.lax.dynamic_update_slice_in_dim(
+                cv_stack, cv[None], l, 0)
+            o = decode_attn(q, ck, cv, pos, cfg, window=window,
+                            layout=self.decode_layout)
+            o = o.astype(h.dtype) @ p["attn"]["wo"]
+            if cfg.post_norms:
+                o = rms_norm(o, p["ln1_post"], cfg.norm_eps, plus_one=True)
+            h = h + o
+            m = rms_norm(h, p["ln2"], cfg.norm_eps, plus_one=cfg.post_norms)
+            if cfg.is_moe:
+                m, _ = moe_block(m[:, None], p["moe"], cfg, lossless=True)
+                m = m[:, 0]
+            else:
+                m = gated_mlp(m, p["mlp"]["wu"], p["mlp"].get("wg"), p["mlp"]["wd"],
+                              cfg.activation)
+            if cfg.post_norms:
+                m = rms_norm(m, p["ln2_post"], cfg.norm_eps, plus_one=True)
+            return (h + m, ck_stack, cv_stack, l + 1), None
+
+        (h, cache_k, cache_v, _), _ = jax.lax.scan(
+            body,
+            (h, state["cache_k"], state["cache_v"], jnp.asarray(0, jnp.int32)),
+            (params["layers"], jnp.asarray(self.windows),
+             jnp.asarray(self.rope_bases)),
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps, plus_one=cfg.post_norms)
+        logits = self._unembed(params, h)
+        new_state = {"cache_k": cache_k, "cache_v": cache_v, "pos": pos + 1}
+        return new_state, logits

@@ -1,0 +1,91 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+Moments are fp32 regardless of parameter dtype (bf16 params update through
+an fp32 delta — the standard mixed-precision recipe without a separate
+master copy; see DESIGN.md).  All functions are pure pytree maps, so
+optimizer state inherits the parameter sharding rules.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    #: leaves whose path contains any of these substrings skip weight decay
+    no_decay: Tuple[str, ...] = ("norm", "bias", "ln", "b_", "/u", "scale")
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def _decay_mask(params, no_decay: Tuple[str, ...]):
+    def visit(path, leaf):
+        name = jax.tree_util.keystr(path).lower()
+        return not any(tok in name for tok in no_decay) and leaf.ndim >= 2
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def adamw_update(
+    grads, opt_state, params, lr, cfg: AdamWConfig = AdamWConfig()
+):
+    """Returns (new_params, new_opt_state, gnorm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    decay_mask = _decay_mask(params, cfg.no_decay)
+
+    def upd(g, m, v, p, wd_on):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if wd_on:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["mu"])
+    flat_v = treedef.flatten_up_to(opt_state["nu"])
+    flat_mask = treedef.flatten_up_to(decay_mask)
+    out = [upd(g, m, v, p, wd) for g, m, v, p, wd in
+           zip(flat_g, flat_m, flat_v, flat_p, flat_mask)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, gnorm

@@ -1,0 +1,32 @@
+"""Learning-rate schedules (warmup + cosine decay, constant, rsqrt)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+__all__ = ["ScheduleConfig", "lr_at"]
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_ratio: float = 0.1
+    kind: str = "cosine"  # | "constant" | "rsqrt"
+
+
+def lr_at(step, cfg: ScheduleConfig):
+    t = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * jnp.minimum(1.0, (t + 1) / max(cfg.warmup_steps, 1))
+    if cfg.kind == "constant":
+        return warm
+    if cfg.kind == "rsqrt":
+        post = cfg.peak_lr * jnp.sqrt(cfg.warmup_steps / jnp.maximum(t, cfg.warmup_steps))
+        return jnp.where(t < cfg.warmup_steps, warm, post)
+    prog = jnp.clip((t - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_ratio + (1 - cfg.min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(t < cfg.warmup_steps, warm, cfg.peak_lr * cos)

@@ -1,0 +1,24 @@
+from .sharding import (
+    batch_shardings,
+    batch_specs,
+    decode_state_shardings,
+    named,
+    opt_state_shardings,
+    param_shardings,
+    param_spec,
+)
+
+__all__ = [
+    "batch_shardings", "batch_specs", "decode_state_shardings", "named",
+    "opt_state_shardings", "param_shardings", "param_spec",
+]
+
+from .collectives import (  # noqa: E402
+    ErrorFeedback,
+    compressed_grad_tree,
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+)
+__all__ += ["ErrorFeedback", "compressed_grad_tree", "compressed_psum",
+            "dequantize_int8", "quantize_int8"]

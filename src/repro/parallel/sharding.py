@@ -1,0 +1,303 @@
+"""Partition rules: parameter / optimizer / batch / decode-state shardings.
+
+Mesh axes (launch/mesh.py): ``pod`` (pure DP across pods), ``data``
+(batch DP + FSDP parameter sharding), ``model`` (TP for d_ff and q-heads,
+EP for experts, sequence-parallel residual, seq- or head-sharded KV).
+
+Rules are functions of (tree path, leaf rank) rather than a regex table
+because the same suffix appears at different ranks across families
+(e.g. dense ``attn/wq`` is (L, D, H, hd) while whisper's is (L, D, H·hd)).
+
+JAX requires sharded dimensions to divide exactly, so every builder here
+is shape-aware (``fit_spec``): non-dividing dims (36/40/25/56 q-heads,
+51865 vocab over a 16-way ``model`` axis) fall back to replication, and
+the replicated compute is split by other means (seq-q attention sharding,
+hd_v sharding for RWKV).  The residual waste shows up in the roofline
+useful-FLOP ratio and is attacked in §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import fit_spec
+
+__all__ = [
+    "param_spec",
+    "param_shardings",
+    "opt_state_shardings",
+    "batch_specs",
+    "batch_shardings",
+    "decode_state_shardings",
+    "named",
+]
+
+
+def named(mesh: Mesh, spec: P, shape: Optional[Tuple[int, ...]] = None
+          ) -> NamedSharding:
+    """NamedSharding with missing axes dropped and divisibility enforced.
+
+    Without ``shape``, only axis-name filtering happens (use for scalars /
+    always-divisible cases); with ``shape``, ``fit_spec`` guarantees a
+    legal sharding for any architecture (JAX requires exact divisibility).
+    """
+    if shape is not None:
+        return NamedSharding(mesh, fit_spec(mesh, spec, shape))
+    axes = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in axes)
+            return kept if kept else None
+        return entry if entry in axes else None
+
+    return NamedSharding(mesh, P(*(keep(e) for e in spec)))
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def param_spec(path: str, ndim: int, *, heads_divisible: bool = True
+               ) -> P:  # noqa: C901 (rule table)
+    """PartitionSpec for one parameter leaf.
+
+    ``path`` is the slash-joined tree path; stacked layer leaves have a
+    leading L dimension (never sharded — it is the scan axis).
+
+    ``heads_divisible=False`` (§Perf-B5): the arch's q-heads don't divide
+    the model axis, so attention runs sequence-parallel — ``wo``'s input
+    dim must NOT be model-sharded (a model-sharded contraction there
+    forces a (B,S,D) all-reduce every layer).
+    """
+    def stacked(*tail):
+        # leaf may or may not carry the leading (L,) scan dim
+        if ndim == len(tail) + 1:
+            return P(None, *tail)
+        assert ndim == len(tail), (path, ndim, tail)
+        return P(*tail)
+
+    leaf = path.split("/")[-1]
+
+    # ---- embeddings -------------------------------------------------------
+    if leaf in ("embed", "unembed"):
+        return P("model", "data")
+    if leaf == "pos_embed":
+        return P(None, "data")
+
+    # ---- attention (dense 4D: (L, D, H, hd); whisper 3D: (L, D, H*hd)) ----
+    if "attn" in path:
+        if leaf == "wq":
+            return stacked("data", "model", None) if ndim >= 4 else \
+                stacked("data", "model")
+        if leaf in ("wk", "wv"):
+            # kv heads < model axis on every arch: replicate over model,
+            # FSDP-shard the input dim over data.  (whisper: H==K, still
+            # small; same rule.)
+            return stacked("data", None, None) if ndim >= 4 else \
+                stacked("data", None)
+        if leaf == "wo":
+            if not heads_divisible:
+                return stacked(None, "data")
+            return stacked("model", "data")
+        if leaf == "bq":
+            return stacked("model", None) if ndim >= 3 else stacked(None, None)
+        if leaf in ("bk", "bv"):
+            return stacked(None, None)
+        if leaf == "bo":
+            return stacked(None)
+        if leaf in ("q_norm", "k_norm"):
+            return stacked(None)
+
+    # ---- MoE ---------------------------------------------------------------
+    if "moe" in path:
+        if leaf == "router":
+            return stacked(None, None)
+        if leaf in ("wg", "wu"):
+            return stacked("model", None, "data")
+        if leaf == "wd":
+            return stacked("model", "data", None)
+        if leaf in ("swg", "swu"):
+            return stacked("data", "model")
+        if leaf == "swd":
+            return stacked("model", "data")
+
+    # ---- dense / shared MLP -------------------------------------------------
+    if "mlp" in path:
+        if leaf in ("wg", "wu", "w1", "wck"):
+            return stacked("data", "model")
+        if leaf in ("wd", "w2", "wcv"):
+            return stacked("model", "data")
+        if leaf in ("b1",):
+            return stacked("model")
+        if leaf in ("b2",):
+            return stacked(None)
+
+    # ---- RWKV time/channel mix ----------------------------------------------
+    if leaf in ("wr", "wk", "wv", "wg", "wcr") and ndim == 3:
+        return stacked("data", "model")
+    if leaf == "wo" and ndim == 3:
+        return stacked("model", "data")
+    if leaf in ("wck",):
+        return stacked("data", "model")
+    if leaf in ("wcv",):
+        return stacked("model", "data")
+    if leaf == "tm_w1":
+        return stacked("data", None)
+    if leaf == "tm_w2":
+        return stacked(None, None, "data")
+    if leaf == "dw1":
+        return stacked("data", None)
+    if leaf == "dw2":
+        return stacked(None, "data")
+    if leaf == "u" and ndim == 3:
+        return stacked("model", None)
+    if leaf == "mu_rkvwg":
+        return stacked(None, None)
+
+    # ---- hybrid SSM ----------------------------------------------------------
+    if "ssm" in path:
+        if leaf == "w_in":
+            return stacked("data", "model")
+        if leaf == "w_dt":
+            return stacked("data", "model")
+        if leaf in ("w_B", "w_C"):
+            return stacked("model", None)
+        if leaf == "A_log":
+            return stacked("model", None)
+        if leaf in ("D_skip", "dt_bias"):
+            return stacked("model")
+        if leaf == "w_out":
+            return stacked("model", "data")
+
+    # ---- everything else (norms, scalars, small vectors): replicated --------
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+    )
+
+
+def param_shardings(params_shape, mesh: Mesh, *, mode: str = "train",
+                    heads_divisible: bool = True):
+    """Map a params (shape-)tree to NamedShardings.
+
+    ``mode="serve"`` (§Perf-C1): drop the FSDP ``data`` sharding for dense
+    weights — serving has no optimizer state, so dense params fit
+    model-sharded and replicate over ``data``, eliminating the per-token
+    all-gathers a decode step would otherwise pay every layer.  MoE expert
+    weights keep their 2-D sharding (they don't fit otherwise).
+    """
+    model_size = dict(mesh.shape).get("model", 1)
+
+    def visit(path, leaf):
+        p = _path_str(path)
+        spec = param_spec(p, len(leaf.shape),
+                          heads_divisible=heads_divisible)
+        if mode == "serve" and "moe" not in p:
+            fitted = fit_spec(mesh, spec, leaf.shape)
+            ents = list(fitted) + [None] * (len(leaf.shape) - len(fitted))
+            used_model = any(
+                "model" in (e if isinstance(e, tuple) else (e,))
+                for e in ents if e is not None
+            )
+            out = []
+            for dim, e in zip(leaf.shape, ents):
+                names = e if isinstance(e, tuple) else (e,)
+                if e is not None and "data" in names:
+                    # re-home the FSDP shard onto the model axis (compute
+                    # stays local / cheap psum) instead of replicating
+                    if not used_model and dim % model_size == 0:
+                        out.append("model")
+                        used_model = True
+                    else:
+                        out.append(None)
+                else:
+                    out.append(e)
+            return named(mesh, P(*out), leaf.shape)
+        return named(mesh, spec, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(visit, params_shape)
+
+
+def opt_state_shardings(opt_shape, mesh: Mesh, *,
+                        heads_divisible: bool = True):
+    """Adam moments shard exactly like their parameters."""
+    def visit(path, leaf):
+        p = _path_str(path)
+        if p.startswith(("mu/", "nu/")):
+            p = p.split("/", 1)[1]
+        if leaf.shape == ():
+            return named(mesh, P())
+        return named(mesh, param_spec(p, len(leaf.shape),
+                                      heads_divisible=heads_divisible),
+                     leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(visit, opt_shape)
+
+
+# --------------------------------------------------------------------------
+# batches & decode state
+# --------------------------------------------------------------------------
+
+def batch_specs(batch_shape, *, batch_divisible: bool = True) -> Dict[str, P]:
+    """Specs for a train/prefill batch dict (tokens/targets/mask/frames…)."""
+    b_axes: Any = ("pod", "data") if batch_divisible else None
+    specs = {}
+    for key, leaf in batch_shape.items():
+        nd = len(leaf.shape)
+        if key in ("tokens", "targets", "loss_mask"):
+            specs[key] = P(b_axes, "model") if nd == 2 else P(b_axes)
+        elif key in ("frames", "patch_embeds"):
+            specs[key] = P(b_axes, None, None)
+        else:
+            specs[key] = P(*([None] * nd))
+    return specs
+
+
+def batch_shardings(batch_shape, mesh: Mesh, **kw):
+    return {
+        k: named(mesh, s, batch_shape[k].shape)
+        for k, s in batch_specs(batch_shape, **kw).items()
+    }
+
+
+def decode_state_shardings(state_shape, mesh: Mesh, *, layout: str = "seq",
+                           batch_divisible: bool = True):
+    """Shardings for the decode-state dict of any family.
+
+    ``layout="seq"`` (default) shards the KV cache over the sequence axis
+    (flash-decoding style): always divisible, no KV-head padding, partial
+    attention merged by the sharded softmax.  ``layout="heads"`` is only
+    legal when kv_heads divides the model axis.
+    """
+    b_axes: Any = ("pod", "data") if batch_divisible else None
+
+    def visit(path, leaf):
+        key = _path_str(path)
+        nd = len(leaf.shape)
+        shp = leaf.shape
+        if key.startswith(("cache_k", "cache_v")):
+            if layout == "seq":
+                return named(mesh, P(None, b_axes, "model", None, None), shp)
+            return named(mesh, P(None, b_axes, None, "model", None), shp)
+        if key.startswith(("xk", "xv")):           # whisper cross-attn K/V
+            return named(mesh, P(None, b_axes, None, "model", None), shp)
+        if key.startswith("wkv"):                   # rwkv (L,B,H,hd,hd_v)
+            return named(mesh, P(None, b_axes, None, None, "model"), shp)
+        if key.startswith("ssm_h"):                 # hymba (L,B,di,N)
+            return named(mesh, P(None, b_axes, "model", None), shp)
+        if key.startswith(("tm_prev", "cm_prev")):  # rwkv shifts (L,B,D)
+            return named(mesh, P(None, b_axes, None), shp)
+        if key.startswith("pos"):
+            return named(mesh, P(b_axes), shp)
+        return named(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(visit, state_shape)

@@ -1,0 +1,9 @@
+from .elastic import ElasticController, plan_mesh
+from .fault import (FailureInjector, HeartbeatMonitor, StragglerDetector,
+                    WorkerFailure)
+from .serve_loop import Request, Server, ServerConfig
+from .train_loop import Trainer, TrainerConfig
+
+__all__ = ["ElasticController", "FailureInjector", "HeartbeatMonitor",
+           "Request", "Server", "ServerConfig", "StragglerDetector",
+           "Trainer", "TrainerConfig", "WorkerFailure", "plan_mesh"]

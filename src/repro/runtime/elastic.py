@@ -1,0 +1,81 @@
+"""Elastic scaling: recompute the mesh when the healthy device set changes.
+
+On failure (or scale-up) the controller picks the best legal mesh from the
+surviving chips, re-jits the step with the new shardings, and restores the
+latest checkpoint resharded onto it (CheckpointManager.restore handles the
+device_put).  Mesh choice: keep the ``model`` axis (TP degree is a model
+property — it must divide d_ff etc.), shrink ``data``/``pod`` — exactly
+how a production job degrades when it loses a slice.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+
+__all__ = ["plan_mesh", "ElasticController"]
+
+
+def plan_mesh(num_devices: int, *, model: int = 16,
+              prefer_pods: int = 1) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest (pod, data, model) grid that fits ``num_devices``.
+
+    ``model`` is held fixed; data is the largest power-of-two-ish divisor
+    that fits.  Returns (shape, axis_names) for ``jax.make_mesh``.
+    """
+    if num_devices < model:
+        # degrade TP too (last resort): largest divisor of model that fits
+        m = model
+        while m > 1 and m > num_devices:
+            m //= 2
+        model = max(m, 1)
+    data = max(num_devices // model, 1)
+    pods = 1
+    if prefer_pods > 1 and data % prefer_pods == 0 and data // prefer_pods >= 1:
+        pods = prefer_pods
+        data //= pods
+    if pods > 1:
+        return (pods, data, model), ("pod", "data", "model")
+    return (data, model), ("data", "model")
+
+
+@dataclass
+class ElasticEvent:
+    step: int
+    reason: str
+    old_devices: int
+    new_devices: int
+    new_shape: Tuple[int, ...]
+
+
+class ElasticController:
+    """Tracks the healthy device pool and re-plans the mesh on change."""
+
+    def __init__(self, total_devices: int, *, model_axis: int = 16):
+        self.healthy = total_devices
+        self.model_axis = model_axis
+        self.events: List[ElasticEvent] = []
+
+    def lose(self, n: int, *, step: int, reason: str = "failure"):
+        old = self.healthy
+        self.healthy = max(self.healthy - n, self.model_axis)
+        shape, axes = plan_mesh(self.healthy, model=self.model_axis)
+        self.healthy = 1
+        for s in shape:
+            self.healthy *= s
+        ev = ElasticEvent(step, reason, old, self.healthy, shape)
+        self.events.append(ev)
+        return shape, axes, ev
+
+    def gain(self, n: int, *, step: int, reason: str = "scale-up"):
+        old = self.healthy
+        self.healthy += n
+        shape, axes = plan_mesh(self.healthy, model=self.model_axis)
+        self.healthy = 1
+        for s in shape:
+            self.healthy *= s
+        ev = ElasticEvent(step, reason, old, self.healthy, shape)
+        self.events.append(ev)
+        return shape, axes, ev

@@ -1,0 +1,122 @@
+"""Fault tolerance: heartbeats, failure injection, straggler detection.
+
+The control plane a 1000+ node job needs, modeled at the host level so it
+is unit-testable without hardware:
+
+* :class:`HeartbeatMonitor` — per-worker liveness with a miss threshold;
+  the trainer polls ``dead_workers()`` each step and triggers the
+  restart-from-checkpoint path when nonempty.
+* :class:`StragglerDetector` — robust (median/MAD) per-worker step-time
+  z-scores; persistent outliers are flagged for eviction *before* they
+  become failures — the mitigation is re-meshing without them (elastic.py)
+  rather than waiting on a 10x-slow host every step.
+* :class:`FailureInjector` — deterministic chaos hooks for tests and the
+  fault-tolerance example.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+__all__ = ["HeartbeatMonitor", "StragglerDetector", "FailureInjector",
+           "WorkerFailure"]
+
+
+class WorkerFailure(RuntimeError):
+    def __init__(self, workers: List[str]):
+        self.workers = workers
+        super().__init__(f"workers failed: {workers}")
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: List[str], *, timeout_s: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self._last: Dict[str, float] = {w: clock() for w in workers}
+        self._lock = threading.Lock()
+
+    def beat(self, worker: str) -> None:
+        with self._lock:
+            self._last[worker] = self.clock()
+
+    def dead_workers(self) -> List[str]:
+        now = self.clock()
+        with self._lock:
+            return sorted(
+                w for w, t in self._last.items() if now - t > self.timeout_s
+            )
+
+    def remove(self, worker: str) -> None:
+        with self._lock:
+            self._last.pop(worker, None)
+
+    def workers(self) -> List[str]:
+        with self._lock:
+            return sorted(self._last)
+
+
+class StragglerDetector:
+    """Median/MAD z-score over a sliding window of per-worker step times."""
+
+    def __init__(self, *, window: int = 32, z_threshold: float = 4.0,
+                 min_steps: int = 8, patience: int = 3):
+        self.window = window
+        self.z_threshold = z_threshold
+        self.min_steps = min_steps
+        self.patience = patience
+        self._times: Dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=window)
+        )
+        self._strikes: Dict[str, int] = defaultdict(int)
+
+    def record(self, worker: str, step_time_s: float) -> None:
+        self._times[worker].append(step_time_s)
+
+    def _medians(self) -> Dict[str, float]:
+        return {
+            w: sorted(ts)[len(ts) // 2] for w, ts in self._times.items() if ts
+        }
+
+    def stragglers(self) -> List[str]:
+        meds = self._medians()
+        if len(meds) < 2:
+            return []
+        vals = sorted(meds.values())
+        global_med = vals[len(vals) // 2]
+        mad = sorted(abs(v - global_med) for v in vals)[len(vals) // 2]
+        scale = max(mad * 1.4826, global_med * 0.01, 1e-9)
+        out = []
+        for w, v in meds.items():
+            if len(self._times[w]) < self.min_steps:
+                continue
+            z = (v - global_med) / scale
+            if z > self.z_threshold:
+                self._strikes[w] += 1
+            else:
+                self._strikes[w] = 0
+            if self._strikes[w] >= self.patience:
+                out.append(w)
+        return sorted(out)
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic chaos: fail worker W at step N, or slow it down."""
+
+    fail_at: Dict[int, List[str]] = field(default_factory=dict)
+    slow_at: Dict[str, float] = field(default_factory=dict)  # worker→factor
+    killed: Set[str] = field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        victims = [w for w in self.fail_at.get(step, []) if w not in self.killed]
+        if victims:
+            self.killed.update(victims)
+            raise WorkerFailure(victims)
+
+    def step_time(self, worker: str, base_s: float) -> float:
+        return base_s * self.slow_at.get(worker, 1.0)

@@ -1,0 +1,152 @@
+"""Serving loop: continuous batching over the SEE++ paged KV arena.
+
+Requests enter a queue; the engine admits up to ``max_batch`` sequences,
+prefills them, then decodes in lockstep, retiring finished sequences and
+admitting new ones into freed slots (continuous batching).  Every
+sequence's KV pages come from :class:`~repro.core.arena.PagedKVAllocator`
+— the paper's memory manager under the modern (direction-aligned)
+MMConfig; ``arena_report`` exposes the fragment counts the §IV.A fix
+controls.  Optional per-request post-processors (user code) run inside
+the Sandbox.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arena import PagedKVAllocator
+from repro.core.mm import MMConfig
+from repro.core.sandbox import Sandbox
+
+__all__ = ["Request", "ServerConfig", "Server"]
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                   # (S,) int32
+    max_new_tokens: int = 16
+    request_id: int = 0
+    postprocess: Optional[Callable] = None
+    # filled by the server:
+    tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    latency_s: float = 0.0
+
+
+@dataclass
+class ServerConfig:
+    max_batch: int = 4
+    max_seq: int = 256
+    tokens_per_page: int = 16
+    greedy: bool = True
+    mm_legacy: bool = False              # paper A/B: legacy vs modern arena
+
+
+class Server:
+    def __init__(self, model, params, cfg: ServerConfig,
+                 sandbox: Optional[Sandbox] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.sandbox = sandbox or Sandbox(tenant="serving")
+        mm_cfg = (MMConfig.legacy if cfg.mm_legacy else MMConfig.modern)(
+            granule=4096
+        )
+        token_bytes = (
+            2 * model.cfg.num_kv_heads * model.cfg.hd * 2
+        )  # K+V bf16
+        seq_pages = -(-cfg.max_seq // cfg.tokens_per_page)
+        self.kv = PagedKVAllocator(
+            mm_cfg, tokens_per_page=cfg.tokens_per_page,
+            token_bytes=max(token_bytes, 1),
+            max_seq_pages=seq_pages,
+            pool_pages=4 * cfg.max_batch * seq_pages,
+        )
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.completed: List[Request] = []
+
+    # ------------------------------------------------------------- engine
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Process all requests to completion with continuous batching."""
+        queue = list(requests)
+        active: List[Request] = []
+        B = self.cfg.max_batch
+        state = None
+        t_start = time.perf_counter()
+
+        while queue or active:
+            # admit
+            while queue and len(active) < B:
+                r = queue.pop(0)
+                self.kv.add_sequence(f"req{r.request_id}")
+                self.kv.append_tokens(f"req{r.request_id}", len(r.prompt))
+                active.append(r)
+                state = None                       # re-prefill batch
+
+            if state is None:
+                state = self._prefill_batch(active)
+                # sample arena occupancy while sequences are live (lazy
+                # host-VMA tracking only updates on poll)
+                self.kv.arena.mm.host_vma_count()
+
+            # one decode step for the whole batch
+            last = jnp.asarray(
+                [r.tokens[-1] if r.tokens else int(r.prompt[-1])
+                 for r in self._pad(active)], jnp.int32
+            )
+            state, logits = self._decode(self.params, state, last)
+            next_ids = np.asarray(jnp.argmax(logits, axis=-1))
+
+            retired = False
+            for i, r in enumerate(list(active)):
+                r.tokens.append(int(next_ids[i]))
+                self.kv.append_tokens(f"req{r.request_id}", 1)
+                if len(r.tokens) >= r.max_new_tokens:
+                    r.done = True
+                    r.latency_s = time.perf_counter() - t_start
+                    if r.postprocess is not None:
+                        out = self.sandbox.run(
+                            r.postprocess, jnp.asarray(r.tokens, jnp.int32)
+                        )
+                        r.tokens = [int(t) for t in np.asarray(out.value)]
+                    self.kv.drop_sequence(f"req{r.request_id}")
+                    active.remove(r)
+                    self.completed.append(r)
+                    retired = True
+            if retired and (queue or active):
+                state = None                       # rebatch after retirement
+        return self.completed
+
+    def _pad(self, active: List[Request]) -> List[Request]:
+        pad = self.cfg.max_batch - len(active)
+        return active + [active[-1]] * pad if pad and active else active
+
+    def _prefill_batch(self, active: List[Request]):
+        B = self.cfg.max_batch
+        S = max(max((len(r.prompt) + len(r.tokens)) for r in active), 1)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(self._pad(active)):
+            seq = list(r.prompt) + r.tokens
+            toks[i, :len(seq)] = seq[:S]
+        state, _ = self.model.prefill(
+            self.params, jnp.asarray(toks), max_seq=self.cfg.max_seq
+        )
+        return state
+
+    # ------------------------------------------------------------- report
+
+    def arena_report(self) -> Dict[str, Any]:
+        return {
+            "total_contiguous_runs": self.kv.total_runs(),
+            "host_vmas": self.kv.arena.mm.host_vma_count(),
+            "host_vma_high_water": self.kv.arena.mm.host_vma_high_water,
+            "mm_stats": self.kv.arena.mm.stats(),
+        }

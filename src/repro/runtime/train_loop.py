@@ -1,0 +1,187 @@
+"""Training driver: jitted step, grad accumulation, checkpoints, faults.
+
+The loop composes every substrate: data pipeline (sandboxed transforms),
+AdamW + schedule, async SELF checkpoints, heartbeat/straggler monitoring
+with restart-from-checkpoint, and optional microbatch gradient
+accumulation (``accum_steps`` > 1 scans over microbatches and applies one
+optimizer update — the standard way to hold global batch while shrinking
+activation memory).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim import (
+    AdamWConfig,
+    ScheduleConfig,
+    adamw_init,
+    adamw_update,
+    lr_at,
+)
+from repro.runtime.fault import (
+    FailureInjector,
+    HeartbeatMonitor,
+    StragglerDetector,
+    WorkerFailure,
+)
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    accum_steps: int = 1
+    log_every: int = 10
+    ckpt_every: int = 50
+    schedule: ScheduleConfig = field(default_factory=ScheduleConfig)
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(
+        self,
+        model,
+        loader,
+        cfg: TrainerConfig,
+        *,
+        ckpt: Optional[CheckpointManager] = None,
+        monitor: Optional[HeartbeatMonitor] = None,
+        stragglers: Optional[StragglerDetector] = None,
+        injector: Optional[FailureInjector] = None,
+        donate: bool = True,
+    ) -> None:
+        self.model = model
+        self.loader = loader
+        self.cfg = cfg
+        self.ckpt = ckpt
+        self.monitor = monitor
+        self.stragglers = stragglers
+        self.injector = injector
+        self.metrics_log: List[Dict[str, float]] = []
+        self.restarts = 0
+        self._step_fn = self._build_step(donate)
+
+    # ------------------------------------------------------------- step fn
+
+    def _build_step(self, donate: bool) -> Callable:
+        cfg = self.cfg
+        model = self.model
+
+        def loss_fn(params, batch):
+            return model.loss(params, batch)
+
+        def single(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+            return loss, metrics, grads
+
+        def step(params, opt_state, batch):
+            if cfg.accum_steps > 1:
+                micro = jax.tree.map(
+                    lambda x: x.reshape(
+                        cfg.accum_steps, x.shape[0] // cfg.accum_steps,
+                        *x.shape[1:]
+                    ),
+                    batch,
+                )
+
+                def body(carry, mb):
+                    acc_grads, acc_loss = carry
+                    loss, metrics, grads = single(params, opt_state, mb)
+                    acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+                    return (acc_grads, acc_loss + loss), metrics
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (grads, loss_sum), metrics = jax.lax.scan(
+                    body, (zero, 0.0), micro
+                )
+                grads = jax.tree.map(lambda g: g / cfg.accum_steps, grads)
+                loss = loss_sum / cfg.accum_steps
+                metrics = jax.tree.map(lambda m: m[-1], metrics)
+            else:
+                loss, metrics, grads = single(params, opt_state, batch)
+
+            lr = lr_at(opt_state["step"], cfg.schedule)
+            params, opt_state, gnorm = adamw_update(
+                grads, opt_state, params, lr, cfg.opt
+            )
+            metrics = dict(metrics)
+            metrics.update(loss=loss, gnorm=gnorm, lr=lr)
+            return params, opt_state, metrics
+
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    # ---------------------------------------------------------------- run
+
+    def init_state(self, rng):
+        params = self.model.init(rng)
+        return params, adamw_init(params)
+
+    def run(self, params, opt_state, *, start_step: int = 0):
+        step = start_step
+        it = iter(self.loader)
+        while step < self.cfg.total_steps:
+            t0 = time.perf_counter()
+            try:
+                if self.injector is not None:
+                    self.injector.check(step)
+                batch = next(it)
+                jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt_state, metrics = self._step_fn(
+                    params, opt_state, jbatch
+                )
+                if self.monitor is not None:
+                    for w in self.monitor.workers():
+                        self.monitor.beat(w)
+            except WorkerFailure as e:
+                params, opt_state, step = self._recover(e, params, opt_state)
+                continue
+            dt = time.perf_counter() - t0
+            if self.stragglers is not None:
+                self.stragglers.record("host0", dt)
+            if step % self.cfg.log_every == 0 or step == self.cfg.total_steps - 1:
+                row = {k: float(v) for k, v in metrics.items()}
+                row.update(step=step, secs=dt)
+                self.metrics_log.append(row)
+            if self.ckpt is not None and step and step % self.cfg.ckpt_every == 0:
+                self.ckpt.save(step, {"params": params, "opt": opt_state})
+            step += 1
+        if self.ckpt is not None:
+            self.ckpt.save(step, {"params": params, "opt": opt_state},
+                           blocking=True)
+        return params, opt_state
+
+    # ------------------------------------------------------------ recovery
+
+    def _recover(self, failure: WorkerFailure, params, opt_state):
+        """Restart-from-checkpoint after a worker failure."""
+        self.restarts += 1
+        if self.monitor is not None:
+            for w in failure.workers:
+                self.monitor.remove(w)
+        if self.ckpt is None:
+            raise failure
+        self.ckpt.wait()
+        restored = self.ckpt.restore_latest(
+            {"params": params, "opt": opt_state}
+        )
+        if restored is None:
+            # failure before the first checkpoint: restart from scratch
+            # (what a production job does on step-0 loss), deterministic
+            # because data is step-keyed.
+            fresh_p, fresh_o = self.init_state(jax.random.PRNGKey(0))
+            return fresh_p, fresh_o, 0
+        step, tree, manifest = restored
+        return tree["params"], tree["opt"], int(manifest["step"])

@@ -1,0 +1,105 @@
+"""SELF checkpoints: roundtrip, paper-bug repro, manager lifecycle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_tree, save_tree
+from repro.core.gofer import Gofer
+from repro.core.loader import SegfaultError
+
+
+def _tree(rng):
+    return {
+        "w": rng.standard_normal((33, 70)).astype(np.float32),   # odd last dim
+        "b": {"x": rng.standard_normal((5,)).astype(np.float32),
+              "y": np.arange(12, dtype=np.int32).reshape(3, 4)},
+        "scalar": np.float32(3.5),
+    }
+
+
+def test_roundtrip_exact(rng):
+    tree = _tree(rng)
+    blob = save_tree(tree, step=7, extra={"note": "hi"})
+    out, manifest = load_tree(blob, tree)
+    assert manifest["step"] == 7 and manifest["extra"]["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_bfloat16_roundtrip(rng):
+    tree = {"p": jnp.asarray(rng.standard_normal((17, 130)), jnp.bfloat16)}
+    out, _ = load_tree(save_tree(tree), tree)
+    assert jnp.array_equal(out["p"], tree["p"])
+
+
+def test_legacy_semantics_segfault(rng):
+    blob = save_tree(_tree(rng))
+    with pytest.raises(SegfaultError):
+        load_tree(blob, semantics="legacy")
+
+
+def test_memsz_padding_present(rng):
+    """Tensor segments must be lane-padded in memory (memsz > filesz)."""
+    from repro.core.elf import read_self
+
+    blob = save_tree({"w": rng.standard_normal((8, 70)).astype(np.float32)})
+    img = read_self(blob)
+    seg = img.phdrs[0]
+    assert seg.p_memsz == 8 * 128 * 4 > seg.p_filesz == 8 * 70 * 4
+
+
+def test_shape_mismatch_rejected(rng):
+    tree = _tree(rng)
+    blob = save_tree(tree)
+    wrong = dict(tree, w=np.zeros((10, 10), np.float32))
+    with pytest.raises(ValueError):
+        load_tree(blob, wrong)
+
+
+def test_manager_lifecycle(tmp_path, rng):
+    g = Gofer.for_root("ckpt", tmp_path, write=True)
+    mgr = CheckpointManager(g, keep=2, keep_every=20)
+    tree = _tree(rng)
+    for step in (10, 20, 30, 40):
+        mgr.save(step, tree, blocking=True)
+    assert mgr.all_steps() == [20, 30, 40]       # keep=2 + keep_every 20
+    assert mgr.latest_step() == 40
+    step, out, manifest = mgr.restore_latest(tree)
+    assert step == 40
+    np.testing.assert_array_equal(out["w"], tree["w"])
+
+
+def test_manager_async_save(tmp_path, rng):
+    g = Gofer.for_root("ckpt", tmp_path, write=True)
+    mgr = CheckpointManager(g)
+    mgr.save(5, _tree(rng))
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    assert mgr.save_log and mgr.save_log[0]["bytes"] > 0
+
+
+def test_restore_onto_mesh(tmp_path, rng):
+    """Resharding restore: device_put with explicit shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    g = Gofer.for_root("ckpt", tmp_path, write=True)
+    mgr = CheckpointManager(g)
+    tree = {"w": rng.standard_normal((16, 8)).astype(np.float32)}
+    mgr.save(1, tree, blocking=True)
+    mesh = jax.make_mesh((1,), ("data",))
+    shard = {"w": NamedSharding(mesh, P("data", None))}
+    step, out, _ = mgr.restore_latest(tree, shardings=shard)
+    assert out["w"].sharding == shard["w"]
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+
+
+def test_gofer_capability_enforced(tmp_path):
+    from repro.core.gofer import CapabilityError
+
+    g = Gofer.for_root("ckpt", tmp_path, write=False)
+    with pytest.raises(CapabilityError):
+        g.write_bytes("ckpt", "x.bin", b"data")
+    with pytest.raises(CapabilityError):
+        g.read_bytes("ckpt", "../../etc/passwd")

@@ -1,0 +1,134 @@
+"""Data pipeline determinism/sharding + optimizer behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ModernEmulationPolicy, Sandbox, SandboxViolation
+from repro.data import DataConfig, Loader, SyntheticLM
+from repro.optim import (AdamWConfig, ScheduleConfig, adamw_init,
+                         adamw_update, clip_by_global_norm, lr_at)
+
+
+def test_synthetic_deterministic():
+    cfg = DataConfig(global_batch=4, seq_len=16, vocab_size=100)
+    a = SyntheticLM(cfg).batch_at(3)
+    b = SyntheticLM(cfg).batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).batch_at(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_host_sharding_disjoint():
+    kw = dict(global_batch=8, seq_len=16, vocab_size=1000, num_hosts=2)
+    h0 = SyntheticLM(DataConfig(host_index=0, **kw)).batch_at(0)
+    h1 = SyntheticLM(DataConfig(host_index=1, **kw)).batch_at(0)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_loader_prefetch_order():
+    cfg = DataConfig(global_batch=2, seq_len=8, vocab_size=50)
+    loader = Loader(SyntheticLM(cfg), cfg)
+    it = iter(loader)
+    batches = [next(it) for _ in range(3)]
+    loader.stop()
+    ref = [SyntheticLM(cfg).batch_at(i) for i in range(3)]
+    for got, want in zip(batches, ref):
+        np.testing.assert_array_equal(got["tokens"], want["tokens"])
+
+
+def test_sandboxed_transform():
+    cfg = DataConfig(global_batch=2, seq_len=8, vocab_size=50)
+
+    def mask_evens(batch):
+        lm = batch["loss_mask"] * (batch["targets"] % 2).astype(jnp.float32)
+        return dict(batch, loss_mask=lm)
+
+    loader = Loader(SyntheticLM(cfg), cfg).with_transform(
+        mask_evens, Sandbox(policy=ModernEmulationPolicy()))
+    it = iter(loader)
+    batch = next(it)
+    loader.stop()
+    assert set(np.unique(batch["loss_mask"])) <= {0.0, 1.0}
+    assert (batch["loss_mask"] == (batch["targets"] % 2)).all()
+
+
+def test_transform_admission_denied():
+    cfg = DataConfig(global_batch=2, seq_len=8, vocab_size=50)
+
+    def evil(batch):
+        t = batch["tokens"]
+        return dict(batch, tokens=jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(t.shape, t.dtype), t))
+
+    with pytest.raises(SandboxViolation):
+        Loader(SyntheticLM(cfg), cfg).with_transform(
+            evil, Sandbox(policy=ModernEmulationPolicy()))
+
+
+def test_adamw_converges_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.0)
+    for _ in range(300):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = adamw_update(grads, state, params, 0.05, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, gnorm = clip_by_global_norm(g, 1.0)
+    assert abs(float(gnorm) - 20.0) < 1e-4
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+
+
+def test_decay_mask_skips_norms():
+    params = {"layers": {"ln1": jnp.ones(4), "mlp": {"wd": jnp.ones((4, 4))}}}
+    state = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=1.0)
+    zero_grads = jax.tree.map(jnp.zeros_like, params)
+    new, state, _ = adamw_update(zero_grads, state, params, 0.1, cfg)
+    np.testing.assert_array_equal(new["layers"]["ln1"], params["layers"]["ln1"])
+    assert (np.asarray(new["layers"]["mlp"]["wd"]) < 1.0).all()
+
+
+def test_schedule_shapes():
+    cfg = ScheduleConfig(peak_lr=1.0, warmup_steps=10, decay_steps=100,
+                         min_ratio=0.1)
+    assert float(lr_at(0, cfg)) < 0.2
+    assert abs(float(lr_at(10, cfg)) - 1.0) < 1e-6
+    assert abs(float(lr_at(100, cfg)) - 0.1) < 1e-2
+    assert float(lr_at(50, cfg)) > float(lr_at(90, cfg))
+
+
+def test_byte_tokenizer_roundtrip():
+    from repro.data import ByteTokenizer
+
+    tok = ByteTokenizer()
+    text = "SEE++ sandbox: gVisor→TPU 🤖"
+    ids = tok.encode(text, bos=True, eos=True)
+    assert ids[0] == tok.bos_id and ids[-1] == tok.eos_id
+    assert tok.decode(ids) == text
+    batch = tok.pad_batch([ids, ids[:5]], 12)
+    assert batch.shape == (2, 12)
+    assert (batch[1, 5:] == tok.pad_id).all()
+
+
+def test_file_backed_corpus(tmp_path):
+    from repro.core.gofer import Gofer
+    from repro.data import ByteTokenizer, DataConfig, FileBackedLM
+
+    tok = ByteTokenizer()
+    corpus = tok.encode("the quick brown fox " * 200, bos=False)
+    g = Gofer.for_root("data", tmp_path, write=True)
+    g.write_bytes("data", "corpus.bin", corpus.astype(np.uint16).tobytes())
+    cfg = DataConfig(global_batch=4, seq_len=32, vocab_size=tok.vocab_size)
+    ds = FileBackedLM(cfg, g, "data", "corpus.bin")
+    b = ds.batch_at(0)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["targets"][:, :-1], b["tokens"][:, 1:])
+    b2 = ds.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])  # deterministic

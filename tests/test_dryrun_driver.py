@@ -1,0 +1,50 @@
+"""The headline deliverable, under test: one full-size dry-run cell runs
+end-to-end in a subprocess (512 forced host devices, lower + compile +
+roofline JSON) — guards the launcher against regressions."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+
+@pytest.mark.parametrize("mesh_flag,mesh_name", [([], "16x16")])
+def test_dryrun_cell_subprocess(tmp_path, mesh_flag, mesh_name):
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", "whisper-tiny", "--shape", "decode_32k",
+        "--out", str(tmp_path), *mesh_flag,
+    ]
+    proc = subprocess.run(
+        cmd, capture_output=True, text=True, timeout=420,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd=Path(__file__).resolve().parent.parent,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = tmp_path / f"whisper-tiny__decode_32k__{mesh_name}.json"
+    assert out.exists(), proc.stdout
+    d = json.loads(out.read_text())
+    assert d["ok"] and d["chips"] == 256
+    r = d["roofline"]
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert r["step_s_lower_bound"] > 0
+    assert d["hlo_flops_per_chip"] > 0
+    assert "all-gather" in d["collectives"] or "all-reduce" in d["collectives"]
+
+
+def test_dryrun_skips_ineligible_cell(tmp_path):
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", "qwen2.5-32b", "--shape", "long_500k",
+        "--out", str(tmp_path),
+    ]
+    proc = subprocess.run(
+        cmd, capture_output=True, text=True, timeout=120,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd=Path(__file__).resolve().parent.parent,
+    )
+    assert proc.returncode == 0
+    assert "n/a" in proc.stdout
+    assert not list(tmp_path.glob("*.json"))

@@ -1,0 +1,65 @@
+"""Fault-tolerance control plane + elastic re-meshing."""
+
+import pytest
+
+from repro.runtime.elastic import ElasticController, plan_mesh
+from repro.runtime.fault import (FailureInjector, HeartbeatMonitor,
+                                 StragglerDetector, WorkerFailure)
+
+
+def test_heartbeat_detects_death():
+    t = [0.0]
+    mon = HeartbeatMonitor(["a", "b"], timeout_s=5.0, clock=lambda: t[0])
+    t[0] = 3.0
+    mon.beat("a")
+    t[0] = 7.0
+    assert mon.dead_workers() == ["b"]
+    mon.beat("b")
+    assert mon.dead_workers() == []
+
+
+def test_straggler_detection():
+    det = StragglerDetector(window=16, z_threshold=3.0, min_steps=8,
+                            patience=2)
+    flagged = []
+    for step in range(20):
+        for w in ("w0", "w1", "w2", "w3"):
+            det.record(w, 1.0 if w != "w3" else 4.0)
+        flagged = det.stragglers()
+    assert flagged == ["w3"]
+
+
+def test_straggler_needs_persistence():
+    det = StragglerDetector(window=16, z_threshold=3.0, min_steps=4,
+                            patience=3)
+    for step in range(8):
+        for w in ("w0", "w1", "w2"):
+            # one transient slow step must NOT flag
+            det.record(w, 4.0 if (w == "w1" and step == 3) else 1.0)
+    assert det.stragglers() == []
+
+
+def test_injector_fires_once():
+    inj = FailureInjector(fail_at={5: ["w1"]})
+    inj.check(4)
+    with pytest.raises(WorkerFailure):
+        inj.check(5)
+    inj.check(5)   # already killed: no refire
+
+
+def test_plan_mesh_keeps_model_axis():
+    assert plan_mesh(256, model=16) == ((16, 16), ("data", "model"))
+    assert plan_mesh(240, model=16) == ((15, 16), ("data", "model"))
+    assert plan_mesh(512, model=16, prefer_pods=2) == \
+        ((2, 16, 16), ("pod", "data", "model"))
+    shape, axes = plan_mesh(8, model=16)     # degrade TP as last resort
+    assert shape[-1] <= 8
+
+
+def test_elastic_controller_events():
+    ec = ElasticController(512, model_axis=16)
+    shape, axes, ev = ec.lose(32, step=100, reason="pod slice down")
+    assert ev.old_devices == 512 and ec.healthy == 480
+    assert shape == (30, 16)
+    shape, axes, ev = ec.gain(32, step=200)
+    assert ec.healthy == 512

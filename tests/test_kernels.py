@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.segment_zero.ops import segment_zero
+from repro.kernels.segment_zero.ref import segment_zero_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,K,G,hd", [
+    (1, 256, 1, 1, 64),
+    (2, 512, 2, 2, 64),
+    (1, 256, 2, 4, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,cap,causal", [
+    (0, 0.0, True), (128, 50.0, True), (0, 0.0, False),
+])
+def test_flash_attention_sweep(B, S, K, G, hd, dtype, window, cap, causal):
+    q = jnp.asarray(RNG.standard_normal((B, S, K, G, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, K, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, K, hd)), dtype)
+    out = flash_attention(q, k, v, window=window, scale=hd ** -0.5,
+                          logit_cap=cap, causal=causal, interpret=True)
+    ref = flash_attention_ref(q.reshape(B, S, K * G, hd), k, v, window,
+                              scale=hd ** -0.5, logit_cap=cap, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(B, S, K * G, hd), np.float32),
+        np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,K,G,hd,page,P,MP", [
+    (2, 1, 2, 64, 16, 16, 4),
+    (3, 2, 3, 128, 32, 24, 6),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, K, G, hd, page, P, MP, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, K * G, hd)), dtype)
+    kp = jnp.asarray(RNG.standard_normal((P, page, K, hd)), dtype)
+    vp = jnp.asarray(RNG.standard_normal((P, page, K, hd)), dtype)
+    lens = RNG.integers(1, MP * page, (B,)).astype(np.int32)
+    table = np.full((B, MP), -1, np.int32)
+    pool = list(RNG.permutation(P))
+    for b in range(B):
+        for i in range(-(-int(lens[b]) // page)):
+            table[b, i] = pool.pop()
+    out = paged_attention(q, kp, vp, table, lens, scale=hd ** -0.5,
+                          interpret=True)
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(table),
+                              jnp.asarray(lens), scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,T,H,hd", [(1, 32, 1, 8), (2, 128, 3, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_sweep(B, T, H, hd, dtype):
+    r = jnp.asarray(RNG.standard_normal((B, T, H, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, T, H, hd)), dtype) * 0.3
+    v = jnp.asarray(RNG.standard_normal((B, T, H, hd)), dtype)
+    w = jnp.asarray(
+        jax.nn.sigmoid(jnp.asarray(RNG.standard_normal((B, T, H, hd)))) * 0.6
+        + 0.35, jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, hd)), jnp.float32) * 0.2
+    s0 = jnp.asarray(RNG.standard_normal((B, H, hd, hd)), jnp.float32) * 0.1
+    S_k, y_k = wkv6(r, k, v, w, u, s0, interpret=True)
+    S_r, y_r = wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(S_k), np.asarray(S_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_matches_model_scan():
+    from repro.models.rwkv import wkv6_scan
+
+    B, T, H, hd = 2, 64, 2, 16
+    r = jnp.asarray(RNG.standard_normal((B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, T, H, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, T, H, hd)), jnp.float32)
+    w = jnp.asarray(jax.nn.sigmoid(
+        jnp.asarray(RNG.standard_normal((B, T, H, hd)))) * 0.5 + 0.4)
+    u = jnp.asarray(RNG.standard_normal((H, hd)), jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    S_m, y_m = wkv6_scan(r, k, v, w, u, s0, chunk=16)
+    S_k, y_k = wkv6(r, k, v, w, u, s0, interpret=True)
+    np.testing.assert_allclose(y_m, y_k, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(S_m, S_k, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,lo,hi", [
+    (1000, 100, 900), (1024, 0, 0), (4096, 4000, 4096), (777, 0, 777),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32, jnp.bfloat16])
+def test_segment_zero_sweep(n, lo, hi, dtype):
+    x = jnp.asarray(RNG.standard_normal(n), dtype)
+    out = segment_zero(x, lo, hi, interpret=True)
+    ref = segment_zero_ref(x, lo, hi)
+    assert jnp.array_equal(out, ref)

@@ -1,0 +1,64 @@
+"""Paper §IV.B: SELF loader zeroing semantics."""
+
+import pytest
+
+from repro.core.elf import (
+    PAGE_SIZE, PT_DYNAMIC, SELFWriter, build_prophet_like, read_self,
+)
+from repro.core.loader import ImageLoader, SegfaultError
+
+
+def test_prophet_pathology():
+    blob = build_prophet_like()
+    ok = ImageLoader("linux").load(blob)
+    ok.verify_all()
+    with pytest.raises(SegfaultError):
+        ImageLoader("legacy").load(blob)
+
+
+def test_prescribed_zero_fill():
+    """memsz > filesz: [filesz, memsz) must be zero under both semantics."""
+    w = SELFWriter()
+    data = bytes(range(1, 201))
+    ph = w.add_segment(data, memsz=512)
+    w.add_section("text", 1, ph.p_vaddr, data)
+    blob = w.finish()
+    for semantics in ("linux", "legacy"):
+        img = ImageLoader(semantics).load(blob)
+        assert img.read(ph.p_vaddr, 200) == data
+        assert img.read(ph.p_vaddr + 200, 312) == b"\0" * 312
+
+
+def test_legacy_zeroes_page_extension():
+    w = SELFWriter()
+    data = b"\xff" * 100
+    tail = b"\xab" * 50                      # file bytes beyond the segment
+    ph = w.add_segment(data, memsz=120, tail=b"\0" * 20 + tail)
+    blob = w.finish()
+    linux = ImageLoader("linux").load(blob, verify=False)
+    legacy = ImageLoader("legacy").load(blob, verify=False)
+    # tail bytes live at vaddr+120..170 (inside the page extension)
+    assert linux.read(ph.p_vaddr + 120, 50) == tail
+    assert legacy.read(ph.p_vaddr + 120, 50) == b"\0" * 50
+    # zero-stats bookkeeping
+    assert linux.zero_stats.prescribed == 20
+    assert linux.zero_stats.page_extension == PAGE_SIZE - 120
+
+
+def test_roundtrip_and_checksums():
+    w = SELFWriter()
+    payload = b"hello SELF" * 37
+    ph = w.add_segment(payload)
+    w.add_section("blob", 1, ph.p_vaddr, payload)
+    blob = w.finish()
+    img = read_self(blob)
+    assert img.phdrs[0].p_filesz == len(payload)
+    loaded = ImageLoader("linux").load(blob)
+    assert loaded.section_bytes("blob") == payload
+
+
+def test_offset_vaddr_congruence_enforced():
+    from repro.core.elf import BadImageError, ProgramHeader
+
+    with pytest.raises(BadImageError):
+        ProgramHeader(1, 0, 100, 4096, 10, 10)   # offset % PAGE != vaddr % PAGE

@@ -1,0 +1,73 @@
+"""Hypothesis property tests on the memory-manager invariants."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mm import MemoryManager, MMConfig
+from repro.core.vma import coalesce_host_mappings
+
+G = 64 * 1024
+
+ops = st.lists(
+    st.tuples(
+        st.sampled_from(["mmap", "touch"]),
+        st.integers(1, 8),       # size in granules / touch offset
+    ),
+    min_size=1, max_size=40,
+)
+
+
+def run_workload(cfg, program):
+    mm = MemoryManager(cfg)
+    regions = []
+    for op, n in program:
+        if op == "mmap" or not regions:
+            regions.append(mm.mmap(n * G))
+        else:
+            ar = regions[len(regions) % len(regions) - 1]
+            off = (n * G) % max(ar.length, G)
+            mm.touch(ar.start + min(off, ar.length - 1), G)
+    return mm
+
+
+@settings(max_examples=60, deadline=None)
+@given(program=ops)
+def test_host_mappings_never_overlap(program):
+    for cfg in (MMConfig.legacy(), MMConfig.modern()):
+        mm = run_workload(cfg, program)
+        maps = sorted(mm.host_vmas(), key=lambda m: m.addr.start)
+        for a, b in zip(maps, maps[1:]):
+            assert a.addr.end <= b.addr.start
+
+
+@settings(max_examples=60, deadline=None)
+@given(program=ops)
+def test_backing_offsets_never_overlap(program):
+    for cfg in (MMConfig.legacy(), MMConfig.modern()):
+        mm = run_workload(cfg, program)
+        spans = sorted(
+            (m.offset, m.offset_end) for m in mm._mappings.values()
+        )
+        for a, b in zip(spans, spans[1:]):
+            assert a[1] <= b[0]
+
+
+@settings(max_examples=60, deadline=None)
+@given(program=ops)
+def test_modern_never_worse_on_sequential_growth(program):
+    """On pure top-down growth workloads modern <= legacy (the paper claim)."""
+    grow = [("mmap", n) for _, n in program]
+    legacy = run_workload(MMConfig.legacy(), grow)
+    modern = run_workload(MMConfig.modern(), grow)
+    for mm in (legacy, modern):
+        for ar in list(mm.vmas):
+            mm.touch(ar.start, ar.ar.length)
+    assert modern.host_vma_count() <= legacy.host_vma_count()
+
+
+@settings(max_examples=40, deadline=None)
+@given(program=ops)
+def test_coalesce_idempotent(program):
+    mm = run_workload(MMConfig.modern(), program)
+    once = mm.host_vmas()
+    twice = coalesce_host_mappings(once)
+    assert once == twice

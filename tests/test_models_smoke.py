@@ -1,0 +1,116 @@
+"""Per-architecture smoke: reduced config, fwd/loss/grad/prefill/decode.
+
+Also asserts decode *consistency*: teacher-forced forward logits at the
+last position must match prefill(prompt[:-1]) + decode_step(prompt[-1]).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import build_model
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(rng, (B, cfg.encoder_len, cfg.d_model))
+    if cfg.num_patches:
+        batch["patch_embeds"] = jax.random.normal(
+            rng, (B, cfg.num_patches, cfg.d_model))
+    return batch
+
+
+def _stub_kwargs(cfg, batch):
+    if cfg.family == "audio":
+        return {"frames": batch["frames"]}
+    if cfg.num_patches:
+        return {"patch_embeds": batch["patch_embeds"]}
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch)
+    assert jnp.isfinite(loss), arch
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0, arch
+    logits, _ = model.forward(params, batch["tokens"],
+                              patch_embeds=batch.get("patch_embeds")) \
+        if cfg.family != "audio" else model.forward(
+            params, batch["tokens"], frames=batch["frames"])
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_consistency(arch):
+    import dataclasses
+
+    # fp32: the test asserts *algorithmic* consistency; bf16 ULP at
+    # softcapped logit scale (~0.125 at 30) would mask real bugs.  MoE
+    # archs additionally get drop-free capacity: training dispatch is
+    # capacity-bounded while decode is lossless by design.
+    cfg = dataclasses.replace(get_reduced(arch), dtype="float32",
+                              capacity_factor=64.0)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+    toks = batch["tokens"]
+    kw = _stub_kwargs(cfg, batch)
+
+    if cfg.family == "audio":
+        full_logits, _ = model.forward(params, toks, frames=batch["frames"])
+    else:
+        full_logits, _ = model.forward(
+            params, toks, patch_embeds=batch.get("patch_embeds"))
+
+    state, _ = model.prefill(params, toks[:, :-1], max_seq=S + 2, **kw)
+    state, step_logits = model.decode_step(params, state, toks[:, -1])
+    want = np.asarray(full_logits[:, -1], np.float32)
+    got = np.asarray(step_logits, np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_instantiates(arch):
+    """Full configs must build (shapes only — no allocation)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    analytic = cfg.param_count()
+    assert abs(n - analytic) / analytic < 0.35, (arch, n, analytic)
+
+
+def test_gemma2_window_pattern():
+    from repro.models.common import layer_windows
+
+    cfg = get_config("gemma2-9b")
+    w = layer_windows(cfg)
+    assert w[0] == 4096 and w[1] == 0 and len(w) == 42
+
+
+def test_gemma3_rope_pattern():
+    from repro.models.common import layer_rope_bases, layer_windows
+
+    cfg = get_config("gemma3-12b")
+    w = layer_windows(cfg)
+    b = layer_rope_bases(cfg)
+    assert (w[:5] == 1024).all() and w[5] == 0
+    assert b[0] == 10_000.0 and b[5] == 1_000_000.0

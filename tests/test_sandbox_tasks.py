@@ -1,0 +1,88 @@
+"""Serverless scheduler (§V.A) and artifact repository (§V.B)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    ArtifactRepository,
+    LegacyFilterPolicy,
+    ModernEmulationPolicy,
+    Sandbox,
+    ServerlessScheduler,
+    TaskSpec,
+    TaskState,
+    TenantQuota,
+)
+
+
+def test_scheduler_priority_and_states():
+    sched = ServerlessScheduler()
+    lo = sched.submit(TaskSpec("a", lambda x: x + 1, (jnp.ones(2),), priority=10))
+    hi = sched.submit(TaskSpec("b", lambda x: x * 2, (jnp.ones(2),), priority=1))
+    done = sched.run_pending()
+    assert [r.task_id for r in done] == [hi, lo]
+    assert all(r.state is TaskState.SUCCEEDED for r in done)
+
+
+def test_tenant_isolation_on_violation():
+    """One tenant's denied task must not affect another's."""
+    def evil(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+        )
+
+    sched = ServerlessScheduler()
+    bad = sched.submit(TaskSpec("mallory", evil, (jnp.ones(2),), priority=1))
+    good = sched.submit(TaskSpec("alice", lambda x: x.sum(), (jnp.ones(2),)))
+    sched.run_pending()
+    assert sched.record(bad).state is TaskState.DENIED
+    assert sched.record(good).state is TaskState.SUCCEEDED
+
+
+def test_quota_budget_denial():
+    sched = ServerlessScheduler(
+        quotas={"small": TenantQuota(flop_budget_per_task=10.0)}
+    )
+    t = sched.submit(TaskSpec("small", lambda a, b: a @ b,
+                              (jnp.ones((16, 16)), jnp.ones((16, 16)))))
+    sched.run_pending()
+    assert sched.record(t).state is TaskState.DENIED
+
+
+def test_retries_then_failure():
+    calls = {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        raise OSError("transient")
+
+    sched = ServerlessScheduler()
+    t = sched.submit(TaskSpec("t", flaky, (jnp.ones(1),), max_retries=2))
+    sched.run_pending()
+    assert sched.record(t).state is TaskState.FAILED
+    assert calls["n"] == 3
+
+
+def test_artifact_repo_maintainability():
+    """§V.B: arbitrary ops register under the modern policy with no config
+    churn; the legacy policy requires an allowlist edit per new op."""
+    new_op = lambda x: jax.nn.softmax(jax.lax.erf(x))
+    args = (jnp.ones(4),)
+    legacy = ArtifactRepository(LegacyFilterPolicy())
+    modern = ArtifactRepository(ModernEmulationPolicy())
+    assert not legacy.register_op("erf_softmax", "1.0", new_op, args).admitted
+    rep = modern.register_op("erf_softmax", "1.0", new_op, args)
+    assert rep.admitted
+    assert dict(rep.artifact.primitive_histogram).get("erf") == 1
+    fn = modern.resolve_op("erf_softmax", "1.0")
+    assert jnp.allclose(fn(*args).sum(), 1.0)
+
+
+def test_artifact_image_registration():
+    from repro.core.elf import build_prophet_like
+
+    repo = ArtifactRepository(ModernEmulationPolicy())
+    rep = repo.register_image("prophet", "1.1", build_prophet_like())
+    assert rep.admitted
+    assert repo.resolve_image("prophet", "1.1")

@@ -1,0 +1,121 @@
+"""Sentry interception: policies, metering, emulation equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BudgetExceeded,
+    LegacyFilterPolicy,
+    ModernEmulationPolicy,
+    ResourceMeter,
+    Sandbox,
+    SandboxViolation,
+    sandboxed,
+    static_verify,
+)
+
+
+def scan_udf(x):
+    return jax.lax.scan(lambda c, t: (c + jnp.tanh(t), c * 2), 0.0, x)[0]
+
+
+def test_legacy_rejects_scan_modern_admits():
+    x = jnp.arange(4.0)
+    with pytest.raises(SandboxViolation):
+        sandboxed(scan_udf, LegacyFilterPolicy())(x)
+    out = sandboxed(scan_udf, ModernEmulationPolicy())(x)
+    assert jnp.isfinite(out)
+
+
+def test_dangerous_denied_by_both():
+    def evil(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+        )
+
+    for policy in (LegacyFilterPolicy(), ModernEmulationPolicy()):
+        with pytest.raises(SandboxViolation):
+            sandboxed(evil, policy)(jnp.ones(3))
+
+
+def test_nested_smuggling_denied():
+    """A denied primitive inside a cond branch must still be caught."""
+    def smuggle(x):
+        return jax.lax.cond(
+            x.sum() > 0,
+            lambda v: jax.pure_callback(
+                lambda q: q, jax.ShapeDtypeStruct(v.shape, v.dtype), v
+            ),
+            lambda v: v,
+            x,
+        )
+
+    with pytest.raises(SandboxViolation):
+        sandboxed(smuggle, ModernEmulationPolicy())(jnp.ones(3))
+
+
+def test_interpret_matches_verify():
+    x = jnp.linspace(-1, 1, 16)
+    direct = sandboxed(scan_udf, ModernEmulationPolicy(), mode="verify")(x)
+    interp = sandboxed(scan_udf, ModernEmulationPolicy(), mode="interpret")(x)
+    np.testing.assert_allclose(direct, interp, rtol=1e-6)
+
+
+def test_matmul_flop_metering():
+    meter = ResourceMeter()
+    fn = sandboxed(lambda a, b: a @ b, ModernEmulationPolicy(), meter=meter)
+    fn(jnp.ones((32, 48)), jnp.ones((48, 16)))
+    assert meter.flops == 2 * 32 * 48 * 16
+
+
+def test_scan_flops_scale_with_length():
+    m1, m2 = ResourceMeter(), ResourceMeter()
+    def mk(n):
+        def f(x):
+            return jax.lax.scan(
+                lambda c, _: (jnp.tanh(c @ c), None), x, None, length=n
+            )[0]
+        return f
+    sandboxed(mk(4), ModernEmulationPolicy(), meter=m1)(jnp.ones((8, 8)))
+    sandboxed(mk(8), ModernEmulationPolicy(), meter=m2)(jnp.ones((8, 8)))
+    assert abs(m2.flops / m1.flops - 2.0) < 0.2
+
+
+def test_budget_enforced():
+    sb = Sandbox(policy=ModernEmulationPolicy(), flop_budget=100.0)
+    with pytest.raises(BudgetExceeded):
+        sb.run(lambda a, b: a @ b, jnp.ones((64, 64)), jnp.ones((64, 64)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    coefs=st.lists(st.floats(-2, 2, allow_nan=False), min_size=1, max_size=5),
+)
+def test_property_emulation_equivalence(coefs):
+    """Arbitrary polynomial pipelines: interpret == native execution."""
+    def udf(x):
+        acc = jnp.zeros_like(x)
+        for i, c in enumerate(coefs):
+            acc = acc + c * x ** (i + 1)
+        return jnp.tanh(acc).sum()
+
+    x = jnp.linspace(-1.0, 1.0, 8)
+    a = sandboxed(udf, ModernEmulationPolicy(), mode="verify")(x)
+    b = sandboxed(udf, ModernEmulationPolicy(), mode="interpret")(x)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_legacy_maintenance_treadmill():
+    """The paper's pain: new workloads require allowlist edits; the modern
+    sandbox needs none."""
+    new_workload = lambda x: jax.lax.erf(x).sum()
+    x = jnp.ones(4)
+    legacy = LegacyFilterPolicy()
+    with pytest.raises(SandboxViolation):
+        sandboxed(new_workload, legacy)(x)
+    patched = legacy.extended("erf")          # manual config update
+    assert jnp.isfinite(sandboxed(new_workload, patched)(x))
+    assert jnp.isfinite(sandboxed(new_workload, ModernEmulationPolicy())(x))

@@ -1,0 +1,125 @@
+"""End-to-end behaviour: train with failure recovery; serve with paged KV;
+sandboxed user code inside the training loop (the Snowpark pattern)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_reduced
+from repro.core import ModernEmulationPolicy, Sandbox
+from repro.core.gofer import Gofer
+from repro.data import DataConfig, Loader, SyntheticLM
+from repro.models import build_model
+from repro.optim import ScheduleConfig
+from repro.runtime import (FailureInjector, HeartbeatMonitor, Request,
+                           Server, ServerConfig, StragglerDetector, Trainer,
+                           TrainerConfig)
+
+
+def test_train_recover_and_converge(tmp_path):
+    cfg = get_reduced("gemma2-9b")
+    model = build_model(cfg)
+    dc = DataConfig(global_batch=8, seq_len=32, vocab_size=cfg.vocab_size)
+    loader = Loader(SyntheticLM(dc), dc)
+    ckpt = CheckpointManager(Gofer.for_root("ckpt", tmp_path, write=True))
+    tr = Trainer(
+        model, loader,
+        TrainerConfig(total_steps=45, ckpt_every=20, log_every=10,
+                      schedule=ScheduleConfig(peak_lr=3e-3, warmup_steps=10)),
+        ckpt=ckpt,
+        monitor=HeartbeatMonitor(["host0", "host3"]),
+        stragglers=StragglerDetector(),
+        injector=FailureInjector(fail_at={30: ["host3"]}),
+    )
+    params, opt = tr.init_state(jax.random.PRNGKey(0))
+    params, opt = tr.run(params, opt)
+    assert tr.restarts == 1
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert losses[-1] < losses[0]
+    assert ckpt.latest_step() == 45
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = get_reduced("qwen2.5-32b")
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    dc = DataConfig(global_batch=8, seq_len=16, vocab_size=cfg.vocab_size)
+    data = SyntheticLM(dc)
+
+    def make(accum):
+        loader = Loader(data, dc)
+        tr = Trainer(model, loader,
+                     TrainerConfig(total_steps=3, accum_steps=accum,
+                                   log_every=1, ckpt_every=10**9),
+                     donate=False)
+        p, o = tr.init_state(jax.random.PRNGKey(7))
+        p, o = tr.run(p, o)
+        loader.stop()
+        return p
+
+    p1 = make(1)
+    p4 = make(4)
+    err = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4))
+    )
+    assert err < 5e-3, err
+
+
+def test_serve_continuous_batching():
+    cfg = get_reduced("hymba-1.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = Server(model, params, ServerConfig(max_batch=2, max_seq=64))
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32),
+                max_new_tokens=4, request_id=i)
+        for i in range(5)
+    ]
+    done = srv.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.tokens) == 4 for r in done)
+    rep = srv.arena_report()
+    assert rep["mm_stats"]["faults"] > 0
+
+
+def test_sandboxed_postprocess_in_serving():
+    cfg = get_reduced("rwkv6-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = Server(model, params, ServerConfig(max_batch=1, max_seq=32))
+    post = lambda toks: jnp.sort(toks)
+    r = Request(prompt=np.asarray([1, 2, 3], np.int32), max_new_tokens=3,
+                request_id=0, postprocess=post)
+    done = srv.run([r])
+    assert done[0].tokens == sorted(done[0].tokens)
+
+
+def test_sandboxed_custom_loss_in_training():
+    """User-defined loss term runs through the Sentry inside train step."""
+    cfg = get_reduced("starcoder2-7b")
+    model = build_model(cfg)
+    sandbox = Sandbox(policy=ModernEmulationPolicy())
+
+    def user_regularizer(logits):
+        return 1e-4 * jnp.mean(jnp.square(logits))
+
+    sandbox.verify_only(user_regularizer, jnp.ones((2, 4, cfg.vocab_size)))
+
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.zeros((2, 16), jnp.int32),
+        "targets": jnp.zeros((2, 16), jnp.int32),
+    }
+
+    def loss_fn(p):
+        logits, _ = model.forward(p, batch["tokens"])
+        base, _ = model.loss(p, batch)
+        return base + user_regularizer(logits)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert jnp.isfinite(loss)

@@ -1,0 +1,104 @@
+"""Paper §IV.A mechanics: allocation direction, hint preservation, crash."""
+
+import pytest
+
+from repro.core.mm import MemoryManager, MMConfig
+from repro.core.vma import (
+    MAX_MAP_COUNT,
+    AddrRange,
+    Direction,
+    FileRangeAllocator,
+    VMAExhaustedError,
+)
+
+G = 64 * 1024
+
+
+def grow_top_down(mm, episodes, granule=G):
+    """List-append growth: new region below previous, faulted on touch."""
+    for _ in range(episodes):
+        ar = mm.mmap(granule)
+        mm.touch(ar.start, granule)
+    return mm
+
+
+def test_legacy_fragmented_modern_coalesced():
+    legacy = grow_top_down(MemoryManager(MMConfig.legacy()), 100)
+    modern = grow_top_down(MemoryManager(MMConfig.modern()), 100)
+    assert legacy.host_vma_count() == 100          # one VMA per episode
+    assert modern.host_vma_count() == 1            # fully coalesced
+    # the sentry-side VMA set coalesces in both (addr+flags merge)
+    assert len(legacy.vmas) == 1 and len(modern.vmas) == 1
+
+
+def test_direction_inference_unhinted():
+    legacy = MemoryManager(MMConfig.legacy())
+    modern = MemoryManager(MMConfig.modern())
+    for mm, want in ((legacy, Direction.BOTTOM_UP), (modern, Direction.TOP_DOWN)):
+        ar = mm.mmap(G)
+        mm.touch(ar.start, G)
+        rec = mm.fault_log[-1]
+        assert rec.direction is want and not rec.hinted
+
+
+def test_hint_survives_merge_only_in_modern():
+    for cfg, expected in ((MMConfig.legacy(), None), (MMConfig.modern(), "set")):
+        mm = MemoryManager(cfg)
+        a = mm.mmap(G)
+        mm.touch(a.start, G)
+        # adjacent mapping directly below merges with the existing VMA
+        b = mm.mmap(G, addr=a.start - G)
+        vma = mm.vmas.find(b.start)
+        if expected is None:
+            assert vma.last_fault is None
+        else:
+            assert vma.last_fault is not None
+
+
+def test_max_map_count_crash():
+    cfg = MMConfig.legacy(enforce_map_count=True, max_map_count=50)
+    mm = MemoryManager(cfg)
+    with pytest.raises(VMAExhaustedError):
+        grow_top_down(mm, 60)
+    # the modern allocator never gets near the limit on the same workload
+    mm2 = MemoryManager(MMConfig.modern(enforce_map_count=True, max_map_count=50))
+    grow_top_down(mm2, 60)
+    assert mm2.host_vma_count() <= 2
+
+
+def test_interleaved_arenas_still_improve():
+    """Outer-arena growth interleaved with sublist faults (paper workload)."""
+    def run(cfg):
+        mm = MemoryManager(cfg)
+        sub = mm.mmap(G * 64)
+        for i in range(64):
+            ar = mm.mmap(G)
+            mm.touch(ar.start, G)
+            if i % 4 == 0:                      # sublist allocation fault
+                mm.touch(sub.start + (i // 4) * G, G)
+        return mm.host_vma_count()
+
+    legacy, modern = run(MMConfig.legacy()), run(MMConfig.modern())
+    assert modern < legacy
+    assert legacy >= 64
+
+
+def test_file_allocator_directions():
+    fr = FileRangeAllocator(10 * G)
+    lo = fr.allocate(G, Direction.BOTTOM_UP)
+    hi = fr.allocate(G, Direction.TOP_DOWN)
+    assert lo.start == 0
+    assert hi.end == 10 * G
+    fr.free(lo)
+    again = fr.allocate(2 * G, Direction.BOTTOM_UP)
+    assert again.start == 0
+
+
+def test_munmap_frees_backing():
+    mm = MemoryManager(MMConfig.modern())
+    ar = mm.mmap(4 * G)
+    mm.touch(ar.start, 4 * G)
+    before = mm.backing.allocated_bytes
+    mm.munmap(ar)
+    assert mm.backing.allocated_bytes == before - 4 * G
+    assert mm.host_vma_count() == 0
