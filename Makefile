@@ -1,0 +1,13 @@
+PYTHON ?= python
+
+.PHONY: test bench dev-deps
+
+# tier-1 verification: the exact command CI and ROADMAP.md reference
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py
+
+dev-deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt

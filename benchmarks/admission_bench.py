@@ -1,0 +1,95 @@
+"""Admission control plane: cold vs warm admission + pool checkout cost.
+
+The paper pays interception cost **once** at load time and hides sandbox
+startup with pooling/pre-warming.  Two measurements:
+
+* **cold vs warm admission**: first submission of a UDF traces + verifies
+  (``jax.make_jaxpr`` + ``static_verify``); a repeat submission of the
+  same program hits the jaxpr-fingerprint cache and skips both.  The
+  ratio is the load-time cost the cache amortizes away (target ≥ 10x).
+* **pool checkout**: drawing a warm sandbox from :class:`SandboxPool`
+  vs constructing a cold :class:`Sandbox` per request.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AdmissionController,
+    ModernEmulationPolicy,
+    Sandbox,
+    SandboxPool,
+)
+
+
+def udf(x, w1, w2):
+    h = jnp.tanh(x @ w1)
+    h = h * jax.nn.sigmoid(h)
+    return jnp.sum((h @ w2) ** 2)
+
+
+def main() -> Dict[str, float]:
+    x = jnp.ones((256, 256))
+    w1 = jnp.ones((256, 256)) * 0.01
+    w2 = jnp.ones((256, 128)) * 0.01
+    args = (x, w1, w2)
+    policy = ModernEmulationPolicy()
+
+    # ---- cold vs warm admission --------------------------------------
+    cold_times = []
+    for _ in range(20):
+        ctl = AdmissionController()          # fresh cache → cold path
+        t0 = time.perf_counter()
+        ctl.admit(udf, args, policy=policy)
+        cold_times.append(time.perf_counter() - t0)
+    t_cold = sorted(cold_times)[len(cold_times) // 2]
+
+    ctl = AdmissionController()
+    ctl.admit(udf, args, policy=policy)      # populate
+    reps = 2000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ctl.admit(udf, args, policy=policy)
+    t_warm = (time.perf_counter() - t0) / reps
+    assert ctl.stats()["hits"] == reps
+
+    speedup = t_cold / t_warm
+
+    # ---- pool checkout vs cold sandbox construction ------------------
+    reps = 200
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        Sandbox(tenant="bench")
+    t_cold_boot = (time.perf_counter() - t0) / reps
+
+    pool = SandboxPool()
+    pool.prewarm("bench", 1)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        sb = pool.checkout("bench")
+        pool.checkin(sb)
+    t_checkout = (time.perf_counter() - t0) / reps
+    assert pool.stats.hits == reps
+
+    print("# admission_bench")
+    print(f"  cold admission (trace+verify): {t_cold*1e6:9.1f} us/program")
+    print(f"  warm admission (cache hit)   : {t_warm*1e6:9.1f} us/program "
+          f"({speedup:.0f}x faster)")
+    print(f"  cold sandbox construction    : {t_cold_boot*1e6:9.1f} us")
+    print(f"  warm pool checkout+checkin   : {t_checkout*1e6:9.1f} us "
+          f"({t_cold_boot/t_checkout:.0f}x faster)")
+    return {
+        "cold_admission_us": t_cold * 1e6,
+        "warm_admission_us": t_warm * 1e6,
+        "warm_speedup_x": speedup,
+        "pool_checkout_speedup_x": t_cold_boot / t_checkout,
+    }
+
+
+if __name__ == "__main__":
+    main()

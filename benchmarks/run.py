@@ -9,7 +9,14 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import loader_bench, query_latency, roofline, sentry_overhead, vma_bench
+    from benchmarks import (
+        admission_bench,
+        loader_bench,
+        query_latency,
+        roofline,
+        sentry_overhead,
+        vma_bench,
+    )
 
     rows = []
 
@@ -43,6 +50,14 @@ def main() -> None:
          so["steady_state_overhead_pct"], "target:~0"),
         ("sentry_emulation_slowdown_x", so["emulation_slowdown_x"],
          "ptrace-mode analogue"),
+    ]
+
+    print("=" * 72)
+    ab = admission_bench.main()
+    rows += [
+        ("admission_warm_speedup_x", ab["warm_speedup_x"], "target:>=10x"),
+        ("pool_checkout_speedup_x", ab["pool_checkout_speedup_x"],
+         "warm-sandbox startup hiding"),
     ]
 
     print("=" * 72)

@@ -8,9 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    ArtifactRepository, BudgetExceeded, LegacyFilterPolicy,
-    ModernEmulationPolicy, Sandbox, SandboxViolation, ServerlessScheduler,
-    TaskSpec, TenantQuota,
+    AdmissionController, ArtifactRepository, BudgetExceeded,
+    LegacyFilterPolicy, ModernEmulationPolicy, Sandbox, SandboxPool,
+    SandboxViolation, ServerlessScheduler, TaskSpec, TenantQuota,
 )
 from repro.core.elf import build_prophet_like
 from repro.core.loader import ImageLoader, SegfaultError
@@ -46,6 +46,17 @@ def main():
     rep = repo.register_op("fancy", "1.0",
                            lambda x: jax.lax.erf(x).sum(), (jnp.ones(3),))
     print("artifact admitted:", rep.admitted, rep.artifact.digest)
+
+    # 4b. unified admission: repeat submissions skip trace+verify, and
+    # warm sandboxes come from the pool (the startup-latency story)
+    ctl = AdmissionController()
+    pool = SandboxPool(admission=ctl)
+    sb = pool.checkout("tenant-a")
+    cold = sb.run(udf, jnp.arange(8.0))
+    warm = sb.run(udf, jnp.arange(8.0))
+    pool.checkin(sb)
+    print(f"admission: cold cache_hit={cold.cache_hit} "
+          f"warm cache_hit={warm.cache_hit} stats={ctl.stats()}")
 
     # 5. §IV.A: the VMA blow-up and the fix
     for name, cfg in (("legacy", MMConfig.legacy()), ("modern", MMConfig.modern())):

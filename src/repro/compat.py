@@ -1,0 +1,52 @@
+"""Compatibility shims over the moving jax API surface.
+
+The repo targets the modern ``jax.shard_map`` entry point; older jax
+releases (< 0.6) only ship ``jax.experimental.shard_map.shard_map`` with
+``check_rep`` instead of ``check_vma`` and no ``axis_names`` parameter.
+Route every shard_map call through here so the rest of the codebase can
+use the modern signature unconditionally.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "abstract_mesh", "cost_analysis"]
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``jax.sharding.AbstractMesh`` across signature generations.
+
+    Modern jax takes ``(axis_sizes, axis_names)``; older releases take a
+    single ``((name, size), ...)`` shape tuple.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict on every jax version (older
+    releases return a one-element list of per-computation dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def shard_map(f, mesh, in_specs, out_specs, **kwargs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs.pop("axis_names", None)
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

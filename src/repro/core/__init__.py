@@ -5,6 +5,14 @@ Subsystem map (see DESIGN.md §2 for the paper↔TPU correspondence):
 =================  =========================================================
 ``policy``         legacy syscall-filter vs modern Sentry-emulation policies
 ``sentry``         jaxpr-level interception, emulation, resource metering
+``admission``      unified admission control plane: policy verification +
+                   budget pre-check + image-digest check behind a
+                   jaxpr-fingerprint verification cache (pay interception
+                   cost once at load time — the Systrap story)
+``pool``           warm sandbox pool: per-tenant checkout/checkin,
+                   pre-warming, LRU eviction (the startup-latency fix)
+``telemetry``      structured audit/metrics events; one sink for every
+                   admission layer
 ``vma`` / ``mm``   §IV.A virtual-memory management: allocation-direction
                    alignment + hint preservation (the 182x fix)
 ``arena``          device-memory arena / paged-KV allocator built on ``mm``
@@ -12,11 +20,19 @@ Subsystem map (see DESIGN.md §2 for the paper↔TPU correspondence):
 ``image``          §III.B standardized base image
 ``gofer``          mediated (capability-checked) I/O
 ``sandbox``        per-tenant facade combining all of the above
-``tasks``          §V.A serverless multi-tenant scheduler
-``artifacts``      §V.B artifact repository
+``tasks``          §V.A serverless multi-tenant scheduler (draws sandboxes
+                   from the pool, reuses cached verifications)
+``artifacts``      §V.B artifact repository (registration populates the
+                   admission cache)
 =================  =========================================================
 """
 
+from .admission import (
+    AdmissionController,
+    AdmissionTicket,
+    ImageDigestError,
+    default_controller,
+)
 from .arena import DeviceArena, PagedKVAllocator
 from .artifacts import ArtifactRepository
 from .gofer import Capability, CapabilityError, Gofer
@@ -31,6 +47,7 @@ from .policy import (
     SandboxPolicy,
     SandboxViolation,
 )
+from .pool import PoolStats, SandboxPool
 from .sandbox import Sandbox, SandboxResult
 from .sentry import (
     BudgetExceeded,
@@ -40,6 +57,7 @@ from .sentry import (
     static_verify,
 )
 from .tasks import ServerlessScheduler, TaskSpec, TaskState, TenantQuota
+from .telemetry import TelemetryEvent, TelemetrySink
 from .vma import (
     MAX_MAP_COUNT,
     AddrRange,

@@ -1,0 +1,338 @@
+"""Unified admission control plane (the paper's load-time interception story).
+
+SEE++'s central performance claim is that interception cost is paid **once**
+at load time (the Systrap move): after a program is verified, steady-state
+execution runs at native speed.  The seed paid that cost on *every* call,
+in three divergent paths (``Sandbox.run``, ``ServerlessScheduler._execute``,
+the server's postprocess).  :class:`AdmissionController` is the single
+pipeline all of them now route through:
+
+1. **image-digest check** — the sandbox must boot from a pinned base image
+   (when the controller is configured with an allowed-digest set),
+2. **verification cache** — a jaxpr-fingerprint cache keyed on function
+   identity + abstract argument shapes/dtypes + policy fingerprint; a
+   repeat submission of the same program skips ``jax.make_jaxpr`` +
+   ``static_verify`` entirely and returns the cached primitive histogram,
+3. **budget pre-check** — cached FLOP/byte totals are charged against the
+   tenant's :class:`~repro.core.sentry.ResourceMeter` *before* execution,
+   so an over-budget program is rejected without running.
+
+``benchmarks/admission_bench.py`` quantifies the cold-vs-warm gap.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import pickle
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .policy import SandboxPolicy, SandboxViolation
+from .sentry import ResourceMeter, static_verify
+from .telemetry import TelemetrySink
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionTicket",
+    "ImageDigestError",
+    "default_controller",
+]
+
+
+class ImageDigestError(RuntimeError):
+    """The sandbox's base image is not in the controller's pinned set."""
+
+
+@dataclass(frozen=True)
+class AdmissionTicket:
+    """Proof that a program passed the admission pipeline."""
+
+    tenant: str
+    fn_name: str
+    policy_name: str
+    cache_hit: bool
+    histogram: Mapping[str, int]
+    flops: float
+    bytes: float
+    eqn_count: int
+    closed_jaxpr: Any = None
+    out_tree: Any = None
+    image_digest: str = ""
+
+
+@dataclass
+class _CacheEntry:
+    fn: Callable                 # strong ref: keeps id(fn) stable for the key
+    closed_jaxpr: Any
+    out_tree: Any                # output pytree structure (interpret path)
+    histogram: Dict[str, int]
+    flops: float
+    bytes: float
+    eqn_count: int
+    by_primitive: Dict[str, int]
+    policy_name: str
+
+
+def _code_digest(fn: Callable) -> str:
+    try:
+        code = fn.__code__.co_code
+    except AttributeError:
+        code = pickle.dumps(getattr(fn, "__name__", repr(fn)))
+    return hashlib.sha256(code).hexdigest()[:16]
+
+
+def _captured_state(fn: Callable) -> Tuple:
+    """Closure cells + defaults, by value.
+
+    Like kwargs, closed-over values and unsupplied defaults bake into the
+    jaxpr as constants at trace time; a function whose captured state
+    mutates is a different program and must not get a stale cache hit.
+
+    Module-level *globals* a function references are deliberately not
+    keyed (same tradeoff as ``jax.jit``'s trace cache): keying them by
+    value would defeat caching for any UDF touching mutable module state,
+    and their values are baked at trace time by documented jax semantics.
+    """
+    cells = getattr(fn, "__closure__", None) or ()
+    defaults = getattr(fn, "__defaults__", None) or ()
+    return (
+        tuple(_concrete_leaf(c.cell_contents) for c in cells),
+        tuple(_concrete_leaf(d) for d in defaults),
+    )
+
+
+def _policy_fingerprint(policy: SandboxPolicy) -> str:
+    """Identity of a policy's *decision surface*, not just its name.
+
+    ``LegacyFilterPolicy.extended(...)`` keeps the name but changes the
+    allowlist; caching on the name alone would serve stale admissions
+    across that config change.
+    """
+    parts = [policy.name]
+    for attr in ("allowlist", "extra_denied"):
+        s = getattr(policy, attr, None)
+        if s is not None:
+            parts.append(attr + ":" + ",".join(sorted(s)))
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
+
+
+def _abstract_leaf(x) -> Tuple:
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return (tuple(x.shape), str(x.dtype))
+    arr = np.asarray(x)
+    return (tuple(arr.shape), str(arr.dtype))
+
+
+def _concrete_leaf(x) -> Tuple:
+    try:
+        arr = np.asarray(x)
+        if arr.dtype != object:
+            if arr.size <= 64:
+                return ("val", arr.shape, str(arr.dtype), arr.tobytes())
+            return (
+                "digest", arr.shape, str(arr.dtype),
+                hashlib.sha256(arr.tobytes()).hexdigest(),
+            )
+    except Exception:
+        pass
+    return ("repr", repr(x))
+
+
+def _abstract_signature(args: Tuple, kwargs: Mapping[str, Any]) -> Tuple:
+    """Positional args by (shape, dtype); kwargs by *value*.
+
+    Positional args are traced, so only their abstract shapes/dtypes shape
+    the jaxpr.  Keyword args are closed over at trace time — their values
+    bake into the jaxpr as constants, so two calls differing only in a
+    kwarg value are different programs and must not share a cache entry.
+    """
+    a_leaves, a_tree = jax.tree_util.tree_flatten(args)
+    k_leaves, k_tree = jax.tree_util.tree_flatten(dict(kwargs))
+    return (
+        str(a_tree),
+        tuple(_abstract_leaf(x) for x in a_leaves),
+        str(k_tree),
+        tuple(_concrete_leaf(x) for x in k_leaves),
+    )
+
+
+class AdmissionController:
+    """One staged admission pipeline shared by every execution layer."""
+
+    def __init__(
+        self,
+        *,
+        sink: Optional[TelemetrySink] = None,
+        max_entries: int = 512,
+        allowed_image_digests: Optional[Any] = None,
+    ) -> None:
+        self.sink = sink or TelemetrySink()
+        self._max_entries = max(1, int(max_entries))
+        self._allowed_digests = (
+            frozenset(allowed_image_digests)
+            if allowed_image_digests is not None
+            else None
+        )
+        self._cache: "OrderedDict[Tuple, _CacheEntry]" = OrderedDict()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._invalidations = 0
+        self._denials = 0
+
+    # ---------------------------------------------------------------- admit
+
+    def admit(
+        self,
+        fn: Callable,
+        args: Tuple = (),
+        kwargs: Optional[Mapping[str, Any]] = None,
+        *,
+        policy: SandboxPolicy,
+        tenant: str = "default",
+        image: Any = None,
+        meter: Optional[ResourceMeter] = None,
+        stage: str = "run",
+    ) -> AdmissionTicket:
+        """Run the staged pipeline; raise on the first failing stage.
+
+        Raises :class:`ImageDigestError`, :class:`SandboxViolation` or
+        :class:`~repro.core.sentry.BudgetExceeded`.
+        """
+        kwargs = dict(kwargs or {})
+        fn_name = getattr(fn, "__name__", "fn")
+
+        # stage 1: image-digest check (pinned base images only)
+        digest = ""
+        if image is not None:
+            digest = image.digest() if callable(image.digest) else image.digest
+            if self._allowed_digests is not None and digest not in self._allowed_digests:
+                self._denials += 1
+                self.sink.emit(
+                    "admission", "image_rejected", tenant=tenant,
+                    detail=f"digest={digest}", stage=stage,
+                )
+                raise ImageDigestError(
+                    f"image digest {digest!r} not in pinned set"
+                )
+
+        # stage 2: verification cache
+        key = (
+            id(fn),
+            _code_digest(fn),
+            _captured_state(fn),
+            _abstract_signature(args, kwargs),
+            _policy_fingerprint(policy),
+        )
+        entry = self._cache.get(key)
+        if entry is not None:
+            self._cache.move_to_end(key)
+            self._hits += 1
+            self.sink.count("admission.cache_hit")
+            cache_hit = True
+        else:
+            self._misses += 1
+            try:
+                closed, out_shape = jax.make_jaxpr(
+                    lambda *a: fn(*a, **kwargs), return_shape=True
+                )(*args)
+                scratch = ResourceMeter()   # budget-free costing pass
+                hist = static_verify(closed, policy, scratch)
+            except SandboxViolation as e:
+                self._denials += 1
+                self.sink.emit(
+                    "admission", "denied", tenant=tenant,
+                    detail=f"{fn_name}: {e}", stage=stage,
+                )
+                raise
+            entry = _CacheEntry(
+                fn=fn,
+                closed_jaxpr=closed,
+                out_tree=jax.tree_util.tree_structure(out_shape),
+                histogram=hist,
+                flops=scratch.flops,
+                bytes=scratch.bytes,
+                eqn_count=scratch.eqn_count,
+                by_primitive=dict(scratch.by_primitive),
+                policy_name=policy.name,
+            )
+            self._cache[key] = entry
+            while len(self._cache) > self._max_entries:
+                self._cache.popitem(last=False)
+                self._evictions += 1
+            self.sink.emit(
+                "admission", "verified", tenant=tenant,
+                detail=f"{fn_name}: {sum(hist.values())} eqns", stage=stage,
+            )
+            cache_hit = False
+
+        # stage 3: budget pre-check against the tenant's meter
+        if meter is not None:
+            meter.charge_totals(
+                entry.flops, entry.bytes, entry.eqn_count, entry.by_primitive
+            )
+
+        return AdmissionTicket(
+            tenant=tenant,
+            fn_name=fn_name,
+            policy_name=policy.name,
+            cache_hit=cache_hit,
+            histogram=dict(entry.histogram),
+            flops=entry.flops,
+            bytes=entry.bytes,
+            eqn_count=entry.eqn_count,
+            closed_jaxpr=entry.closed_jaxpr,
+            out_tree=entry.out_tree,
+            image_digest=digest,
+        )
+
+    # ----------------------------------------------------------- management
+
+    def invalidate(self, policy: Optional[SandboxPolicy] = None) -> int:
+        """Drop cached verifications; with ``policy``, only that policy's.
+
+        Matching is by policy *fingerprint*, so entries verified under a
+        since-mutated policy object (e.g. ``extended()``) stay live — they
+        were verified under a different decision surface.
+        """
+        if policy is None:
+            n = len(self._cache)
+            self._cache.clear()
+        else:
+            fp = _policy_fingerprint(policy)
+            doomed = [k for k in self._cache if k[-1] == fp]
+            for k in doomed:
+                del self._cache[k]
+            n = len(doomed)
+        self._invalidations += n
+        if n:
+            self.sink.emit("admission", "invalidate", detail=f"{n} entries")
+        return n
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "hits": self._hits,
+            "misses": self._misses,
+            "evictions": self._evictions,
+            "invalidations": self._invalidations,
+            "denials": self._denials,
+            "entries": len(self._cache),
+        }
+
+
+# ---------------------------------------------------------------------------
+# process-default controller (used by the bare ``sandboxed()`` convenience)
+# ---------------------------------------------------------------------------
+
+_default: Optional[AdmissionController] = None
+
+
+def default_controller() -> AdmissionController:
+    global _default
+    if _default is None:
+        _default = AdmissionController()
+    return _default

@@ -21,11 +21,9 @@ import pickle
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-import jax
-
+from .admission import AdmissionController
 from .loader import ImageLoader
 from .policy import SandboxPolicy, SandboxViolation
-from .sentry import static_verify
 
 __all__ = ["Artifact", "ArtifactRepository", "RegistrationReport"]
 
@@ -49,9 +47,19 @@ class RegistrationReport:
 class ArtifactRepository:
     """Versioned registry of user-supplied ops and SELF images."""
 
-    def __init__(self, policy: SandboxPolicy, loader: Optional[ImageLoader] = None):
+    def __init__(
+        self,
+        policy: SandboxPolicy,
+        loader: Optional[ImageLoader] = None,
+        *,
+        admission: Optional[AdmissionController] = None,
+    ):
         self.policy = policy
         self.loader = loader or ImageLoader("linux")
+        # registration-time verification populates the same cache the
+        # execution layers read, so the first *run* of a registered op is
+        # already a warm admission
+        self.admission = admission or AdmissionController()
         self._ops: Dict[Tuple[str, str], Callable] = {}
         self._images: Dict[Tuple[str, str], bytes] = {}
         self._meta: Dict[Tuple[str, str], Artifact] = {}
@@ -68,8 +76,13 @@ class ArtifactRepository:
         """Register a user op; admission = load-time Sentry verification."""
         digest = _digest_callable(fn)
         try:
-            closed = jax.make_jaxpr(fn)(*example_args)
-            hist = static_verify(closed, self.policy)
+            ticket = self.admission.admit(
+                fn, example_args,
+                policy=self.policy,
+                tenant=f"artifact:{name}",
+                stage="register",
+            )
+            hist = dict(ticket.histogram)
         except SandboxViolation as e:
             art = Artifact(name, version, digest, "op")
             return RegistrationReport(art, False, str(e))

@@ -1,0 +1,167 @@
+"""Warm sandbox pool — the paper's startup-latency optimization (§III.B).
+
+SEE++ hides sandbox startup cost by pooling and pre-warming execution
+environments instead of constructing one per request.  :class:`SandboxPool`
+keeps **per-tenant** free lists (a sandbox checked in by one tenant is
+never handed to another — isolation is structural, not best-effort),
+supports configurable pre-warming, evicts least-recently-used idle
+sandboxes under a global cap, and exposes hit/miss/evict counters.
+
+A sandbox that observed a policy violation is checked back in with
+``discard=True`` and destroyed rather than recycled, so one tenant's
+violation can never poison a pooled environment.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .sandbox import Sandbox
+from .telemetry import TelemetrySink, resolve_sink
+
+__all__ = ["SandboxPool", "PoolStats"]
+
+
+@dataclass
+class PoolStats:
+    hits: int = 0          # checkout served from a warm sandbox
+    misses: int = 0        # checkout had to build a cold sandbox
+    evictions: int = 0     # idle sandbox dropped by the LRU cap
+    discards: int = 0      # poisoned sandbox destroyed at checkin
+    prewarmed: int = 0     # sandboxes built ahead of demand
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(vars(self))
+
+
+class SandboxPool:
+    """Per-tenant checkout/checkin pool of warm :class:`Sandbox` instances."""
+
+    def __init__(
+        self,
+        factory: Optional[Callable[[str], Sandbox]] = None,
+        *,
+        max_idle_per_tenant: int = 4,
+        max_total_idle: int = 32,
+        admission=None,
+        telemetry: Optional[TelemetrySink] = None,
+    ) -> None:
+        self.telemetry = resolve_sink(admission, telemetry)
+        self._admission = admission
+        self._factory = factory or self._default_factory
+        self._max_idle_per_tenant = max(0, int(max_idle_per_tenant))
+        self._max_total_idle = max(0, int(max_total_idle))
+        # per-tenant LIFO of (checkin stamp, sandbox); stamps order the
+        # global LRU used for eviction under max_total_idle
+        self._idle: Dict[str, List[Tuple[int, Sandbox]]] = {}
+        self._out: Dict[int, str] = {}   # id(sandbox) -> tenant
+        self._templates: Dict[str, Sandbox] = {}  # seeded per-tenant config
+        self._stamp = itertools.count()
+        self.stats = PoolStats()
+
+    def _default_factory(self, tenant: str) -> Sandbox:
+        # a seeded sandbox is the tenant's template: replacements (e.g.
+        # after a poisoned discard) keep its policy/budgets/image rather
+        # than silently reverting to an unrestricted default
+        template = self._templates.get(tenant)
+        if template is not None:
+            return template.clone()
+        return Sandbox(
+            tenant=tenant,
+            admission=self._admission,
+            telemetry=self.telemetry,
+        )
+
+    # ------------------------------------------------------------- lifecycle
+
+    def prewarm(self, tenant: str, count: int = 1) -> int:
+        """Build ``count`` warm sandboxes for ``tenant`` ahead of demand."""
+        built = 0
+        for _ in range(count):
+            if not self._has_idle_room():
+                break
+            sb = self._factory(tenant)
+            self._idle.setdefault(tenant, []).append((next(self._stamp), sb))
+            built += 1
+        self.stats.prewarmed += built
+        if built:
+            self.telemetry.emit("pool", "prewarm", tenant=tenant, count=built)
+        return built
+
+    def seed(self, sandbox: Sandbox) -> None:
+        """Adopt an externally-built sandbox into the warm pool.
+
+        The sandbox also becomes its tenant's configuration template: if
+        it is later discarded, replacements are built as clones of it.
+        """
+        self._templates.setdefault(sandbox.tenant, sandbox)
+        self._idle.setdefault(sandbox.tenant, []).append(
+            (next(self._stamp), sandbox)
+        )
+        self._enforce_caps()
+
+    def checkout(self, tenant: str) -> Sandbox:
+        """Hand ``tenant`` a warm sandbox, building one only on miss."""
+        bucket = self._idle.get(tenant)
+        if bucket:
+            _, sb = bucket.pop()           # LIFO: warmest first
+            self.stats.hits += 1
+            self.telemetry.count("pool.hit")
+        else:
+            sb = self._factory(tenant)
+            self.stats.misses += 1
+            self.telemetry.emit("pool", "miss", tenant=tenant)
+        self._out[id(sb)] = tenant
+        return sb
+
+    def checkin(self, sandbox: Sandbox, *, discard: bool = False) -> None:
+        """Return a sandbox; ``discard=True`` destroys it (poisoned)."""
+        tenant = self._out.pop(id(sandbox), sandbox.tenant)
+        if discard:
+            self.stats.discards += 1
+            self.telemetry.emit("pool", "discard", tenant=tenant)
+            return
+        self._idle.setdefault(tenant, []).append(
+            (next(self._stamp), sandbox)
+        )
+        self._enforce_caps()
+
+    # --------------------------------------------------------------- internals
+
+    def _total_idle(self) -> int:
+        return sum(len(b) for b in self._idle.values())
+
+    def _has_idle_room(self) -> bool:
+        return self._total_idle() < self._max_total_idle
+
+    def _enforce_caps(self) -> None:
+        # per-tenant cap: drop the least recently used of that tenant
+        for tenant, bucket in self._idle.items():
+            while len(bucket) > self._max_idle_per_tenant:
+                bucket.sort(key=lambda e: e[0])
+                bucket.pop(0)
+                self.stats.evictions += 1
+                self.telemetry.emit("pool", "evict", tenant=tenant)
+        # global cap: drop the globally least recently used idle sandbox
+        while self._total_idle() > self._max_total_idle:
+            tenant = min(
+                (t for t, b in self._idle.items() if b),
+                key=lambda t: min(e[0] for e in self._idle[t]),
+            )
+            bucket = self._idle[tenant]
+            bucket.sort(key=lambda e: e[0])
+            bucket.pop(0)
+            self.stats.evictions += 1
+            self.telemetry.emit("pool", "evict", tenant=tenant)
+
+    # ------------------------------------------------------------------ stats
+
+    def idle_count(self, tenant: Optional[str] = None) -> int:
+        if tenant is not None:
+            return len(self._idle.get(tenant, []))
+        return self._total_idle()
+
+    def checked_out(self) -> int:
+        return len(self._out)

@@ -6,28 +6,31 @@ a :class:`SandboxPolicy` (legacy filter vs modern Sentry emulation), a
 :class:`ResourceMeter` (tenant isolation) and an optional :class:`Gofer`
 (mediated I/O).  ``Sandbox.run`` is the single entry point the engine uses
 to execute user-defined functions next to the data.
+
+Admission (verification, budget pre-check, image-digest check) routes
+through a shared :class:`~repro.core.admission.AdmissionController`, so a
+repeat submission of the same program skips tracing and verification
+(warm-path admission); audit events flow to the attached
+:class:`~repro.core.telemetry.TelemetrySink`.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
+import jax
+
+from .admission import AdmissionController
 from .gofer import Gofer
 from .image import DEFAULT_IMAGE, BaseImage
 from .mm import MemoryManager, MMConfig
 from .policy import ModernEmulationPolicy, SandboxPolicy
-from .sentry import ResourceMeter, sandboxed, static_verify
+from .sentry import ResourceMeter, SentryInterpreter
+from .telemetry import TelemetryEvent, TelemetrySink, resolve_sink
 
-__all__ = ["Sandbox", "SandboxResult", "AuditEvent"]
-
-
-@dataclass
-class AuditEvent:
-    when: float
-    what: str
-    detail: str
+__all__ = ["Sandbox", "SandboxResult"]
 
 
 @dataclass
@@ -37,6 +40,7 @@ class SandboxResult:
     bytes: float
     eqn_count: int
     wall_s: float
+    cache_hit: bool = False
 
 
 class Sandbox:
@@ -53,7 +57,11 @@ class Sandbox:
         byte_budget: Optional[float] = None,
         gofer: Optional[Gofer] = None,
         mode: str = "verify",
+        admission: Optional[AdmissionController] = None,
+        telemetry: Optional[TelemetrySink] = None,
     ) -> None:
+        if mode not in ("verify", "interpret"):
+            raise ValueError(f"unknown sandbox mode {mode!r}")
         self.tenant = tenant
         self.image = image
         self.policy = policy or ModernEmulationPolicy()
@@ -62,11 +70,15 @@ class Sandbox:
         self.mode = mode
         self._flop_budget = flop_budget
         self._byte_budget = byte_budget
-        self.audit: List[AuditEvent] = []
+        self.telemetry = resolve_sink(admission, telemetry)
+        self.admission = admission or AdmissionController(sink=self.telemetry)
+        self.audit: List[TelemetryEvent] = []
         self._note("boot", f"image={image.describe()['digest']} policy={self.policy.name}")
 
-    def _note(self, what: str, detail: str = "") -> None:
-        self.audit.append(AuditEvent(time.time(), what, detail))
+    def _note(self, kind: str, detail: str = "") -> None:
+        self.audit.append(
+            self.telemetry.emit("sandbox", kind, tenant=self.tenant, detail=detail)
+        )
 
     # ------------------------------------------------------------------ API
 
@@ -75,10 +87,23 @@ class Sandbox:
         meter = ResourceMeter(
             flop_budget=self._flop_budget, byte_budget=self._byte_budget
         )
-        wrapped = sandboxed(fn, self.policy, meter=meter, mode=self.mode)
         t0 = time.perf_counter()
         try:
-            value = wrapped(*args, **kwargs)
+            ticket = self.admission.admit(
+                fn, args, kwargs,
+                policy=self.policy,
+                tenant=self.tenant,
+                image=self.image,
+                meter=meter,
+            )
+            if self.mode == "verify":
+                # production path: verified once, then native execution
+                value = fn(*args, **kwargs)
+            else:
+                interp = SentryInterpreter(self.policy, meter=None)
+                flat_args, _ = jax.tree_util.tree_flatten(args)
+                out_flat = interp.run(ticket.closed_jaxpr, *flat_args)
+                value = jax.tree_util.tree_unflatten(ticket.out_tree, out_flat)
         except Exception as e:
             self._note("violation", f"{type(e).__name__}: {e}")
             raise
@@ -86,18 +111,48 @@ class Sandbox:
         self._note(
             "run",
             f"{getattr(fn, '__name__', 'fn')} eqns={meter.eqn_count} "
-            f"flops={meter.flops:.3e}",
+            f"flops={meter.flops:.3e} cached={ticket.cache_hit}",
         )
-        return SandboxResult(value, meter.flops, meter.bytes, meter.eqn_count, wall)
+        return SandboxResult(
+            value, meter.flops, meter.bytes, meter.eqn_count, wall,
+            cache_hit=ticket.cache_hit,
+        )
 
     def verify_only(self, fn: Callable, *args, **kwargs) -> Dict[str, int]:
         """Admission check without execution (load-time verification)."""
-        import jax
+        ticket = self.admission.admit(
+            fn, args, kwargs,
+            policy=self.policy,
+            tenant=self.tenant,
+            image=self.image,
+            stage="verify",
+        )
+        self._note(
+            "verify",
+            f"{getattr(fn, '__name__', 'fn')}: "
+            f"{sum(ticket.histogram.values())} eqns cached={ticket.cache_hit}",
+        )
+        return dict(ticket.histogram)
 
-        closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
-        hist = static_verify(closed, self.policy)
-        self._note("verify", f"{getattr(fn, '__name__', 'fn')}: {sum(hist.values())} eqns")
-        return hist
+    def clone(self) -> "Sandbox":
+        """A fresh sandbox with this one's configuration.
+
+        Shares the admission controller / telemetry sink (warm cache) but
+        nothing mutable — the pool uses this to replace a discarded
+        (poisoned) sandbox without dropping the tenant's policy or budgets.
+        """
+        return Sandbox(
+            tenant=self.tenant,
+            image=self.image,
+            policy=self.policy,
+            mm_config=self.mm.config,
+            flop_budget=self._flop_budget,
+            byte_budget=self._byte_budget,
+            gofer=self.gofer,
+            mode=self.mode,
+            admission=self.admission,
+            telemetry=self.telemetry,
+        )
 
     def op(self, name: str) -> Callable:
         """Resolve an op from the base image (never from host state)."""

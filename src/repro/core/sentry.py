@@ -40,7 +40,29 @@ __all__ = [
     "SentryInterpreter",
     "sandboxed",
     "iter_eqns",
+    "CALL_JAXPR_PRIMITIVES",
+    "CONTROL_FLOW_PRIMITIVES",
 ]
+
+#: Call-like primitives wrapping callee jaxpr(s) that both the FLOP
+#: estimator and the interpreter descend into.  ONE shared set: the
+#: seed let ``eqn_flops`` recurse into ``custom_vjp_call_jaxpr`` while
+#: ``SentryInterpreter.RECURSE`` omitted it, so the interpreter bound that
+#: call wholesale instead of descending with per-equation admission.
+CALL_JAXPR_PRIMITIVES: frozenset = frozenset(
+    {
+        "pjit",
+        "closed_call",
+        "remat2",
+        "custom_jvp_call",
+        "custom_vjp_call",
+        "custom_vjp_call_jaxpr",
+    }
+)
+
+#: Structured control flow: recursed into for costing/verification, but
+#: bound wholesale by the interpreter (their bodies are verified first).
+CONTROL_FLOW_PRIMITIVES: frozenset = frozenset({"scan", "while", "cond"})
 
 
 class BudgetExceeded(RuntimeError):
@@ -66,6 +88,25 @@ class ResourceMeter:
         self.eqn_count += 1
         name = eqn.primitive.name
         self.by_primitive[name] = self.by_primitive.get(name, 0) + 1
+        self._check_budgets()
+
+    def charge_totals(
+        self,
+        flops: float,
+        bytes_: float,
+        eqn_count: int,
+        by_primitive: Optional[Dict[str, int]] = None,
+    ) -> None:
+        """Replay pre-computed charges (cached-admission path): same budget
+        enforcement as :meth:`charge`, without re-walking the jaxpr."""
+        self.flops += flops
+        self.bytes += bytes_
+        self.eqn_count += eqn_count
+        for name, n in (by_primitive or {}).items():
+            self.by_primitive[name] = self.by_primitive.get(name, 0) + n
+        self._check_budgets()
+
+    def _check_budgets(self) -> None:
         if self.flop_budget is not None and self.flops > self.flop_budget:
             raise BudgetExceeded(
                 f"FLOP budget exceeded: {self.flops:.3e} > {self.flop_budget:.3e}"
@@ -111,7 +152,7 @@ def eqn_flops(eqn) -> float:
         out = _aval_size(eqn.outvars[0].aval)
         rhs = eqn.invars[1].aval.shape
         return 2.0 * out * math.prod(rhs[2:]) * rhs[1] if len(rhs) > 2 else 2.0 * out
-    if prim in ("scan", "while", "cond", "pjit", "closed_call", "remat2", "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr"):
+    if prim in CALL_JAXPR_PRIMITIVES or prim in CONTROL_FLOW_PRIMITIVES:
         total = 0.0
         for sub in _sub_jaxprs(eqn):
             total += sum(eqn_flops(e) for e in sub.eqns)
@@ -185,6 +226,14 @@ def static_verify(
     seen every operation it will ever perform (XLA programs are
     closed-world; see DESIGN.md assumption 1).
     """
+    return _verify_jaxpr(closed_jaxpr, policy, meter)
+
+
+def _verify_jaxpr(
+    closed_jaxpr,
+    policy: SandboxPolicy,
+    meter: Optional[ResourceMeter] = None,
+) -> Dict[str, int]:
     jaxpr = closed_jaxpr.jaxpr if hasattr(closed_jaxpr, "jaxpr") else closed_jaxpr
     histogram: Dict[str, int] = {}
     for eqn in iter_eqns(jaxpr):
@@ -211,8 +260,10 @@ def _is_call_like(eqn) -> bool:
 class SentryInterpreter:
     """Equation-by-equation user-space evaluation of a jaxpr."""
 
-    #: call-like primitives we recurse into rather than bind wholesale
-    RECURSE = {"pjit", "closed_call", "remat2", "custom_jvp_call", "custom_vjp_call"}
+    #: call-like primitives we recurse into rather than bind wholesale —
+    #: shared with ``eqn_flops`` so the verifier, cost model and
+    #: interpreter agree on what counts as a call
+    RECURSE = CALL_JAXPR_PRIMITIVES
 
     def __init__(self, policy: SandboxPolicy, meter: Optional[ResourceMeter] = None):
         self.policy = policy
@@ -248,7 +299,7 @@ class SentryInterpreter:
             else:
                 # verify nested bodies (scan/while/cond) before binding
                 for sj in _sub_jaxprs(eqn):
-                    static_verify(sj, self.policy, self.meter)
+                    _verify_jaxpr(sj, self.policy, self.meter)
                 outvals = eqn.primitive.bind(*invals, **eqn.params)
             if not eqn.primitive.multiple_results:
                 outvals = [outvals]
@@ -258,7 +309,7 @@ class SentryInterpreter:
 
     @staticmethod
     def _find_callable_jaxpr(eqn):
-        for key in ("jaxpr", "call_jaxpr"):
+        for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
             if key in eqn.params:
                 v = eqn.params[key]
                 if hasattr(v, "jaxpr"):
@@ -278,6 +329,7 @@ def sandboxed(
     *,
     meter: Optional[ResourceMeter] = None,
     mode: str = "verify",
+    controller: Optional[Any] = None,
 ) -> Callable:
     """Wrap ``fn`` so it executes inside the Sentry.
 
@@ -285,24 +337,27 @@ def sandboxed(
     original function.  Zero steady-state overhead.
     ``mode="interpret"`` (full emulation): every call evaluates the jaxpr
     equation-by-equation inside the interpreter.
+
+    Admission routes through the shared
+    :class:`~repro.core.admission.AdmissionController` (the process-default
+    one unless ``controller`` is given), so repeat calls with the same
+    function/shapes/policy skip tracing and verification entirely.
     """
     if mode not in ("verify", "interpret"):
         raise ValueError(mode)
 
     def wrapper(*args, **kwargs):
-        closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
-        static_verify(closed, policy, meter)
+        # lazy import: admission builds on this module's verifier
+        from .admission import default_controller
+
+        ctl = controller if controller is not None else default_controller()
+        ticket = ctl.admit(fn, args, kwargs, policy=policy, meter=meter)
         if mode == "verify":
-            flat = jax.tree_util.tree_leaves(args)
-            del flat
             return fn(*args, **kwargs)
         interp = SentryInterpreter(policy, meter=None)  # already metered above
-        flat_args, in_tree = jax.tree_util.tree_flatten(args)
-        out_flat = interp.run(closed, *flat_args)
-        out_tree = jax.tree_util.tree_structure(
-            jax.eval_shape(lambda *a: fn(*a, **kwargs), *args)
-        )
-        return jax.tree_util.tree_unflatten(out_tree, out_flat)
+        flat_args, _ = jax.tree_util.tree_flatten(args)
+        out_flat = interp.run(ticket.closed_jaxpr, *flat_args)
+        return jax.tree_util.tree_unflatten(ticket.out_tree, out_flat)
 
     wrapper.__name__ = f"sandboxed_{getattr(fn, '__name__', 'fn')}"
     return wrapper

@@ -8,6 +8,11 @@ executes them in priority order, enforces per-tenant concurrency and
 budget, retries transient failures, and never lets one tenant's violation
 take down another's task.  Deterministic (single-threaded) execution keeps
 tests reproducible; the scheduling policy itself is what we are modeling.
+
+Sandboxes are drawn from a shared :class:`~repro.core.pool.SandboxPool`
+(warm startup) and all verification routes through one
+:class:`~repro.core.admission.AdmissionController`, so retries and
+resubmissions of an already-verified program are warm admissions.
 """
 
 from __future__ import annotations
@@ -20,9 +25,12 @@ import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from .admission import AdmissionController
 from .policy import SandboxViolation
+from .pool import SandboxPool
 from .sandbox import Sandbox, SandboxResult
 from .sentry import BudgetExceeded
+from .telemetry import TelemetrySink, resolve_sink
 
 __all__ = ["TaskState", "TaskSpec", "TaskRecord", "ServerlessScheduler", "TenantQuota"]
 
@@ -72,30 +80,47 @@ class ServerlessScheduler:
         self,
         sandbox_factory: Callable[[str, TenantQuota], Sandbox] | None = None,
         quotas: Optional[Dict[str, TenantQuota]] = None,
+        *,
+        admission: Optional[AdmissionController] = None,
+        pool: Optional[SandboxPool] = None,
+        telemetry: Optional[TelemetrySink] = None,
     ) -> None:
+        self.telemetry = resolve_sink(admission, telemetry)
+        self.admission = admission or AdmissionController(sink=self.telemetry)
         self._factory = sandbox_factory or self._default_factory
         self._quotas = quotas or {}
+        self.pool = pool or SandboxPool(
+            factory=lambda tenant: self._factory(tenant, self.quota(tenant)),
+            admission=self.admission,
+            telemetry=self.telemetry,
+        )
         self._queue: List[Tuple[int, int, int]] = []  # (priority, task_id tiebreak, id)
         self._records: Dict[int, TaskRecord] = {}
         self._ids = itertools.count(1)
-        self._sandboxes: Dict[str, Sandbox] = {}
         self._in_flight: Dict[str, int] = {}
 
-    @staticmethod
-    def _default_factory(tenant: str, quota: TenantQuota) -> Sandbox:
+    def _default_factory(self, tenant: str, quota: TenantQuota) -> Sandbox:
+        # all tenant sandboxes share the scheduler's admission controller,
+        # so resubmission of a verified program is a warm admission
         return Sandbox(
             tenant=tenant,
             flop_budget=quota.flop_budget_per_task,
             byte_budget=quota.byte_budget_per_task,
+            admission=self.admission,
+            telemetry=self.telemetry,
         )
 
     def quota(self, tenant: str) -> TenantQuota:
         return self._quotas.get(tenant, TenantQuota())
 
     def sandbox_for(self, tenant: str) -> Sandbox:
-        if tenant not in self._sandboxes:
-            self._sandboxes[tenant] = self._factory(tenant, self.quota(tenant))
-        return self._sandboxes[tenant]
+        """Borrow a warm sandbox (checkout + immediate checkin)."""
+        sandbox = self.pool.checkout(tenant)
+        self.pool.checkin(sandbox)
+        return sandbox
+
+    def prewarm(self, tenant: str, count: int = 1) -> int:
+        return self.pool.prewarm(tenant, count)
 
     # -------------------------------------------------------------- submit
 
@@ -113,12 +138,19 @@ class ServerlessScheduler:
         done: List[TaskRecord] = []
         n = 0
         requeue: List[Tuple[int, int, int]] = []
+        saturated: set = set()   # tenants found throttled this drain pass
         while self._queue and (max_tasks is None or n < max_tasks):
             _, _, task_id = heapq.heappop(self._queue)
             rec = self._records[task_id]
             tenant = rec.spec.tenant
             quota = self.quota(tenant)
-            if self._in_flight.get(tenant, 0) >= quota.max_tasks_in_flight:
+            if (
+                tenant in saturated
+                or self._in_flight.get(tenant, 0) >= quota.max_tasks_in_flight
+            ):
+                # skip this tenant for the remainder of the drain: once
+                # saturated, re-checking every queued record just churns
+                saturated.add(tenant)
                 rec.state = TaskState.THROTTLED
                 requeue.append((rec.spec.priority, task_id, task_id))
                 continue
@@ -132,11 +164,14 @@ class ServerlessScheduler:
         return done
 
     def _execute(self, rec: TaskRecord) -> None:
-        sandbox = self.sandbox_for(rec.spec.tenant)
         tenant = rec.spec.tenant
+        sandbox = self.pool.checkout(tenant)
+        poisoned = False
         self._in_flight[tenant] = self._in_flight.get(tenant, 0) + 1
         rec.state = TaskState.RUNNING
         try:
+            # retries reuse the same warm sandbox; the shared admission
+            # cache makes every attempt after the first skip re-verification
             while True:
                 rec.attempts += 1
                 try:
@@ -144,7 +179,9 @@ class ServerlessScheduler:
                     rec.state = TaskState.SUCCEEDED
                     break
                 except (SandboxViolation, BudgetExceeded) as e:
-                    # security/quota denials are terminal, never retried
+                    # security/quota denials are terminal, never retried;
+                    # the sandbox is poisoned and never returned to the pool
+                    poisoned = True
                     rec.state = TaskState.DENIED
                     rec.error = str(e)
                     break
@@ -156,6 +193,7 @@ class ServerlessScheduler:
         finally:
             rec.finished_at = time.time()
             self._in_flight[tenant] -= 1
+            self.pool.checkin(sandbox, discard=poisoned)
 
     # --------------------------------------------------------------- status
 

@@ -1,0 +1,126 @@
+"""Structured telemetry — one audit/metrics sink for every admission layer.
+
+The seed grew three divergent audit trails: ``Sandbox`` kept an ad-hoc
+``AuditEvent`` list, the scheduler kept task records, and the server kept
+nothing.  The paper's admission story (§III, §V) is *centrally* audited:
+every stage — image check, verification, budget, pool checkout — lands in
+one place so an operator can reconstruct exactly why a program was admitted
+or denied.  :class:`TelemetrySink` is that place: a bounded event log plus
+monotonic counters, shared by :mod:`~repro.core.admission`,
+:mod:`~repro.core.pool`, :class:`~repro.core.sandbox.Sandbox`,
+:class:`~repro.core.tasks.ServerlessScheduler` and the serving loop.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["TelemetryEvent", "TelemetrySink", "resolve_sink"]
+
+
+def resolve_sink(admission=None, telemetry=None) -> "TelemetrySink":
+    """One sink for every admission layer: the controller's sink wins.
+
+    Components accept both an ``admission`` controller and a ``telemetry``
+    sink; honoring a distinct ``telemetry`` next to a controller would
+    split the audit trail across two sinks, so the controller's own sink
+    takes precedence whenever a controller is supplied.
+    """
+    if admission is not None:
+        return admission.sink
+    return telemetry if telemetry is not None else TelemetrySink()
+
+
+@dataclass(frozen=True)
+class TelemetryEvent:
+    """One structured audit/metrics event.
+
+    ``source`` is the emitting subsystem (``"sandbox"``, ``"admission"``,
+    ``"pool"``, ``"scheduler"``, ``"server"``); ``kind`` is the event name
+    within it (``"run"``, ``"cache_hit"``, ``"evict"``, ...).
+    """
+
+    when: float
+    source: str
+    kind: str
+    tenant: str = ""
+    detail: str = ""
+    data: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def what(self) -> str:
+        """Back-compat alias for the seed's ``AuditEvent.what`` field."""
+        return self.kind
+
+    def get(self, key: str, default: Any = None) -> Any:
+        for k, v in self.data:
+            if k == key:
+                return v
+        return default
+
+
+class TelemetrySink:
+    """Bounded event log + counters shared across the control plane."""
+
+    def __init__(self, capacity: int = 4096) -> None:
+        self._events: "deque[TelemetryEvent]" = deque(maxlen=capacity)
+        self._counters: Dict[str, int] = {}
+
+    # ----------------------------------------------------------------- emit
+
+    def emit(
+        self,
+        source: str,
+        kind: str,
+        *,
+        tenant: str = "",
+        detail: str = "",
+        **data: Any,
+    ) -> TelemetryEvent:
+        ev = TelemetryEvent(
+            time.time(), source, kind, tenant, detail, tuple(sorted(data.items()))
+        )
+        self._events.append(ev)
+        name = f"{source}.{kind}"
+        self._counters[name] = self._counters.get(name, 0) + 1
+        return ev
+
+    def count(self, name: str, by: int = 1) -> None:
+        """Bump a bare counter with no event record (hot-path metrics)."""
+        self._counters[name] = self._counters.get(name, 0) + by
+
+    # ---------------------------------------------------------------- query
+
+    @property
+    def events(self) -> List[TelemetryEvent]:
+        return list(self._events)
+
+    def counters(self) -> Dict[str, int]:
+        return dict(self._counters)
+
+    def counter(self, name: str) -> int:
+        return self._counters.get(name, 0)
+
+    def query(
+        self,
+        source: Optional[str] = None,
+        kind: Optional[str] = None,
+        tenant: Optional[str] = None,
+    ) -> List[TelemetryEvent]:
+        out: List[TelemetryEvent] = []
+        for ev in self._events:
+            if source is not None and ev.source != source:
+                continue
+            if kind is not None and ev.kind != kind:
+                continue
+            if tenant is not None and ev.tenant != tenant:
+                continue
+            out.append(ev)
+        return out
+
+    def clear(self) -> None:
+        self._events.clear()
+        self._counters.clear()

@@ -3,6 +3,9 @@ os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=512 "
     + os.environ.get("XLA_FLAGS", "")
 )
+# dry-runs simulate the pod on forced *host* devices; without this an
+# accelerator-capable install hangs probing for real hardware first
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 # ^ MUST precede every other import: JAX locks the device count on first use.
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
@@ -214,7 +217,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
 
     # ---- analyses -----------------------------------------------------------
     try:
-        cost = compiled.cost_analysis() or {}
+        from repro.compat import cost_analysis as _ca
+        cost = _ca(compiled)
     except Exception as e:  # pragma: no cover
         cost = {"error": str(e)}
     try:

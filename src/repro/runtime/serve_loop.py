@@ -21,9 +21,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.admission import AdmissionController
 from repro.core.arena import PagedKVAllocator
 from repro.core.mm import MMConfig
+from repro.core.policy import SandboxViolation
+from repro.core.pool import SandboxPool
 from repro.core.sandbox import Sandbox
+from repro.core.sentry import BudgetExceeded
+from repro.core.telemetry import TelemetrySink, resolve_sink
 
 __all__ = ["Request", "ServerConfig", "Server"]
 
@@ -51,11 +56,28 @@ class ServerConfig:
 
 class Server:
     def __init__(self, model, params, cfg: ServerConfig,
-                 sandbox: Optional[Sandbox] = None):
+                 sandbox: Optional[Sandbox] = None,
+                 *,
+                 pool: Optional[SandboxPool] = None,
+                 admission: Optional[AdmissionController] = None,
+                 telemetry: Optional[TelemetrySink] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.sandbox = sandbox or Sandbox(tenant="serving")
+        self.telemetry = resolve_sink(admission, telemetry)
+        self.admission = admission or AdmissionController(sink=self.telemetry)
+        # postprocess sandboxes come from a warm pool; an explicit sandbox
+        # (back-compat) is adopted as the pool's first warm entry
+        self.pool = pool or SandboxPool(
+            admission=self.admission, telemetry=self.telemetry
+        )
+        self.sandbox = sandbox
+        if sandbox is not None:
+            self._postprocess_tenant = sandbox.tenant
+            self.pool.seed(sandbox)
+        else:
+            self._postprocess_tenant = "serving"
+            self.pool.prewarm("serving", 1)
         mm_cfg = (MMConfig.legacy if cfg.mm_legacy else MMConfig.modern)(
             granule=4096
         )
@@ -113,10 +135,18 @@ class Server:
                     r.done = True
                     r.latency_s = time.perf_counter() - t_start
                     if r.postprocess is not None:
-                        out = self.sandbox.run(
-                            r.postprocess, jnp.asarray(r.tokens, jnp.int32)
-                        )
-                        r.tokens = [int(t) for t in np.asarray(out.value)]
+                        sb = self.pool.checkout(self._postprocess_tenant)
+                        poisoned = False
+                        try:
+                            out = sb.run(
+                                r.postprocess, jnp.asarray(r.tokens, jnp.int32)
+                            )
+                            r.tokens = [int(t) for t in np.asarray(out.value)]
+                        except (SandboxViolation, BudgetExceeded):
+                            poisoned = True
+                            raise
+                        finally:
+                            self.pool.checkin(sb, discard=poisoned)
                     self.kv.drop_sequence(f"req{r.request_id}")
                     active.remove(r)
                     self.completed.append(r)
@@ -142,6 +172,12 @@ class Server:
         return state
 
     # ------------------------------------------------------------- report
+
+    def admission_report(self) -> Dict[str, Any]:
+        return {
+            "admission": self.admission.stats(),
+            "pool": self.pool.stats.as_dict(),
+        }
 
     def arena_report(self) -> Dict[str, Any]:
         return {

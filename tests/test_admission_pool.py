@@ -1,0 +1,302 @@
+"""Unified admission control plane: verification cache + warm sandbox pool."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    AdmissionController,
+    ArtifactRepository,
+    BudgetExceeded,
+    ImageDigestError,
+    LegacyFilterPolicy,
+    ModernEmulationPolicy,
+    Sandbox,
+    SandboxPool,
+    SandboxViolation,
+    ServerlessScheduler,
+    TaskSpec,
+    TaskState,
+    TelemetrySink,
+    TenantQuota,
+    DEFAULT_IMAGE,
+)
+
+
+def matmul(a, b):
+    return a @ b
+
+
+def evil(x):
+    return jax.pure_callback(
+        lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+    )
+
+
+# ---------------------------------------------------------------- admission
+
+
+def test_cache_hit_miss_counters():
+    ctl = AdmissionController()
+    pol = ModernEmulationPolicy()
+    args = (jnp.ones((4, 4)), jnp.ones((4, 4)))
+    t1 = ctl.admit(matmul, args, policy=pol)
+    t2 = ctl.admit(matmul, args, policy=pol)
+    assert not t1.cache_hit and t2.cache_hit
+    assert ctl.stats()["hits"] == 1 and ctl.stats()["misses"] == 1
+    assert t1.histogram == t2.histogram
+    # different abstract shapes → different program → miss
+    ctl.admit(matmul, (jnp.ones((2, 2)), jnp.ones((2, 2))), policy=pol)
+    assert ctl.stats()["misses"] == 2
+
+
+def test_kwarg_values_are_part_of_the_program():
+    """kwargs bake into the jaxpr as constants — a changed kwarg value is a
+    different program and must not share a cache entry."""
+    ctl = AdmissionController()
+    pol = ModernEmulationPolicy()
+    fn = lambda x, scale=1.0: (x * scale).sum()
+    t1 = ctl.admit(fn, (jnp.ones(3),), {"scale": 2.0}, policy=pol)
+    t2 = ctl.admit(fn, (jnp.ones(3),), {"scale": 3.0}, policy=pol)
+    t3 = ctl.admit(fn, (jnp.ones(3),), {"scale": 2.0}, policy=pol)
+    assert not t1.cache_hit and not t2.cache_hit and t3.cache_hit
+
+
+def test_cache_keyed_on_policy_change():
+    """An allowlist edit must not be served a stale admission."""
+    ctl = AdmissionController()
+    fn = lambda x: jax.lax.erf(x).sum()
+    x = (jnp.ones(4),)
+    legacy = LegacyFilterPolicy()
+    with pytest.raises(SandboxViolation):
+        ctl.admit(fn, x, policy=legacy)
+    patched = legacy.extended("erf")   # same policy *name*, new surface
+    assert not ctl.admit(fn, x, policy=patched).cache_hit
+    assert ctl.admit(fn, x, policy=patched).cache_hit
+
+
+def test_cache_invalidation():
+    ctl = AdmissionController()
+    pol = ModernEmulationPolicy()
+    args = (jnp.ones(3),)
+    fn = lambda x: x + 1
+    ctl.admit(fn, args, policy=pol)
+    assert ctl.stats()["entries"] == 1
+    assert ctl.invalidate(pol) == 1
+    assert ctl.stats()["entries"] == 0
+    assert not ctl.admit(fn, args, policy=pol).cache_hit
+
+
+def test_budget_precheck_uses_cached_totals():
+    ctl = AdmissionController()
+    pol = ModernEmulationPolicy()
+    sb = Sandbox(policy=pol, flop_budget=100.0, admission=ctl)
+    big = (jnp.ones((64, 64)), jnp.ones((64, 64)))
+    with pytest.raises(BudgetExceeded):
+        sb.run(matmul, *big)
+    # verification itself succeeded and is cached: a second attempt is a
+    # warm admission that still fails the budget pre-check
+    with pytest.raises(BudgetExceeded):
+        sb.run(matmul, *big)
+    assert ctl.stats()["hits"] == 1
+
+
+def test_image_digest_pinning():
+    ok = AdmissionController(allowed_image_digests={DEFAULT_IMAGE.digest})
+    ok.admit(matmul, (jnp.ones((2, 2)), jnp.ones((2, 2))),
+             policy=ModernEmulationPolicy(), image=DEFAULT_IMAGE)
+    pinned = AdmissionController(allowed_image_digests={"deadbeef"})
+    with pytest.raises(ImageDigestError):
+        pinned.admit(matmul, (jnp.ones((2, 2)), jnp.ones((2, 2))),
+                     policy=ModernEmulationPolicy(), image=DEFAULT_IMAGE)
+
+
+def test_sandbox_warm_admission_results_match():
+    sb = Sandbox(policy=ModernEmulationPolicy())
+    a, b = jnp.ones((8, 8)), jnp.ones((8, 8))
+    cold = sb.run(matmul, a, b)
+    warm = sb.run(matmul, a, b)
+    assert not cold.cache_hit and warm.cache_hit
+    assert cold.flops == warm.flops == 2 * 8 * 8 * 8
+    assert jnp.allclose(cold.value, warm.value)
+
+
+def test_registration_prewarms_execution_cache():
+    """§V.B registration populates the cache the execution layers read."""
+    ctl = AdmissionController()
+    repo = ArtifactRepository(ModernEmulationPolicy(), admission=ctl)
+    fn = lambda x: jax.nn.softmax(x)
+    rep = repo.register_op("softmax", "1.0", fn, (jnp.ones(4),))
+    assert rep.admitted
+    sb = Sandbox(policy=ModernEmulationPolicy(), admission=ctl)
+    out = sb.run(repo.resolve_op("softmax", "1.0"), jnp.ones(4))
+    assert out.cache_hit
+    assert ctl.stats()["hits"] == 1
+
+
+def test_closure_mutation_is_not_served_stale():
+    """Closed-over values bake into the jaxpr; mutating them must re-admit."""
+    ctl = AdmissionController()
+    sb = Sandbox(policy=ModernEmulationPolicy(), admission=ctl, mode="interpret")
+    c = [1.0]
+    udf = lambda x: (x * c[0]).sum()
+    assert float(sb.run(udf, jnp.arange(4.0)).value) == 6.0
+    c[0] = 2.0
+    assert float(sb.run(udf, jnp.arange(4.0)).value) == 12.0
+    assert ctl.stats()["misses"] == 2
+
+
+def test_sandbox_mode_validated():
+    with pytest.raises(ValueError):
+        Sandbox(mode="verfy")
+
+
+# --------------------------------------------------------------------- pool
+
+
+def test_pool_checkout_checkin_reuse():
+    pool = SandboxPool()
+    a = pool.checkout("alice")
+    pool.checkin(a)
+    b = pool.checkout("alice")
+    assert b is a                       # warm reuse
+    assert pool.stats.hits == 1 and pool.stats.misses == 1
+
+
+def test_pool_prewarm_and_stats():
+    pool = SandboxPool()
+    assert pool.prewarm("alice", 2) == 2
+    assert pool.idle_count("alice") == 2
+    pool.checkout("alice")
+    assert pool.stats.hits == 1 and pool.stats.misses == 0
+    assert pool.stats.prewarmed == 2
+
+
+def test_pool_per_tenant_isolation():
+    """A sandbox checked in by one tenant is never handed to another, and a
+    violation-poisoned sandbox is destroyed rather than recycled."""
+    pool = SandboxPool()
+    a = pool.checkout("alice")
+    pool.checkin(a)
+    m = pool.checkout("mallory")
+    assert m is not a
+    with pytest.raises(SandboxViolation):
+        m.run(evil, jnp.ones(2))
+    pool.checkin(m, discard=True)       # poisoned: never recycled
+    assert pool.stats.discards == 1
+    assert pool.idle_count("mallory") == 0
+    assert pool.checkout("alice") is a  # alice's warm sandbox untouched
+
+
+def test_pool_seeded_template_survives_discard():
+    """Replacing a discarded seeded sandbox keeps its policy and budgets."""
+    pool = SandboxPool()
+    restricted = Sandbox(tenant="serving", policy=LegacyFilterPolicy(),
+                         flop_budget=100.0)
+    pool.seed(restricted)
+    sb = pool.checkout("serving")
+    assert sb is restricted
+    pool.checkin(sb, discard=True)
+    fresh = pool.checkout("serving")
+    assert fresh is not restricted
+    assert fresh.policy.name == "legacy-filter"
+    with pytest.raises(BudgetExceeded):
+        fresh.run(matmul, jnp.ones((64, 64)), jnp.ones((64, 64)))
+
+
+def test_pool_lru_eviction():
+    pool = SandboxPool(max_idle_per_tenant=8, max_total_idle=2)
+    sbs = [pool.checkout(t) for t in ("a", "b", "c")]
+    for sb in sbs:
+        pool.checkin(sb)
+    assert pool.idle_count() == 2
+    assert pool.stats.evictions == 1
+    assert pool.idle_count("a") == 0    # oldest checkin evicted first
+
+
+# ---------------------------------------------------------------- scheduler
+
+
+def test_scheduler_resubmission_skips_reverify():
+    sched = ServerlessScheduler()
+    fn = lambda x: (x * 2).sum()
+    t1 = sched.submit(TaskSpec("alice", fn, (jnp.ones(4),)))
+    sched.run_pending()
+    t2 = sched.submit(TaskSpec("alice", fn, (jnp.ones(4),)))
+    sched.run_pending()
+    assert sched.record(t1).state is TaskState.SUCCEEDED
+    assert sched.record(t2).state is TaskState.SUCCEEDED
+    st = sched.admission.stats()
+    assert st["misses"] == 1 and st["hits"] == 1
+    assert sched.record(t2).result.cache_hit
+    # the second drain reused the warm sandbox too
+    assert sched.pool.stats.hits >= 1
+
+
+_RETRY_EXECS = {"n": 0}
+
+
+def test_scheduler_retry_reuses_cached_verification():
+    _RETRY_EXECS["n"] = 0
+
+    def flaky(x):
+        # fail at *execution* (concrete input), not during tracing, so the
+        # cached verification is what retries exercise; the counter is a
+        # module global, not closed-over state (mutating captured state
+        # deliberately invalidates the cache — see _captured_state)
+        if not isinstance(x, jax.core.Tracer):
+            _RETRY_EXECS["n"] += 1
+            if _RETRY_EXECS["n"] < 3:
+                raise OSError("transient")
+        return x.sum()
+
+    sched = ServerlessScheduler()
+    t = sched.submit(TaskSpec("t", flaky, (jnp.ones(2),), max_retries=3))
+    sched.run_pending()
+    assert sched.record(t).state is TaskState.SUCCEEDED
+    st = sched.admission.stats()
+    assert st["misses"] == 1 and st["hits"] == 2  # attempts 2 and 3 were warm
+
+
+def test_scheduler_violation_discards_sandbox():
+    sched = ServerlessScheduler()
+    bad = sched.submit(TaskSpec("mallory", evil, (jnp.ones(2),)))
+    good = sched.submit(TaskSpec("alice", lambda x: x.sum(), (jnp.ones(2),)))
+    sched.run_pending()
+    assert sched.record(bad).state is TaskState.DENIED
+    assert sched.record(good).state is TaskState.SUCCEEDED
+    assert sched.pool.stats.discards == 1
+    assert sched.pool.idle_count("mallory") == 0
+
+
+def test_scheduler_throttled_tenant_skipped_within_drain():
+    sched = ServerlessScheduler(
+        quotas={"busy": TenantQuota(max_tasks_in_flight=0)}
+    )
+    ids = [sched.submit(TaskSpec("busy", lambda x: x, (jnp.ones(1),)))
+           for _ in range(3)]
+    ok = sched.submit(TaskSpec("calm", lambda x: x.sum(), (jnp.ones(1),)))
+    done = sched.run_pending()
+    assert [r.task_id for r in done] == [ok]
+    # throttled records remain queued for a later drain
+    assert all(sched.record(i).state is TaskState.PENDING for i in ids)
+
+
+# ---------------------------------------------------------------- telemetry
+
+
+def test_one_sink_across_layers():
+    sink = TelemetrySink()
+    ctl = AdmissionController(sink=sink)
+    pool = SandboxPool(admission=ctl)
+    sb = pool.checkout("alice")
+    fn = lambda x: x + 1
+    sb.run(fn, jnp.ones(2))
+    sb.run(fn, jnp.ones(2))
+    pool.checkin(sb)
+    counters = sink.counters()
+    assert counters["pool.miss"] == 1
+    assert counters["admission.verified"] == 1
+    assert counters["admission.cache_hit"] == 1
+    assert counters["sandbox.run"] == 2
+    assert sink.query(source="sandbox", tenant="alice")

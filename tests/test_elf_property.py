@@ -2,6 +2,8 @@
 
 import zlib
 
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: collect/skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.elf import PAGE_SIZE, SELFWriter, read_self

@@ -1,5 +1,7 @@
 """Hypothesis property tests on the memory-manager invariants."""
 
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: collect/skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.mm import MemoryManager, MMConfig

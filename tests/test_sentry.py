@@ -4,7 +4,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional: only the property test below needs it, so the
+# rest of this module must collect and run without it.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (
     BudgetExceeded,
@@ -90,22 +97,23 @@ def test_budget_enforced():
         sb.run(lambda a, b: a @ b, jnp.ones((64, 64)), jnp.ones((64, 64)))
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    coefs=st.lists(st.floats(-2, 2, allow_nan=False), min_size=1, max_size=5),
-)
-def test_property_emulation_equivalence(coefs):
-    """Arbitrary polynomial pipelines: interpret == native execution."""
-    def udf(x):
-        acc = jnp.zeros_like(x)
-        for i, c in enumerate(coefs):
-            acc = acc + c * x ** (i + 1)
-        return jnp.tanh(acc).sum()
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        coefs=st.lists(st.floats(-2, 2, allow_nan=False), min_size=1, max_size=5),
+    )
+    def test_property_emulation_equivalence(coefs):
+        """Arbitrary polynomial pipelines: interpret == native execution."""
+        def udf(x):
+            acc = jnp.zeros_like(x)
+            for i, c in enumerate(coefs):
+                acc = acc + c * x ** (i + 1)
+            return jnp.tanh(acc).sum()
 
-    x = jnp.linspace(-1.0, 1.0, 8)
-    a = sandboxed(udf, ModernEmulationPolicy(), mode="verify")(x)
-    b = sandboxed(udf, ModernEmulationPolicy(), mode="interpret")(x)
-    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+        x = jnp.linspace(-1.0, 1.0, 8)
+        a = sandboxed(udf, ModernEmulationPolicy(), mode="verify")(x)
+        b = sandboxed(udf, ModernEmulationPolicy(), mode="interpret")(x)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
 
 
 def test_legacy_maintenance_treadmill():
