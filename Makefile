@@ -1,13 +1,29 @@
 PYTHON ?= python
 
-.PHONY: test bench dev-deps
+.PHONY: test lint bench bench-smoke ci dev-deps
 
 # tier-1 verification: the exact command CI and ROADMAP.md reference
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
 
+# same invocation as the CI lint job (config in ruff.toml)
+lint:
+	ruff check src tests benchmarks
+
 bench:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py
 
+# the CI bench-smoke job at identical tiny sizes; writes BENCH_*.json
+bench-smoke:
+	PYTHONPATH=src $(PYTHON) benchmarks/admission_bench.py \
+		--cold-iters 5 --warm-reps 200 --pool-reps 50 --size 64 \
+		--json-out BENCH_admission.json
+	PYTHONPATH=src $(PYTHON) benchmarks/pool_bench.py \
+		--requests 100 --watermark 4 --json-out BENCH_pool.json
+
+# everything the CI pipeline runs, locally
+ci: lint test bench-smoke
+
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
+	$(PYTHON) -m pip install "ruff>=0.4"

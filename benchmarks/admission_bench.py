@@ -13,8 +13,10 @@ startup with pooling/pre-warming.  Two measurements:
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,16 +35,22 @@ def udf(x, w1, w2):
     return jnp.sum((h @ w2) ** 2)
 
 
-def main() -> Dict[str, float]:
-    x = jnp.ones((256, 256))
-    w1 = jnp.ones((256, 256)) * 0.01
-    w2 = jnp.ones((256, 128)) * 0.01
+def main(
+    cold_iters: int = 20,
+    warm_reps: int = 2000,
+    pool_reps: int = 200,
+    size: int = 256,
+    json_out: Optional[str] = None,
+) -> Dict[str, float]:
+    x = jnp.ones((size, size))
+    w1 = jnp.ones((size, size)) * 0.01
+    w2 = jnp.ones((size, size // 2)) * 0.01
     args = (x, w1, w2)
     policy = ModernEmulationPolicy()
 
     # ---- cold vs warm admission --------------------------------------
     cold_times = []
-    for _ in range(20):
+    for _ in range(cold_iters):
         ctl = AdmissionController()          # fresh cache → cold path
         t0 = time.perf_counter()
         ctl.admit(udf, args, policy=policy)
@@ -51,7 +59,7 @@ def main() -> Dict[str, float]:
 
     ctl = AdmissionController()
     ctl.admit(udf, args, policy=policy)      # populate
-    reps = 2000
+    reps = warm_reps
     t0 = time.perf_counter()
     for _ in range(reps):
         ctl.admit(udf, args, policy=policy)
@@ -61,7 +69,7 @@ def main() -> Dict[str, float]:
     speedup = t_cold / t_warm
 
     # ---- pool checkout vs cold sandbox construction ------------------
-    reps = 200
+    reps = pool_reps
     t0 = time.perf_counter()
     for _ in range(reps):
         Sandbox(tenant="bench")
@@ -83,13 +91,28 @@ def main() -> Dict[str, float]:
     print(f"  cold sandbox construction    : {t_cold_boot*1e6:9.1f} us")
     print(f"  warm pool checkout+checkin   : {t_checkout*1e6:9.1f} us "
           f"({t_cold_boot/t_checkout:.0f}x faster)")
-    return {
+    result = {
         "cold_admission_us": t_cold * 1e6,
         "warm_admission_us": t_warm * 1e6,
         "warm_speedup_x": speedup,
         "pool_checkout_speedup_x": t_cold_boot / t_checkout,
     }
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump(result, fh, indent=2, sort_keys=True)
+        print(f"  wrote {json_out}")
+    return result
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cold-iters", type=int, default=20)
+    ap.add_argument("--warm-reps", type=int, default=2000)
+    ap.add_argument("--pool-reps", type=int, default=200)
+    ap.add_argument("--size", type=int, default=256,
+                    help="matrix side for the benched UDF (tiny for CI)")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write results as JSON (CI bench artifact)")
+    a = ap.parse_args()
+    main(cold_iters=a.cold_iters, warm_reps=a.warm_reps,
+         pool_reps=a.pool_reps, size=a.size, json_out=a.json_out)

@@ -15,7 +15,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.checkpoint import save_tree
-from repro.core.elf import PT_DYNAMIC, SELFWriter, build_prophet_like
+from repro.core.elf import SELFWriter, build_prophet_like
 from repro.core.loader import ImageLoader, SegfaultError
 
 

@@ -1,0 +1,125 @@
+"""Warm-pool checkout under async refill vs cold-build checkout.
+
+PR 1 hid sandbox construction behind a warm pool but still built cold on
+the checkout path whenever the free list ran dry.  This bench measures the
+scenario async refill fixes: every request *consumes* its sandbox (checkin
+with ``discard=True``, as after a policy violation or a single-use task),
+so without a refiller each checkout pays a cold build.
+
+* **cold**: no watermark, no refiller — every checkout builds.
+* **warm**: ``refill_watermark > 0`` with the pump running between
+  requests (explicit ``tick()`` by default, ``--threaded`` for the daemon
+  refiller) — checkouts pop a pre-built sandbox; the cold-checkout
+  counter (``seepp_pool_cold_checkout_total``) must stay 0 in steady
+  state.
+
+Prints p50/p95 per mode and the warm-vs-cold speedup (target >= 5x); with
+``--json-out`` also writes a ``BENCH_pool.json`` artifact for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+from repro.core import SandboxPool
+
+
+def _percentile(samples: List[float], q: float) -> float:
+    ordered = sorted(samples)
+    idx = min(len(ordered) - 1, int(q * len(ordered)))
+    return ordered[idx]
+
+
+def _drive(
+    pool: SandboxPool,
+    requests: int,
+    *,
+    tick: bool,
+    tenant: str = "bench",
+) -> List[float]:
+    """Checkout/consume ``requests`` times, returning checkout latencies."""
+    times: List[float] = []
+    for _ in range(requests):
+        t0 = time.perf_counter()
+        sb = pool.checkout(tenant)
+        times.append(time.perf_counter() - t0)
+        pool.checkin(sb, discard=True)       # consumed: force a rebuild
+        if tick:
+            pool.tick()
+        elif pool.refiller_running:
+            # think time between requests — the window the background
+            # refiller hides the build in; wait on the *clamped* target
+            # (a watermark above max_idle_per_tenant is never reached)
+            while pool.idle_count(tenant) < pool.refill_target(tenant):
+                time.sleep(1e-4)
+    return times
+
+
+def main(
+    requests: int = 200,
+    watermark: int = 4,
+    threaded: bool = False,
+    json_out: Optional[str] = None,
+) -> Dict[str, float]:
+    # ---- cold: every checkout builds on the hot path -----------------
+    cold_pool = SandboxPool()
+    cold = _drive(cold_pool, requests, tick=False)
+    assert cold_pool.stats.misses == requests
+
+    # ---- warm: async refill keeps the free list above watermark ------
+    warm_pool = SandboxPool(refill_watermark=watermark)
+    warm_pool.set_watermark("bench", watermark)
+    warm_pool.tick()                         # pre-warm to the watermark
+    if threaded:
+        warm_pool.start_refiller(interval_s=0.001)
+    try:
+        warm = _drive(warm_pool, requests, tick=not threaded)
+    finally:
+        warm_pool.stop_refiller()
+
+    cold_p50, cold_p95 = _percentile(cold, 0.5), _percentile(cold, 0.95)
+    warm_p50, warm_p95 = _percentile(warm, 0.5), _percentile(warm, 0.95)
+    speedup = cold_p50 / warm_p50 if warm_p50 > 0 else float("inf")
+
+    print("# pool_bench")
+    print(f"  requests={requests} watermark={watermark} "
+          f"pump={'thread' if threaded else 'tick'}")
+    print(f"  cold-build checkout : p50 {cold_p50*1e6:9.1f} us   "
+          f"p95 {cold_p95*1e6:9.1f} us")
+    print(f"  warm-pool checkout  : p50 {warm_p50*1e6:9.1f} us   "
+          f"p95 {warm_p95*1e6:9.1f} us   ({speedup:.0f}x faster)")
+    print(f"  warm cold_checkouts : {warm_pool.stats.misses} "
+          f"(steady-state target: 0)   refills: {warm_pool.stats.refills}")
+
+    result = {
+        "requests": requests,
+        "watermark": watermark,
+        "cold_checkout_p50_us": cold_p50 * 1e6,
+        "cold_checkout_p95_us": cold_p95 * 1e6,
+        "warm_checkout_p50_us": warm_p50 * 1e6,
+        "warm_checkout_p95_us": warm_p95 * 1e6,
+        "warm_speedup_x": speedup,
+        "warm_cold_checkout_total": warm_pool.stats.misses,
+        "warm_refill_total": warm_pool.stats.refills,
+    }
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump(result, fh, indent=2, sort_keys=True)
+        print(f"  wrote {json_out}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--watermark", type=int, default=4)
+    ap.add_argument("--threaded", action="store_true",
+                    help="drive the daemon refiller instead of tick()")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write results as JSON (CI bench artifact)")
+    a = ap.parse_args()
+    main(requests=a.requests, watermark=a.watermark,
+         threaded=a.threaded, json_out=a.json_out)

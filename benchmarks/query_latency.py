@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LegacyFilterPolicy, ModernEmulationPolicy, Sandbox
+from repro.core import LegacyFilterPolicy, Sandbox
 
 N = 400_000
 KEYS = 512

@@ -5,13 +5,13 @@ Prints ``name,value,derived`` CSV rows after each bench's own report.
 
 from __future__ import annotations
 
-import sys
 
 
 def main() -> None:
     from benchmarks import (
         admission_bench,
         loader_bench,
+        pool_bench,
         query_latency,
         roofline,
         sentry_overhead,
@@ -58,6 +58,14 @@ def main() -> None:
         ("admission_warm_speedup_x", ab["warm_speedup_x"], "target:>=10x"),
         ("pool_checkout_speedup_x", ab["pool_checkout_speedup_x"],
          "warm-sandbox startup hiding"),
+    ]
+
+    print("=" * 72)
+    pb = pool_bench.main()
+    rows += [
+        ("pool_refill_warm_speedup_x", pb["warm_speedup_x"], "target:>=5x"),
+        ("pool_refill_cold_checkouts", pb["warm_cold_checkout_total"],
+         "steady-state target:0"),
     ]
 
     print("=" * 72)

@@ -21,7 +21,6 @@ piece the unit tests can't cover.
 import time
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

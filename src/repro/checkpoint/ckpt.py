@@ -12,13 +12,13 @@ prophet failure on real checkpoints (tests/test_checkpoint.py).
 from __future__ import annotations
 
 import json
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-from repro.core.elf import LANE_TILE, PT_DYNAMIC, PT_LOAD, SELFWriter
-from repro.core.loader import ImageLoader, SegfaultError
+from repro.core.elf import LANE_TILE, PT_DYNAMIC, SELFWriter
+from repro.core.loader import ImageLoader
 
 __all__ = ["save_tree", "load_tree", "tree_to_records", "records_to_tree"]
 

@@ -12,7 +12,9 @@ Subsystem map (see DESIGN.md §2 for the paper↔TPU correspondence):
 ``pool``           warm sandbox pool: per-tenant checkout/checkin,
                    pre-warming, LRU eviction (the startup-latency fix)
 ``telemetry``      structured audit/metrics events; one sink for every
-                   admission layer
+                   admission layer (counters + latency histograms)
+``metrics``        Prometheus text exposition of the whole control plane
+                   (``/metrics`` endpoint + snapshot API)
 ``vma`` / ``mm``   §IV.A virtual-memory management: allocation-direction
                    alignment + hint preservation (the 182x fix)
 ``arena``          device-memory arena / paged-KV allocator built on ``mm``
@@ -38,6 +40,7 @@ from .artifacts import ArtifactRepository
 from .gofer import Capability, CapabilityError, Gofer
 from .image import DEFAULT_IMAGE, BaseImage, DtypePolicy, ImageSpec
 from .loader import ImageLoader, LoadedImage, SegfaultError
+from .metrics import MetricsHTTPServer, MetricsRegistry
 from .mm import MemoryManager, MMConfig
 from .policy import (
     DANGEROUS_PRIMITIVES,
@@ -57,7 +60,7 @@ from .sentry import (
     static_verify,
 )
 from .tasks import ServerlessScheduler, TaskSpec, TaskState, TenantQuota
-from .telemetry import TelemetryEvent, TelemetrySink
+from .telemetry import Histogram, TelemetryEvent, TelemetrySink
 from .vma import (
     MAX_MAP_COUNT,
     AddrRange,

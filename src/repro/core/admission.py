@@ -24,8 +24,9 @@ from __future__ import annotations
 
 import hashlib
 import pickle
+import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax
@@ -203,6 +204,7 @@ class AdmissionController:
         Raises :class:`ImageDigestError`, :class:`SandboxViolation` or
         :class:`~repro.core.sentry.BudgetExceeded`.
         """
+        t0 = time.perf_counter()
         kwargs = dict(kwargs or {})
         fn_name = getattr(fn, "__name__", "fn")
 
@@ -276,6 +278,13 @@ class AdmissionController:
                 entry.flops, entry.bytes, entry.eqn_count, entry.by_primitive
             )
 
+        # the cold/warm split is the cache's whole story — export it as two
+        # histograms so a scrape shows the amortized load-time cost
+        self.sink.observe(
+            "admission.warm_seconds" if cache_hit else "admission.cold_seconds",
+            time.perf_counter() - t0,
+            tenant=tenant,
+        )
         return AdmissionTicket(
             tenant=tenant,
             fn_name=fn_name,

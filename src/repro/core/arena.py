@@ -17,7 +17,7 @@ Fragment statistics from here feed ``benchmarks/vma_bench.py`` and the
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import numpy as np
 

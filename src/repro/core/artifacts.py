@@ -18,8 +18,8 @@ from __future__ import annotations
 
 import hashlib
 import pickle
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .admission import AdmissionController
 from .loader import ImageLoader

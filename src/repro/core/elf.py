@@ -18,14 +18,12 @@ See :mod:`repro.core.loader`.
 
 from __future__ import annotations
 
-import io
 import json
 import struct
 import zlib
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
-import numpy as np
 
 __all__ = [
     "PAGE_SIZE",

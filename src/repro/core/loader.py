@@ -17,23 +17,11 @@ the common case, not the corner case).
 
 from __future__ import annotations
 
-import json
 import zlib
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
 
-import numpy as np
 
-from .elf import (
-    PAGE_SIZE,
-    PT_DYNAMIC,
-    PT_LOAD,
-    BadImageError,
-    ProgramHeader,
-    SELFImage,
-    Section,
-    read_self,
-)
+from .elf import PAGE_SIZE, PT_LOAD, BadImageError, SELFImage, read_self
 
 __all__ = ["ImageLoader", "LoadedImage", "SegfaultError", "ZeroStats"]
 

@@ -1,0 +1,447 @@
+"""Metrics export — Prometheus text exposition for the admission plane.
+
+SEE++ credits much of its operability to *continuous measurement* of
+sandbox startup, admission and pool behavior; PR 1 gave every layer one
+:class:`~repro.core.telemetry.TelemetrySink`, but the counters were only
+reachable from Python.  :class:`MetricsRegistry` closes the loop: it
+renders the sink's counters and histograms, :class:`~repro.core.pool.
+SandboxPool` hit/miss/evict/refill stats, :class:`~repro.core.admission.
+AdmissionController` cache stats and per-tenant
+:class:`~repro.core.tasks.ServerlessScheduler` queue depths into the
+`Prometheus text exposition format`_, served over HTTP from
+:class:`MetricsHTTPServer` (the ``/metrics`` endpoint) and snapshotted by
+:meth:`MetricsRegistry.dump` for tests.
+
+.. _Prometheus text exposition format:
+   https://prometheus.io/docs/instrumenting/exposition_formats/
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .telemetry import Histogram, TelemetrySink
+
+__all__ = ["MetricsRegistry", "MetricsHTTPServer", "CONTENT_TYPE"]
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+# ---------------------------------------------------------------------------
+# text-format primitives
+# ---------------------------------------------------------------------------
+
+def escape_label_value(value: str) -> str:
+    """Escape a label value per the exposition format (\\ then " then \\n)."""
+    return (
+        str(value)
+        .replace("\\", "\\\\")
+        .replace('"', '\\"')
+        .replace("\n", "\\n")
+    )
+
+
+def escape_help(text: str) -> str:
+    """HELP lines escape backslash and newline, but not quotes."""
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def format_value(v: float) -> str:
+    f = float(v)
+    if math.isinf(f):
+        return "+Inf" if f > 0 else "-Inf"
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def _labels(pairs: Dict[str, str]) -> str:
+    if not pairs:
+        return ""
+    inner = ",".join(
+        f'{k}="{escape_label_value(v)}"' for k, v in sorted(pairs.items())
+    )
+    return "{" + inner + "}"
+
+
+class _Family:
+    """One metric family: HELP/TYPE header + sample lines."""
+
+    def __init__(self, name: str, kind: str, help_text: str) -> None:
+        self.name = name
+        self.kind = kind
+        self.help = help_text
+        self.samples: List[Tuple[str, Dict[str, str], float]] = []
+
+    def add(self, value: float, labels: Optional[Dict[str, str]] = None,
+            suffix: str = "") -> None:
+        self.samples.append((suffix, dict(labels or {}), float(value)))
+
+    def render(self) -> str:
+        lines = [
+            f"# HELP {self.name} {escape_help(self.help)}",
+            f"# TYPE {self.name} {self.kind}",
+        ]
+        for suffix, labels, value in self.samples:
+            lines.append(
+                f"{self.name}{suffix}{_labels(labels)} {format_value(value)}"
+            )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+class MetricsRegistry:
+    """Collects control-plane components and renders their live state.
+
+    Components are registered once and *read at render time* — the
+    registry holds no copies, so every scrape reflects the instant it was
+    served.  All metric names share a ``namespace_`` prefix (default
+    ``seepp_``) per Prometheus naming conventions.
+    """
+
+    def __init__(self, namespace: str = "seepp") -> None:
+        self.namespace = namespace
+        self._sinks: List[TelemetrySink] = []
+        self._pools: List[Any] = []
+        self._admissions: List[Any] = []
+        self._schedulers: List[Any] = []
+        self._gauges: List[Tuple[str, str, Callable[[], float]]] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ register
+
+    def register_sink(self, sink: TelemetrySink) -> "MetricsRegistry":
+        with self._lock:
+            if sink not in self._sinks:
+                self._sinks.append(sink)
+        return self
+
+    def register_pool(self, pool: Any) -> "MetricsRegistry":
+        with self._lock:
+            if pool not in self._pools:
+                self._pools.append(pool)
+        return self
+
+    def register_admission(self, controller: Any) -> "MetricsRegistry":
+        with self._lock:
+            if controller not in self._admissions:
+                self._admissions.append(controller)
+        return self
+
+    def register_scheduler(self, scheduler: Any) -> "MetricsRegistry":
+        with self._lock:
+            if scheduler not in self._schedulers:
+                self._schedulers.append(scheduler)
+        return self
+
+    def register_gauge(
+        self, name: str, help_text: str, fn: Callable[[], float]
+    ) -> "MetricsRegistry":
+        """Attach an arbitrary callable sampled at scrape time."""
+        with self._lock:
+            self._gauges.append((name, help_text, fn))
+        return self
+
+    # -------------------------------------------------------------- render
+
+    def _n(self, name: str) -> str:
+        return f"{self.namespace}_{name}" if self.namespace else name
+
+    def _collect(self) -> List[_Family]:
+        with self._lock:
+            sinks = list(self._sinks)
+            pools = list(self._pools)
+            admissions = list(self._admissions)
+            schedulers = list(self._schedulers)
+            gauges = list(self._gauges)
+
+        fams: List[_Family] = []
+
+        # --- telemetry counters: one family, labelled by source/kind -----
+        # merged across sinks first: emitting per-sink would produce
+        # duplicate series, which Prometheus rejects at scrape time
+        merged_counters: Dict[str, int] = {}
+        for sink in sinks:
+            for name, value in sink.counters().items():
+                merged_counters[name] = merged_counters.get(name, 0) + value
+        events = _Family(
+            self._n("events_total"), "counter",
+            "Telemetry counter by emitting subsystem and event kind.",
+        )
+        for name, value in sorted(merged_counters.items()):
+            source, _, kind = name.partition(".")
+            events.add(value, {"source": source, "kind": kind})
+        if events.samples:
+            fams.append(events)
+
+        # --- telemetry histograms (merged across sinks, same reason) -----
+        merged_hists: Dict[Tuple[str, str], Histogram] = {}
+        for sink in sinks:
+            for key, hist in sink.histograms().items():
+                seen = merged_hists.get(key)
+                if seen is None:
+                    merged_hists[key] = hist     # already a snapshot copy
+                elif seen.buckets == hist.buckets:
+                    seen.merge(hist)
+                # differing bucket layouts for the same (name, tenant) are
+                # a config error; keep the first rather than emit an
+                # inconsistent series
+        hist_fams: Dict[str, _Family] = {}
+        for (name, tenant), hist in sorted(merged_hists.items()):
+            metric = self._n(name.replace(".", "_"))
+            fam = hist_fams.get(metric)
+            if fam is None:
+                fam = hist_fams[metric] = _Family(
+                    metric, "histogram",
+                    f"Latency histogram for {name} (seconds).",
+                )
+            base = {"tenant": tenant} if tenant else {}
+            self._add_histogram(fam, hist, base)
+        fams.extend(hist_fams.values())
+
+        # --- pool stats ---------------------------------------------------
+        if pools:
+            fams.extend(self._pool_families(pools))
+
+        # --- admission cache stats ---------------------------------------
+        if admissions:
+            fams.extend(self._admission_families(admissions))
+
+        # --- scheduler ----------------------------------------------------
+        if schedulers:
+            fams.extend(self._scheduler_families(schedulers))
+
+        # --- ad-hoc gauges ------------------------------------------------
+        for name, help_text, fn in gauges:
+            fam = _Family(self._n(name), "gauge", help_text)
+            fam.add(float(fn()))
+            fams.append(fam)
+
+        return fams
+
+    @staticmethod
+    def _add_histogram(
+        fam: _Family, hist: Histogram, base_labels: Dict[str, str]
+    ) -> None:
+        for le, cum in hist.bucket_counts():
+            labels = dict(base_labels)
+            labels["le"] = format_value(le)
+            fam.add(cum, labels, suffix="_bucket")
+        fam.add(hist.sum, base_labels, suffix="_sum")
+        fam.add(hist.count, base_labels, suffix="_count")
+
+    def _pool_families(self, pools: List[Any]) -> List[_Family]:
+        # (stats key, metric name, help); "misses" feeds two families —
+        # checkout always builds cold when the free list is dry, so the
+        # paper-facing cold-checkout name is an alias of the miss counter
+        families = [
+            ("hits", "pool_hit_total",
+             "Checkouts served from a warm sandbox."),
+            ("misses", "pool_miss_total",
+             "Checkouts that found no idle sandbox."),
+            ("misses", "pool_cold_checkout_total",
+             "Cold sandbox builds on the checkout hot path "
+             "(alias of pool_miss_total)."),
+            ("evictions", "pool_evict_total",
+             "Idle sandboxes dropped by the LRU caps."),
+            ("discards", "pool_discard_total",
+             "Poisoned sandboxes destroyed at checkin."),
+            ("prewarmed", "pool_prewarm_total",
+             "Sandboxes built ahead of demand by explicit prewarm()."),
+            ("refills", "pool_refill_total",
+             "Sandboxes built by the background refiller."),
+            ("orphan_checkins", "pool_orphan_checkin_total",
+             "Checkins refused (unknown sandbox/tenant, double checkin, "
+             "or checkin after discard)."),
+        ]
+        fams: List[_Family] = []
+        merged: Dict[str, float] = {}
+        for pool in pools:
+            for key, value in pool.stats.as_dict().items():
+                merged[key] = merged.get(key, 0) + value
+        for key, name, help_text in families:
+            fam = _Family(self._n(name), "counter", help_text)
+            fam.add(merged.get(key, 0))
+            fams.append(fam)
+
+        idle = _Family(
+            self._n("pool_idle_sandboxes"), "gauge",
+            "Idle warm sandboxes per tenant.",
+        )
+        out = _Family(
+            self._n("pool_checked_out_sandboxes"), "gauge",
+            "Sandboxes currently checked out.",
+        )
+        total_out = 0
+        per_tenant: Dict[str, int] = {}
+        for pool in pools:
+            total_out += pool.checked_out()
+            for tenant in pool.tenants():
+                per_tenant[tenant] = (
+                    per_tenant.get(tenant, 0) + pool.idle_count(tenant)
+                )
+        for tenant, n in sorted(per_tenant.items()):
+            idle.add(n, {"tenant": tenant})
+        out.add(total_out)
+        fams += [idle, out]
+        return fams
+
+    def _admission_families(self, admissions: List[Any]) -> List[_Family]:
+        help_text = {
+            "hits": "Verification-cache hits (warm admissions).",
+            "misses": "Verification-cache misses (trace + verify).",
+            "evictions": "Cache entries evicted by the LRU cap.",
+            "invalidations": "Cache entries dropped by invalidate().",
+            "denials": "Programs denied at admission.",
+        }
+        metric_name = {
+            "hits": "admission_cache_hit_total",
+            "misses": "admission_cache_miss_total",
+            "evictions": "admission_cache_evict_total",
+            "invalidations": "admission_cache_invalidate_total",
+            "denials": "admission_denied_total",
+        }
+        merged: Dict[str, int] = {}
+        for ctl in admissions:
+            for key, value in ctl.stats().items():
+                merged[key] = merged.get(key, 0) + value
+        fams: List[_Family] = []
+        for key, text in help_text.items():
+            fam = _Family(self._n(metric_name[key]), "counter", text)
+            fam.add(merged.get(key, 0))
+            fams.append(fam)
+        entries = _Family(
+            self._n("admission_cache_entries"), "gauge",
+            "Live verification-cache entries.",
+        )
+        entries.add(merged.get("entries", 0))
+        fams.append(entries)
+        return fams
+
+    def _scheduler_families(self, schedulers: List[Any]) -> List[_Family]:
+        depth = _Family(
+            self._n("scheduler_queue_depth"), "gauge",
+            "Pending tasks per tenant.",
+        )
+        flight = _Family(
+            self._n("scheduler_in_flight"), "gauge",
+            "Running tasks per tenant.",
+        )
+        states = _Family(
+            self._n("scheduler_tasks_total"), "counter",
+            "Tasks by terminal/current state.",
+        )
+        depths: Dict[str, int] = {}
+        flights: Dict[str, int] = {}
+        by_state: Dict[str, int] = {}
+        for sched in schedulers:
+            for tenant, n in sched.queue_depths().items():
+                depths[tenant] = depths.get(tenant, 0) + n
+            for tenant, n in sched.in_flight().items():
+                flights[tenant] = flights.get(tenant, 0) + n
+            for state, n in sched.stats().items():
+                by_state[state] = by_state.get(state, 0) + n
+        for tenant, n in sorted(depths.items()):
+            depth.add(n, {"tenant": tenant})
+        for tenant, n in sorted(flights.items()):
+            flight.add(n, {"tenant": tenant})
+        for state, n in sorted(by_state.items()):
+            states.add(n, {"state": state})
+        return [depth, flight, states]
+
+    # -------------------------------------------------------------- output
+
+    def render(self) -> str:
+        """The full ``/metrics`` payload (trailing newline included)."""
+        return "\n".join(f.render() for f in self._collect()) + "\n"
+
+    def dump(self) -> Dict[str, Any]:
+        """JSON-able snapshot of every sample, for tests and benches.
+
+        ``{metric_name: {label_string: value}}`` — label_string is the
+        rendered ``{k="v"}`` form ("" for unlabelled samples).
+        """
+        out: Dict[str, Dict[str, float]] = {}
+        for fam in self._collect():
+            for suffix, labels, value in fam.samples:
+                out.setdefault(fam.name + suffix, {})[_labels(labels)] = value
+        return out
+
+    def to_json(self) -> str:
+        return json.dumps(self.dump(), sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoint
+# ---------------------------------------------------------------------------
+
+class MetricsHTTPServer:
+    """Background-thread HTTP server exposing ``GET /metrics``.
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port``).
+    ``GET /metrics.json`` serves the :meth:`MetricsRegistry.dump` snapshot
+    for tooling that prefers JSON.
+    """
+
+    def __init__(
+        self,
+        registry: MetricsRegistry,
+        port: int = 0,
+        host: str = "127.0.0.1",
+    ) -> None:
+        self.registry = registry
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(h) -> None:  # noqa: N805 - http.server idiom
+                if h.path.split("?", 1)[0] in ("/metrics", "/"):
+                    body = registry.render().encode()
+                    h.send_response(200)
+                    h.send_header("Content-Type", CONTENT_TYPE)
+                    h.send_header("Content-Length", str(len(body)))
+                    h.end_headers()
+                    h.wfile.write(body)
+                elif h.path.split("?", 1)[0] == "/metrics.json":
+                    body = registry.to_json().encode()
+                    h.send_response(200)
+                    h.send_header("Content-Type", "application/json")
+                    h.send_header("Content-Length", str(len(body)))
+                    h.end_headers()
+                    h.wfile.write(body)
+                else:
+                    h.send_error(404)
+
+            def log_message(h, fmt: str, *args: Any) -> None:
+                pass  # scrapes must not spam the engine's stdout
+
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._httpd.daemon_threads = True
+        self.host = host
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever,
+            name="seepp-metrics",
+            daemon=True,
+        )
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+    def __enter__(self) -> "MetricsHTTPServer":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

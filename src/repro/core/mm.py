@@ -24,7 +24,7 @@ benchmarked in ``benchmarks/vma_bench.py``.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from .vma import (
@@ -33,7 +33,6 @@ from .vma import (
     Direction,
     FileRangeAllocator,
     HostMapping,
-    OutOfMemoryError,
     VMA,
     VMAExhaustedError,
     VMASet,

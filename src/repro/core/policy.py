@@ -21,8 +21,8 @@ In this framework the "syscall" is the JAX **primitive** (DESIGN.md §2).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import FrozenSet, Optional, Set
+from dataclasses import dataclass
+from typing import FrozenSet
 
 __all__ = [
     "SandboxViolation",

@@ -25,13 +25,13 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax
 import numpy as np
 from jax.extend import core as jex_core
 
-from .policy import PolicyDecision, SandboxPolicy, SandboxViolation
+from .policy import SandboxPolicy
 
 __all__ = [
     "ResourceMeter",

@@ -21,9 +21,8 @@ import enum
 import heapq
 import itertools
 import time
-import traceback
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
 
 from .admission import AdmissionController
 from .policy import SandboxViolation
@@ -31,6 +30,9 @@ from .pool import SandboxPool
 from .sandbox import Sandbox, SandboxResult
 from .sentry import BudgetExceeded
 from .telemetry import TelemetrySink, resolve_sink
+
+if TYPE_CHECKING:
+    from .metrics import MetricsRegistry
 
 __all__ = ["TaskState", "TaskSpec", "TaskRecord", "ServerlessScheduler", "TenantQuota"]
 
@@ -84,6 +86,7 @@ class ServerlessScheduler:
         admission: Optional[AdmissionController] = None,
         pool: Optional[SandboxPool] = None,
         telemetry: Optional[TelemetrySink] = None,
+        refill_watermark: int = 0,
     ) -> None:
         self.telemetry = resolve_sink(admission, telemetry)
         self.admission = admission or AdmissionController(sink=self.telemetry)
@@ -91,6 +94,7 @@ class ServerlessScheduler:
         self._quotas = quotas or {}
         self.pool = pool or SandboxPool(
             factory=lambda tenant: self._factory(tenant, self.quota(tenant)),
+            refill_watermark=refill_watermark,
             admission=self.admission,
             telemetry=self.telemetry,
         )
@@ -194,6 +198,13 @@ class ServerlessScheduler:
             rec.finished_at = time.time()
             self._in_flight[tenant] -= 1
             self.pool.checkin(sandbox, discard=poisoned)
+            # end-to-end task latency (queue wait + all attempts), the
+            # per-tenant histogram the /metrics endpoint exports
+            self.telemetry.observe(
+                "scheduler.task_seconds",
+                rec.finished_at - rec.submitted_at,
+                tenant=tenant,
+            )
 
     # --------------------------------------------------------------- status
 
@@ -205,3 +216,27 @@ class ServerlessScheduler:
         for rec in self._records.values():
             out[rec.state.value] = out.get(rec.state.value, 0) + 1
         return out
+
+    def queue_depths(self) -> Dict[str, int]:
+        """Pending tasks per tenant (the ``/metrics`` queue-depth gauge)."""
+        out: Dict[str, int] = {}
+        for _, _, task_id in self._queue:
+            tenant = self._records[task_id].spec.tenant
+            out[tenant] = out.get(tenant, 0) + 1
+        return out
+
+    def in_flight(self) -> Dict[str, int]:
+        """Currently-running tasks per tenant."""
+        return {t: n for t, n in self._in_flight.items() if n}
+
+    def metrics_registry(self, namespace: str = "seepp") -> "MetricsRegistry":
+        """A registry covering this scheduler's whole control plane."""
+        from .metrics import MetricsRegistry
+
+        return (
+            MetricsRegistry(namespace)
+            .register_sink(self.telemetry)
+            .register_admission(self.admission)
+            .register_pool(self.pool)
+            .register_scheduler(self)
+        )

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import bisect
 import enum
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Iterator, List, Optional, Tuple
 
 __all__ = [

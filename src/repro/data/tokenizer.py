@@ -8,7 +8,7 @@ modulo when a model's vocab is smaller than 256 + specials.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Sequence
 
 import numpy as np

@@ -14,7 +14,6 @@ q 128 KiB + k/v 2×128 KiB + scores 512 KiB + acc 128 KiB ≈ 1 MiB ≪ 16 MiB.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ what DCN can sustain).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import numpy as np
@@ -30,6 +31,15 @@ def main() -> None:
     ap.add_argument("--legacy-arena", action="store_true",
                     help="A/B: run the KV arena under the paper's buggy "
                          "legacy allocator")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus text metrics on "
+                         "http://127.0.0.1:PORT/metrics (0 = ephemeral)")
+    ap.add_argument("--pool-watermark", type=int, default=0,
+                    help="keep this many warm postprocess sandboxes via "
+                         "the background refiller (0 = off)")
+    ap.add_argument("--hold", type=float, default=0.0, metavar="SECONDS",
+                    help="keep the process (and /metrics) alive after the "
+                         "batch completes, e.g. to scrape it")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -37,8 +47,11 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(0))
     srv = Server(model, params, ServerConfig(
         max_batch=args.max_batch, max_seq=args.max_seq,
-        mm_legacy=args.legacy_arena,
+        mm_legacy=args.legacy_arena, pool_watermark=args.pool_watermark,
     ))
+    if args.metrics_port is not None:
+        endpoint = srv.serve_metrics(port=args.metrics_port)
+        print(f"[serve] metrics: {endpoint.url}")
     rng = np.random.default_rng(0)
     reqs = [
         Request(
@@ -55,6 +68,14 @@ def main() -> None:
               f"latency {r.latency_s*1e3:.0f}ms")
     print(f"[serve] arena ({'legacy' if args.legacy_arena else 'modern'}): "
           f"{json.dumps(srv.arena_report()['mm_stats'])}")
+    if args.metrics_port is not None:
+        pool = {k: v for k, v in srv.dump_metrics().items()
+                if k.startswith("seepp_pool")}
+        print(f"[serve] pool metrics: {json.dumps(pool)}")
+        if args.hold > 0:
+            print(f"[serve] holding /metrics open for {args.hold:.0f}s ...")
+            time.sleep(args.hold)
+    srv.close()
 
 
 if __name__ == "__main__":

@@ -2,19 +2,12 @@
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.optim import (
-    AdamWConfig,
-    ScheduleConfig,
-    adamw_init,
-    adamw_update,
-    lr_at,
-)
+from repro.optim import AdamWConfig, ScheduleConfig, adamw_update, lr_at
 
 __all__ = ["make_train_step", "make_prefill_fn", "make_decode_fn", "make_batch_stub"]
 

@@ -14,11 +14,8 @@ Example (CPU, reduced config)::
 from __future__ import annotations
 
 import argparse
-import json
-from pathlib import Path
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_reduced, list_archs

@@ -23,12 +23,10 @@ waste is visible in the roofline useful-FLOP ratio and is attacked in
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .common import ArchConfig, axis_size, constrain, rms_norm, rope, softcap
 

@@ -11,10 +11,9 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-import dataclasses
 import math
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

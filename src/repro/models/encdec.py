@@ -10,7 +10,7 @@ LayerNorm (with bias) throughout, per Whisper (arXiv:2212.04356).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -269,14 +269,14 @@ class EncDecLM:
 
         # §Perf-C2: cache stack in the carry, per-layer slice/insert/write
         def body(carry, xs):
-            h, ck_stack, cv_stack, l = carry
+            h, ck_stack, cv_stack, lyr = carry
             p, xk, xv = xs
             a = layer_norm(h, p["ln1"]["scale"], p["ln1"]["bias"])
             q = (a @ p["self_attn"]["wq"]).reshape(B, H, hd) + p["self_attn"]["bq"]
             k = (a @ p["self_attn"]["wk"]).reshape(B, H, hd)
             v = (a @ p["self_attn"]["wv"]).reshape(B, H, hd) + p["self_attn"]["bv"]
-            ck = jax.lax.dynamic_index_in_dim(ck_stack, l, 0, keepdims=False)
-            cv = jax.lax.dynamic_index_in_dim(cv_stack, l, 0, keepdims=False)
+            ck = jax.lax.dynamic_index_in_dim(ck_stack, lyr, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_stack, lyr, 0, keepdims=False)
             ck = ck.at[bidx, pos].set(k.astype(ck.dtype))
             cv = cv.at[bidx, pos].set(v.astype(cv.dtype))
             s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32) / math.sqrt(hd),
@@ -300,10 +300,10 @@ class EncDecLM:
             m = jax.nn.gelu(m @ p["mlp"]["w1"] + p["mlp"]["b1"])
             h = h + (m @ p["mlp"]["w2"] + p["mlp"]["b2"])
             ck_stack = jax.lax.dynamic_update_slice_in_dim(
-                ck_stack, ck[None], l, 0)
+                ck_stack, ck[None], lyr, 0)
             cv_stack = jax.lax.dynamic_update_slice_in_dim(
-                cv_stack, cv[None], l, 0)
-            return (h, ck_stack, cv_stack, l + 1), None
+                cv_stack, cv[None], lyr, 0)
+            return (h, ck_stack, cv_stack, lyr + 1), None
 
         (h, ck, cv, _), _ = jax.lax.scan(
             body,

@@ -14,18 +14,13 @@ so training memory is O(T/C·state + C·tokens).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .attention import (
-    attention_block,
-    decode_attn,
-    init_attn_params,
-    update_cache,
-)
+from .attention import attention_block, decode_attn, init_attn_params
 from .common import ArchConfig, constrain, gated_mlp, rms_norm, rope, take_embedding
 
 __all__ = ["HybridLM", "ssm_scan", "ssm_step"]
@@ -273,7 +268,7 @@ class HybridLM:
         # §Perf-C2: cache stack rides the carry; per-layer slice → token
         # insert → write-back (see transformer.py)
         def body(carry, xs):
-            h, ck_stack, cv_stack, hs_stack, l = carry
+            h, ck_stack, cv_stack, hs_stack, lyr = carry
             p, window = xs
             a_in = rms_norm(h, p["ln1"], cfg.norm_eps)
             q = jnp.einsum("bd,dhk->bhk", a_in, p["attn"]["wq"])
@@ -281,9 +276,9 @@ class HybridLM:
             v = jnp.einsum("bd,dhk->bhk", a_in, p["attn"]["wv"])
             q = rope(q[:, None], pos[:, None], cfg.rope_base)[:, 0]
             k = rope(k[:, None], pos[:, None], cfg.rope_base)[:, 0]
-            ck = jax.lax.dynamic_index_in_dim(ck_stack, l, 0, keepdims=False)
-            cv = jax.lax.dynamic_index_in_dim(cv_stack, l, 0, keepdims=False)
-            hs = jax.lax.dynamic_index_in_dim(hs_stack, l, 0, keepdims=False)
+            ck = jax.lax.dynamic_index_in_dim(ck_stack, lyr, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_stack, lyr, 0, keepdims=False)
+            hs = jax.lax.dynamic_index_in_dim(hs_stack, lyr, 0, keepdims=False)
             ck = ck.at[b_idx, pos].set(k.astype(ck.dtype))
             cv = cv.at[b_idx, pos].set(v.astype(cv.dtype))
             attn_o = decode_attn(q, ck, cv, pos, cfg, window=window,
@@ -309,12 +304,12 @@ class HybridLM:
             m = gated_mlp(m, p["mlp"]["wu"], p["mlp"]["wg"], p["mlp"]["wd"],
                           cfg.activation)
             ck_stack = jax.lax.dynamic_update_slice_in_dim(
-                ck_stack, ck[None], l, 0)
+                ck_stack, ck[None], lyr, 0)
             cv_stack = jax.lax.dynamic_update_slice_in_dim(
-                cv_stack, cv[None], l, 0)
+                cv_stack, cv[None], lyr, 0)
             hs_stack = jax.lax.dynamic_update_slice_in_dim(
-                hs_stack, hs[None].astype(hs_stack.dtype), l, 0)
-            return (h + m, ck_stack, cv_stack, hs_stack, l + 1), None
+                hs_stack, hs[None].astype(hs_stack.dtype), lyr, 0)
+            return (h + m, ck_stack, cv_stack, hs_stack, lyr + 1), None
 
         (h, ck, cv, ssm_h, _), _ = jax.lax.scan(
             body,

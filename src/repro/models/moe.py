@@ -23,12 +23,10 @@ renormalized) and ``sigmoid_top1`` (llama4 scout).  A shared-expert branch
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map

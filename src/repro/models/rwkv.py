@@ -19,14 +19,12 @@ this is why rwkv6-3b runs the long_500k cell.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .common import ArchConfig, constrain, rms_norm, softcap, take_embedding
+from .common import ArchConfig, constrain, rms_norm, take_embedding
 
 __all__ = ["RwkvLM", "wkv6_scan", "wkv6_step"]
 

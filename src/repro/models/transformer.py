@@ -14,20 +14,12 @@ API (shared by every family, see ``model.py``):
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .attention import (
-    attention_block,
-    attn_params_shape,
-    decode_attn,
-    init_attn_params,
-    update_cache,
-)
+from .attention import attention_block, decode_attn, init_attn_params
 from .common import (
     ArchConfig,
     constrain,
@@ -39,7 +31,7 @@ from .common import (
     softcap,
     take_embedding,
 )
-from .moe import init_moe_params, moe_block, moe_params_shape
+from .moe import init_moe_params, moe_block
 
 __all__ = ["TransformerLM"]
 
@@ -278,7 +270,7 @@ class TransformerLM:
         # a token-sized in-place scatter — carrying it as scan xs/ys made
         # XLA round-trip the full stack (convert→DUS→convert) every layer.
         def body(carry, xs):
-            h, ck_stack, cv_stack, l = carry
+            h, ck_stack, cv_stack, lyr = carry
             p, window, base = xs
             a = rms_norm(h, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norms)
             q = jnp.einsum("bd,dhk->bhk", a, p["attn"]["wq"])
@@ -295,17 +287,17 @@ class TransformerLM:
             # back — bounded to ~3 layer-cache sweeps per layer and XLA
             # can alias the stack carry (a mixed-dynamic scatter into the
             # stack forced full-stack copies instead)
-            ck = jax.lax.dynamic_index_in_dim(ck_stack, l, 0, keepdims=False)
-            cv = jax.lax.dynamic_index_in_dim(cv_stack, l, 0, keepdims=False)
+            ck = jax.lax.dynamic_index_in_dim(ck_stack, lyr, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_stack, lyr, 0, keepdims=False)
             ck = ck.at[b_idx, pos].set(k.astype(ck.dtype))
             cv = cv.at[b_idx, pos].set(v.astype(cv.dtype))
             spec = ("data", None, "model", None) if self.decode_layout == "heads" \
                 else ("data", "model", None, None)
             ck, cv = constrain(ck, *spec), constrain(cv, *spec)
             ck_stack = jax.lax.dynamic_update_slice_in_dim(
-                ck_stack, ck[None], l, 0)
+                ck_stack, ck[None], lyr, 0)
             cv_stack = jax.lax.dynamic_update_slice_in_dim(
-                cv_stack, cv[None], l, 0)
+                cv_stack, cv[None], lyr, 0)
             o = decode_attn(q, ck, cv, pos, cfg, window=window,
                             layout=self.decode_layout)
             o = o.astype(h.dtype) @ p["attn"]["wo"]
@@ -321,7 +313,7 @@ class TransformerLM:
                               cfg.activation)
             if cfg.post_norms:
                 m = rms_norm(m, p["ln2_post"], cfg.norm_eps, plus_one=True)
-            return (h + m, ck_stack, cv_stack, l + 1), None
+            return (h + m, ck_stack, cv_stack, lyr + 1), None
 
         (h, cache_k, cache_v, _), _ = jax.lax.scan(
             body,

@@ -17,8 +17,6 @@ knob (what to compress, where the residual lives).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

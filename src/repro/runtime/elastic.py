@@ -11,9 +11,8 @@ how a production job degrades when it loses a slice.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
-import jax
 
 __all__ = ["plan_mesh", "ElasticController"]
 

@@ -20,7 +20,7 @@ import threading
 import time
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Set
+from typing import Callable, Dict, List, Set
 
 __all__ = ["HeartbeatMonitor", "StragglerDetector", "FailureInjector",
            "WorkerFailure"]

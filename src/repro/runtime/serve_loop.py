@@ -12,7 +12,6 @@ the Sandbox.
 
 from __future__ import annotations
 
-import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -23,6 +22,7 @@ import numpy as np
 
 from repro.core.admission import AdmissionController
 from repro.core.arena import PagedKVAllocator
+from repro.core.metrics import MetricsHTTPServer, MetricsRegistry
 from repro.core.mm import MMConfig
 from repro.core.policy import SandboxViolation
 from repro.core.pool import SandboxPool
@@ -52,6 +52,7 @@ class ServerConfig:
     tokens_per_page: int = 16
     greedy: bool = True
     mm_legacy: bool = False              # paper A/B: legacy vs modern arena
+    pool_watermark: int = 0              # >0: refill postprocess pool async
 
 
 class Server:
@@ -69,7 +70,9 @@ class Server:
         # postprocess sandboxes come from a warm pool; an explicit sandbox
         # (back-compat) is adopted as the pool's first warm entry
         self.pool = pool or SandboxPool(
-            admission=self.admission, telemetry=self.telemetry
+            admission=self.admission,
+            telemetry=self.telemetry,
+            refill_watermark=cfg.pool_watermark,
         )
         self.sandbox = sandbox
         if sandbox is not None:
@@ -78,6 +81,16 @@ class Server:
         else:
             self._postprocess_tenant = "serving"
             self.pool.prewarm("serving", 1)
+        if cfg.pool_watermark > 0:
+            self.pool.set_watermark(self._postprocess_tenant, cfg.pool_watermark)
+            self.pool.start_refiller()
+        self.metrics = (
+            MetricsRegistry()
+            .register_sink(self.telemetry)
+            .register_admission(self.admission)
+            .register_pool(self.pool)
+        )
+        self._metrics_server: Optional[MetricsHTTPServer] = None
         mm_cfg = (MMConfig.legacy if cfg.mm_legacy else MMConfig.modern)(
             granule=4096
         )
@@ -151,6 +164,11 @@ class Server:
                     active.remove(r)
                     self.completed.append(r)
                     retired = True
+                    self.telemetry.count("server.request")
+                    self.telemetry.observe(
+                        "server.request_seconds", r.latency_s,
+                        tenant=self._postprocess_tenant,
+                    )
             if retired and (queue or active):
                 state = None                       # rebatch after retirement
         return self.completed
@@ -170,6 +188,31 @@ class Server:
             self.params, jnp.asarray(toks), max_seq=self.cfg.max_seq
         )
         return state
+
+    # ------------------------------------------------------------ metrics
+
+    def serve_metrics(self, port: int = 0, host: str = "127.0.0.1") -> MetricsHTTPServer:
+        """Expose ``GET /metrics`` (Prometheus text format) over HTTP.
+
+        Idempotent: returns the already-running endpoint if one exists.
+        ``port=0`` binds an ephemeral port; read it from ``.port``.
+        """
+        if self._metrics_server is None:
+            self._metrics_server = MetricsHTTPServer(
+                self.metrics, port=port, host=host
+            )
+        return self._metrics_server
+
+    def dump_metrics(self) -> Dict[str, Any]:
+        """Snapshot of every exported sample (tests/tooling; no HTTP)."""
+        return self.metrics.dump()
+
+    def close(self) -> None:
+        """Stop the metrics endpoint and the pool's background refiller."""
+        if self._metrics_server is not None:
+            self._metrics_server.close()
+            self._metrics_server = None
+        self.pool.stop_refiller()
 
     # ------------------------------------------------------------- report
 

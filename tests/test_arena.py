@@ -2,7 +2,7 @@
 
 import numpy as np
 
-from repro.core.arena import DeviceArena, PagedKVAllocator
+from repro.core.arena import PagedKVAllocator
 from repro.core.mm import MMConfig
 
 G = 64 * 1024

@@ -1,6 +1,5 @@
 """Hypothesis property tests on the SELF format and loader semantics."""
 
-import zlib
 
 import pytest
 pytest.importorskip("hypothesis")  # optional dep: collect/skip cleanly without it

@@ -2,9 +2,7 @@
 
 import pytest
 
-from repro.core.elf import (
-    PAGE_SIZE, PT_DYNAMIC, SELFWriter, build_prophet_like, read_self,
-)
+from repro.core.elf import PAGE_SIZE, SELFWriter, build_prophet_like, read_self
 from repro.core.loader import ImageLoader, SegfaultError
 
 

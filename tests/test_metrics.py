@@ -1,0 +1,311 @@
+"""Prometheus text exposition + /metrics endpoint + snapshot API."""
+
+import re
+import urllib.error
+import urllib.request
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    AdmissionController,
+    MetricsHTTPServer,
+    MetricsRegistry,
+    ModernEmulationPolicy,
+    Sandbox,
+    SandboxPool,
+    ServerlessScheduler,
+    TaskSpec,
+    TelemetrySink,
+)
+from repro.core.metrics import (
+    CONTENT_TYPE,
+    escape_help,
+    escape_label_value,
+    format_value,
+)
+from repro.core.telemetry import Histogram
+
+SAMPLE_RE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*"          # metric name
+    r"(\{[^{}]*\})?"                       # optional labels
+    r" -?(\d+(\.\d+)?([eE]-?\d+)?|\+Inf)$"  # value
+)
+
+
+def full_plane():
+    """A scheduler-rooted control plane with some traffic on it."""
+    sink = TelemetrySink()
+    ctl = AdmissionController(sink=sink)
+    sched = ServerlessScheduler(admission=ctl, refill_watermark=1)
+    fn = lambda x: (x * 2).sum()
+    sched.submit(TaskSpec("alice", fn, (jnp.ones(4),)))
+    sched.submit(TaskSpec("alice", fn, (jnp.ones(4),)))
+    sched.run_pending()
+    sched.pool.tick()
+    return sched
+
+
+# ------------------------------------------------------------- text format
+
+
+def test_render_is_valid_exposition_format():
+    text = full_plane().metrics_registry().render()
+    assert text.endswith("\n")
+    seen_types = {}
+    for line in text.rstrip("\n").split("\n"):
+        if line.startswith("# HELP "):
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ")
+            assert kind in ("counter", "gauge", "histogram")
+            assert name not in seen_types, "duplicate family"
+            seen_types[name] = kind
+            continue
+        assert SAMPLE_RE.match(line), f"bad sample line: {line!r}"
+    # every advertised subsystem is covered
+    for family in (
+        "seepp_events_total",              # telemetry counters
+        "seepp_pool_hit_total",
+        "seepp_pool_refill_total",
+        "seepp_pool_cold_checkout_total",
+        "seepp_admission_cache_hit_total",
+        "seepp_admission_cache_entries",
+        "seepp_scheduler_queue_depth",
+        "seepp_scheduler_tasks_total",
+        "seepp_scheduler_task_seconds",    # per-tenant latency histogram
+    ):
+        assert family in seen_types, f"missing family {family}"
+
+
+def test_label_escaping():
+    assert escape_label_value('a"b\\c\nd') == 'a\\"b\\\\c\\nd'
+    assert escape_help("back\\slash\nnewline") == "back\\\\slash\\nnewline"
+    sink = TelemetrySink()
+    evil_tenant = 'ten"ant\\x\ny'
+    sink.observe("pool.checkout_warm_seconds", 1e-4, tenant=evil_tenant)
+    text = MetricsRegistry().register_sink(sink).render()
+    assert 'tenant="ten\\"ant\\\\x\\ny"' in text
+    assert evil_tenant not in text        # raw form never leaks
+
+
+def test_format_value():
+    assert format_value(3) == "3"
+    assert format_value(3.0) == "3"
+    assert format_value(float("inf")) == "+Inf"
+    assert format_value(0.25) == "0.25"
+
+
+def test_counter_monotonicity_across_scrapes():
+    sched = full_plane()
+    reg = sched.metrics_registry()
+    before = reg.dump()
+    fn = lambda x: (x * 2).sum()
+    sched.submit(TaskSpec("alice", fn, (jnp.ones(4),)))
+    sched.run_pending()
+    sched.pool.tick()
+    after = reg.dump()
+    counters = [k for k in before if k.endswith("_total")]
+    assert counters
+    for key in counters:
+        for labels, value in before[key].items():
+            assert after[key][labels] >= value, f"{key}{labels} went backwards"
+    # and something actually moved between the scrapes
+    assert after["seepp_pool_hit_total"][""] > before["seepp_pool_hit_total"][""]
+
+
+# -------------------------------------------------------------- histograms
+
+
+def test_histogram_bucket_sums():
+    h = Histogram(buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    pairs = h.bucket_counts()
+    assert [le for le, _ in pairs] == [0.1, 1.0, 10.0, float("inf")]
+    assert [c for _, c in pairs] == [1, 3, 4, 5]   # cumulative
+    # +Inf bucket equals the observation count; sum matches
+    assert pairs[-1][1] == h.count == 5
+    assert h.sum == pytest.approx(56.05)
+    # boundary value lands in the bucket whose le it equals
+    h2 = Histogram(buckets=(1.0, 2.0))
+    h2.observe(1.0)
+    assert h2.bucket_counts()[0] == (1.0, 1)
+
+
+def test_histogram_rendering_bucket_sum_count_lines():
+    sink = TelemetrySink()
+    for v in (1e-6, 1e-3, 2.0):
+        sink.observe("pool.checkout_warm_seconds", v, tenant="t")
+    text = MetricsRegistry().register_sink(sink).render()
+    name = "seepp_pool_checkout_warm_seconds"
+    buckets = re.findall(
+        rf'^{name}_bucket{{le="([^"]+)",tenant="t"}} (\d+)$', text, re.M
+    )
+    assert buckets, text
+    counts = [int(c) for _, c in buckets]
+    assert counts == sorted(counts), "bucket counts must be cumulative"
+    assert buckets[-1][0] == "+Inf" and counts[-1] == 3
+    assert re.search(rf'^{name}_count{{tenant="t"}} 3$', text, re.M)
+    m = re.search(rf'^{name}_sum{{tenant="t"}} (\S+)$', text, re.M)
+    assert m and float(m.group(1)) == pytest.approx(2.001001)
+
+
+def test_histogram_quantile_estimate():
+    h = Histogram(buckets=(1e-4, 1e-3, 1e-2))
+    for _ in range(99):
+        h.observe(5e-5)
+    h.observe(5e-3)
+    assert h.quantile(0.5) == 1e-4
+    assert h.quantile(0.999) == 1e-2
+
+
+# ------------------------------------------------------------ registration
+
+
+def test_registry_dedupes_components():
+    sink = TelemetrySink()
+    sink.count("pool.hit")
+    reg = MetricsRegistry().register_sink(sink).register_sink(sink)
+    text = reg.render()
+    assert text.count('seepp_events_total{kind="hit",source="pool"} 1') == 1
+
+
+def test_multiple_sinks_merge_into_one_series():
+    """Two registered sinks must merge, not emit duplicate series —
+    Prometheus rejects a scrape containing the same series twice."""
+    a, b = TelemetrySink(), TelemetrySink()
+    a.count("pool.hit", 2)
+    b.count("pool.hit", 3)
+    a.observe("pool.checkout_warm_seconds", 1e-4, tenant="t")
+    b.observe("pool.checkout_warm_seconds", 1e-4, tenant="t")
+    text = MetricsRegistry().register_sink(a).register_sink(b).render()
+    line = 'seepp_events_total{kind="hit",source="pool"}'
+    assert text.count(line) == 1
+    assert f"{line} 5" in text
+    assert text.count('seepp_pool_checkout_warm_seconds_count{tenant="t"}') == 1
+    assert re.search(
+        r'^seepp_pool_checkout_warm_seconds_count\{tenant="t"\} 2$', text, re.M
+    )
+
+
+def test_histogram_bucket_mismatch_raises():
+    sink = TelemetrySink()
+    sink.observe("x.seconds", 1.0)
+    with pytest.raises(ValueError):
+        sink.observe("x.seconds", 1.0, buckets=(1.0, 10.0))
+    h = Histogram(buckets=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        h.merge(Histogram(buckets=(5.0,)))
+
+
+def test_register_gauge_sampled_at_scrape_time():
+    state = {"v": 1.0}
+    reg = MetricsRegistry().register_gauge(
+        "custom_depth", "A custom gauge.", lambda: state["v"]
+    )
+    assert "seepp_custom_depth 1" in reg.render()
+    state["v"] = 7.0
+    assert "seepp_custom_depth 7" in reg.render()
+
+
+def test_pool_gauges_and_orphan_counter():
+    sink = TelemetrySink()
+    pool = SandboxPool(telemetry=sink)
+    sb = pool.checkout("alice")
+    reg = MetricsRegistry().register_sink(sink).register_pool(pool)
+    dump = reg.dump()
+    assert dump["seepp_pool_checked_out_sandboxes"][""] == 1
+    pool.checkin(sb)
+    assert reg.dump()["seepp_pool_idle_sandboxes"]['{tenant="alice"}'] == 1
+    pool.checkin(Sandbox(tenant="nobody"))     # orphan: unknown tenant
+    assert reg.dump()["seepp_pool_orphan_checkin_total"][""] == 1
+
+
+# ---------------------------------------------------------- HTTP endpoint
+
+
+def test_metrics_http_endpoint():
+    sched = full_plane()
+    reg = sched.metrics_registry()
+    with MetricsHTTPServer(reg, port=0) as srv:
+        resp = urllib.request.urlopen(srv.url, timeout=5)
+        assert resp.status == 200
+        assert resp.headers["Content-Type"] == CONTENT_TYPE
+        body = resp.read().decode()
+        for family in ("seepp_pool_hit_total", "seepp_admission_cache_hit_total",
+                       "seepp_scheduler_queue_depth", "seepp_events_total"):
+            assert family in body
+        # JSON twin of the same snapshot
+        json_body = urllib.request.urlopen(
+            srv.url + ".json", timeout=5
+        ).read().decode()
+        assert '"seepp_pool_hit_total"' in json_body
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/nope", timeout=5
+            )
+    # scrapes observe live state: counters move between requests
+    with MetricsHTTPServer(reg, port=0) as srv:
+        first = urllib.request.urlopen(srv.url, timeout=5).read().decode()
+        sched.pool.checkout("alice")
+        second = urllib.request.urlopen(srv.url, timeout=5).read().decode()
+        assert first != second
+
+
+def test_server_metrics_endpoint_end_to_end():
+    """The acceptance path: scrape /metrics off a running Server and find
+    pool, admission-cache and telemetry families; with the watermark
+    refiller on, postprocess checkouts never build cold."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.runtime import Request, Server, ServerConfig
+
+    cfg = get_reduced("hymba-1.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = Server(model, params,
+                 ServerConfig(max_batch=2, max_seq=64, pool_watermark=1))
+    try:
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(prompt=rng.integers(0, cfg.vocab_size, (5,))
+                    .astype(np.int32),
+                    max_new_tokens=2, request_id=i,
+                    postprocess=lambda toks: jnp.sort(toks))
+            for i in range(3)
+        ]
+        srv.run(reqs)
+        endpoint = srv.serve_metrics(port=0)
+        assert srv.serve_metrics() is endpoint     # idempotent
+        body = urllib.request.urlopen(endpoint.url, timeout=5).read().decode()
+        for family in (
+            "seepp_pool_hit_total",
+            "seepp_pool_cold_checkout_total",
+            "seepp_admission_cache_hit_total",
+            "seepp_events_total",
+            "seepp_server_request_seconds_bucket",
+        ):
+            assert family in body
+        dump = srv.dump_metrics()
+        # warm pool + refiller: no postprocess checkout built cold
+        assert dump["seepp_pool_cold_checkout_total"][""] == 0
+        assert dump["seepp_pool_hit_total"][""] >= 3
+        assert dump["seepp_events_total"]['{kind="request",source="server"}'] == 3
+    finally:
+        srv.close()
+    assert not srv.pool.refiller_running
+
+
+def test_admission_histograms_exported():
+    ctl = AdmissionController()
+    pol = ModernEmulationPolicy()
+    args = (jnp.ones((4, 4)), jnp.ones((4, 4)))
+    ctl.admit(lambda a, b: a @ b, args, policy=pol, tenant="t")
+    reg = MetricsRegistry().register_sink(ctl.sink).register_admission(ctl)
+    text = reg.render()
+    assert "seepp_admission_cold_seconds_bucket" in text
+    assert "seepp_admission_cache_entries 1" in text

@@ -93,7 +93,7 @@ def test_full_config_instantiates(arch):
     cfg = get_config(arch)
     model = build_model(cfg)
     shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    n = sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(shapes))
     analytic = cfg.param_count()
     assert abs(n - analytic) / analytic < 0.35, (arch, n, analytic)
 

@@ -1,0 +1,244 @@
+"""SandboxPool async refill: watermarks, tick pump, refiller thread, orphans."""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    LegacyFilterPolicy,
+    Sandbox,
+    SandboxPool,
+    SandboxViolation,
+    TelemetrySink,
+)
+
+
+def test_tick_tops_up_known_tenants_to_watermark():
+    pool = SandboxPool(refill_watermark=2)
+    pool.checkout("alice")                  # first contact: cold build
+    assert pool.stats.misses == 1
+    built = pool.tick()
+    assert built == 2
+    assert pool.idle_count("alice") == 2
+    assert pool.stats.refills == 2
+    # idempotent at the watermark
+    assert pool.tick() == 0
+
+
+def test_steady_state_checkouts_never_go_cold():
+    """The acceptance criterion: pool_cold_checkout_total stays 0 once the
+    refiller keeps the free list above the watermark — even though every
+    request *consumes* (discards) its sandbox."""
+    pool = SandboxPool(refill_watermark=2)
+    pool.set_watermark("alice", 2)
+    pool.tick()                             # pre-warm before traffic
+    for _ in range(50):
+        sb = pool.checkout("alice")
+        pool.checkin(sb, discard=True)      # consumed: must be rebuilt
+        pool.tick()
+    assert pool.stats.misses == 0
+    assert pool.stats.hits == 50
+    assert pool.stats.refills >= 50
+    assert pool.telemetry.counter("pool.miss") == 0
+
+
+def test_per_tenant_watermark_overrides_default():
+    pool = SandboxPool(refill_watermark=1)
+    pool.checkout("small")
+    pool.set_watermark("big", 3)
+    pool.tick()
+    assert pool.idle_count("small") == 1
+    assert pool.idle_count("big") == 3
+
+
+def test_refill_respects_global_idle_cap():
+    pool = SandboxPool(refill_watermark=4, max_total_idle=3)
+    pool.set_watermark("a", 4)
+    assert pool.tick() == 3                 # cap wins over watermark
+    assert pool.idle_count() == 3
+
+
+def test_refill_after_poison_discard_keeps_template():
+    """A poisoned seeded sandbox is replaced by the refiller with a clone
+    of the tenant's template, not an unrestricted default."""
+    pool = SandboxPool(refill_watermark=1)
+    restricted = Sandbox(tenant="serving", policy=LegacyFilterPolicy())
+    pool.seed(restricted)
+    sb = pool.checkout("serving")
+    pool.checkin(sb, discard=True)          # poisoned
+    assert pool.idle_count("serving") == 0
+    pool.tick()
+    fresh = pool.checkout("serving")
+    assert fresh is not restricted
+    assert fresh.policy.name == "legacy-filter"
+
+
+def test_watermark_above_per_tenant_cap_does_not_churn():
+    """A watermark above max_idle_per_tenant must clamp to the cap:
+    refilling past it would build sandboxes the next checkin's cap
+    enforcement evicts, looping build→evict forever."""
+    pool = SandboxPool(refill_watermark=8, max_idle_per_tenant=4)
+    pool.set_watermark("a", 8)
+    assert pool.tick() == 4                 # clamped to the per-tenant cap
+    assert pool.idle_count("a") == 4
+    assert pool.tick() == 0                 # stable: no further builds
+    sb = pool.checkout("a")
+    pool.checkin(sb)
+    assert pool.stats.evictions == 0        # nothing ever over-filled
+    assert pool.tick() == 0
+
+
+def test_watermark_with_eviction_pressure_does_not_spin():
+    """Per-tenant LRU cap below the watermark: tick must make no progress
+    but also must not loop forever re-building into an evicting bucket."""
+    pool = SandboxPool(refill_watermark=4, max_idle_per_tenant=4,
+                       max_total_idle=2)
+    pool.set_watermark("a", 4)
+    built = pool.tick(max_builds=50)
+    assert built <= 3
+    assert pool.idle_count("a") == 2
+
+
+def test_background_refiller_thread():
+    pool = SandboxPool(refill_watermark=2)
+    pool.set_watermark("alice", 2)
+    pool.start_refiller(interval_s=0.005)
+    assert pool.refiller_running
+    try:
+        deadline = time.time() + 5
+        while pool.idle_count("alice") < 2 and time.time() < deadline:
+            time.sleep(0.005)
+        assert pool.idle_count("alice") == 2
+        # drain below the watermark; the checkout kick wakes the refiller
+        sb = pool.checkout("alice")
+        pool.checkin(sb, discard=True)
+        deadline = time.time() + 5
+        while pool.idle_count("alice") < 2 and time.time() < deadline:
+            time.sleep(0.005)
+        assert pool.idle_count("alice") == 2
+        assert pool.stats.refills >= 3
+    finally:
+        pool.stop_refiller()
+    assert not pool.refiller_running
+    # idempotent start/stop
+    pool.start_refiller()
+    pool.start_refiller()
+    pool.stop_refiller()
+    pool.stop_refiller()
+
+
+def test_concurrent_checkout_checkin_with_refiller():
+    """Hammer the pool from several threads while the refiller runs; every
+    invariant (no lost sandboxes, counters consistent) must hold."""
+    pool = SandboxPool(refill_watermark=2, max_idle_per_tenant=8,
+                       max_total_idle=64)
+    tenants = ["a", "b", "c"]
+    for t in tenants:
+        pool.set_watermark(t, 2)
+    pool.tick()
+    pool.start_refiller(interval_s=0.001)
+    errors = []
+
+    def worker(tenant, n=30):
+        try:
+            for i in range(n):
+                sb = pool.checkout(tenant)
+                assert sb.tenant == tenant      # isolation is structural
+                pool.checkin(sb, discard=(i % 5 == 0))
+        except Exception as e:  # pragma: no cover - failure diagnostics
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in tenants
+               for _ in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    pool.stop_refiller()
+    assert not errors
+    assert pool.checked_out() == 0
+    s = pool.stats
+    assert s.hits + s.misses == 180
+    # discarded sandboxes really were destroyed, not recycled
+    assert s.discards == 36
+    assert pool.idle_count() <= 64
+
+
+# ------------------------------------------------------------------ orphans
+
+
+def test_orphan_checkin_unknown_tenant_is_refused():
+    pool = SandboxPool()
+    stranger = Sandbox(tenant="ghost")
+    pool.checkin(stranger)
+    assert pool.stats.orphan_checkins == 1
+    assert pool.idle_count("ghost") == 0
+    assert "ghost" not in pool.tenants()
+    ev = pool.telemetry.query(source="pool", kind="orphan_checkin")
+    assert ev and ev[0].tenant == "ghost"
+
+
+def test_orphan_checkin_known_tenant_is_adopted():
+    """An external sandbox for a tenant the pool already serves is a seed,
+    not an orphan (back-compat with PR 1 callers)."""
+    pool = SandboxPool()
+    sb = pool.checkout("alice")
+    pool.checkin(sb)
+    external = Sandbox(tenant="alice")
+    pool.checkin(external)
+    assert pool.stats.orphan_checkins == 0
+    assert pool.idle_count("alice") == 2
+
+
+def test_checkin_after_discard_is_refused():
+    """A poisoned (discarded) sandbox never re-enters circulation, even if
+    a buggy caller checks the same object in again."""
+    pool = SandboxPool()
+    sb = pool.checkout("alice")
+    pool.checkin(sb, discard=True)
+    pool.checkin(sb)                         # bug: re-admitting the poisoned sb
+    assert pool.stats.orphan_checkins == 1
+    assert pool.idle_count("alice") == 0
+    fresh = pool.checkout("alice")
+    assert fresh is not sb
+
+
+def test_double_checkin_is_refused():
+    pool = SandboxPool()
+    sb = pool.checkout("alice")
+    pool.checkin(sb)
+    pool.checkin(sb)                         # same object, already idle
+    assert pool.stats.orphan_checkins == 1
+    assert pool.idle_count("alice") == 1
+
+
+def test_poisoned_discard_still_counts_for_checked_out_sandbox():
+    import jax
+
+    def evil(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+        )
+
+    pool = SandboxPool()
+    sb = pool.checkout("mallory")
+    with pytest.raises(SandboxViolation):
+        sb.run(evil, jnp.ones(2))
+    pool.checkin(sb, discard=True)
+    assert pool.stats.discards == 1
+    assert pool.stats.orphan_checkins == 0
+
+
+def test_checkout_latency_histograms_recorded():
+    sink = TelemetrySink()
+    pool = SandboxPool(telemetry=sink, refill_watermark=1)
+    pool.checkout("t")                       # cold
+    pool.tick()
+    pool.checkout("t")                       # warm
+    cold = sink.histogram("pool.checkout_cold_seconds", tenant="t")
+    warm = sink.histogram("pool.checkout_warm_seconds", tenant="t")
+    assert cold is not None and cold.count == 1
+    assert warm is not None and warm.count == 1
+    assert cold.sum > 0 and warm.sum > 0

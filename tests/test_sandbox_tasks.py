@@ -2,13 +2,11 @@
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import (
     ArtifactRepository,
     LegacyFilterPolicy,
     ModernEmulationPolicy,
-    Sandbox,
     ServerlessScheduler,
     TaskSpec,
     TaskState,

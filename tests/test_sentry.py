@@ -21,7 +21,6 @@ from repro.core import (
     Sandbox,
     SandboxViolation,
     sandboxed,
-    static_verify,
 )
 
 

@@ -4,7 +4,6 @@ sandboxed user code inside the training loop (the Snowpark pattern)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_reduced

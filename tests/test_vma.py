@@ -3,13 +3,7 @@
 import pytest
 
 from repro.core.mm import MemoryManager, MMConfig
-from repro.core.vma import (
-    MAX_MAP_COUNT,
-    AddrRange,
-    Direction,
-    FileRangeAllocator,
-    VMAExhaustedError,
-)
+from repro.core.vma import Direction, FileRangeAllocator, VMAExhaustedError
 
 G = 64 * 1024
 
