@@ -1,6 +1,6 @@
 PYTHON ?= python
 
-.PHONY: test lint bench bench-smoke ci dev-deps
+.PHONY: test lint bench bench-smoke bench-trend ci dev-deps
 
 # tier-1 verification: the exact command CI and ROADMAP.md reference
 test:
@@ -16,10 +16,20 @@ bench:
 # the CI bench-smoke job at identical tiny sizes; writes BENCH_*.json
 bench-smoke:
 	PYTHONPATH=src $(PYTHON) benchmarks/admission_bench.py \
-		--cold-iters 5 --warm-reps 200 --pool-reps 50 --size 64 \
+		--cold-iters 15 --warm-reps 2000 --pool-reps 50 --size 64 \
 		--json-out BENCH_admission.json
 	PYTHONPATH=src $(PYTHON) benchmarks/pool_bench.py \
-		--requests 100 --watermark 4 --json-out BENCH_pool.json
+		--requests 200 --watermark 4 --repeats 5 \
+		--json-out BENCH_pool.json
+	PYTHONPATH=src $(PYTHON) benchmarks/scheduler_bench.py \
+		--tasks 40 --workers 4 --json-out BENCH_scheduler.json
+
+# the CI trend check, locally: diff BENCH_*.json against .bench-baseline/
+# (seeded on the first run) and fail on a >30% regression
+bench-trend: bench-smoke
+	PYTHONPATH=src $(PYTHON) benchmarks/trend_check.py \
+		--old-dir .bench-baseline --new-dir . \
+		--tolerance 0.30 --update-baseline
 
 # everything the CI pipeline runs, locally
 ci: lint test bench-smoke

@@ -63,25 +63,34 @@ def main(
     watermark: int = 4,
     threaded: bool = False,
     json_out: Optional[str] = None,
+    repeats: int = 3,
 ) -> Dict[str, float]:
-    # ---- cold: every checkout builds on the hot path -----------------
-    cold_pool = SandboxPool()
-    cold = _drive(cold_pool, requests, tick=False)
-    assert cold_pool.stats.misses == requests
+    # best-of-N percentiles (timeit-style): scheduler jitter on shared
+    # CI runners only ever makes a run *slower*, so the minimum across
+    # repeats is the reproducible statistic the trend check diffs
+    cold_p50 = cold_p95 = warm_p50 = warm_p95 = float("inf")
+    warm_pool = None
+    for _ in range(max(1, repeats)):
+        # ---- cold: every checkout builds on the hot path -------------
+        cold_pool = SandboxPool()
+        cold = _drive(cold_pool, requests, tick=False)
+        assert cold_pool.stats.misses == requests
 
-    # ---- warm: async refill keeps the free list above watermark ------
-    warm_pool = SandboxPool(refill_watermark=watermark)
-    warm_pool.set_watermark("bench", watermark)
-    warm_pool.tick()                         # pre-warm to the watermark
-    if threaded:
-        warm_pool.start_refiller(interval_s=0.001)
-    try:
-        warm = _drive(warm_pool, requests, tick=not threaded)
-    finally:
-        warm_pool.stop_refiller()
+        # ---- warm: async refill keeps the free list above watermark --
+        warm_pool = SandboxPool(refill_watermark=watermark)
+        warm_pool.set_watermark("bench", watermark)
+        warm_pool.tick()                     # pre-warm to the watermark
+        if threaded:
+            warm_pool.start_refiller(interval_s=0.001)
+        try:
+            warm = _drive(warm_pool, requests, tick=not threaded)
+        finally:
+            warm_pool.stop_refiller()
 
-    cold_p50, cold_p95 = _percentile(cold, 0.5), _percentile(cold, 0.95)
-    warm_p50, warm_p95 = _percentile(warm, 0.5), _percentile(warm, 0.95)
+        cold_p50 = min(cold_p50, _percentile(cold, 0.5))
+        cold_p95 = min(cold_p95, _percentile(cold, 0.95))
+        warm_p50 = min(warm_p50, _percentile(warm, 0.5))
+        warm_p95 = min(warm_p95, _percentile(warm, 0.95))
     speedup = cold_p50 / warm_p50 if warm_p50 > 0 else float("inf")
 
     print("# pool_bench")
@@ -120,6 +129,8 @@ if __name__ == "__main__":
                     help="drive the daemon refiller instead of tick()")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write results as JSON (CI bench artifact)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-N runs (noise floor for the trend check)")
     a = ap.parse_args()
     main(requests=a.requests, watermark=a.watermark,
-         threaded=a.threaded, json_out=a.json_out)
+         threaded=a.threaded, json_out=a.json_out, repeats=a.repeats)

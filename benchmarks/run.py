@@ -14,6 +14,7 @@ def main() -> None:
         pool_bench,
         query_latency,
         roofline,
+        scheduler_bench,
         sentry_overhead,
         vma_bench,
     )
@@ -66,6 +67,14 @@ def main() -> None:
         ("pool_refill_warm_speedup_x", pb["warm_speedup_x"], "target:>=5x"),
         ("pool_refill_cold_checkouts", pb["warm_cold_checkout_total"],
          "steady-state target:0"),
+    ]
+
+    print("=" * 72)
+    sb = scheduler_bench.main()
+    rows += [
+        ("scheduler_concurrent_speedup_x", sb["speedup_x"], "target:>=2x"),
+        ("scheduler_sim_deterministic", float(sb["sim_deterministic"]),
+         "3 same-seed runs byte-identical"),
     ]
 
     print("=" * 72)

@@ -1,0 +1,154 @@
+"""Bench trend check — fail CI on large perf regressions.
+
+The bench-smoke job writes ``BENCH_*.json`` artifacts every run; until
+now nothing diffed them, so a regression only showed up when a human
+compared artifacts by hand.  This script compares the current artifacts
+against the previous run's and **fails (exit 1) on a > ``--tolerance``
+regression** (default 30%) of any tracked metric:
+
+* ``BENCH_pool.json`` ``warm_checkout_p50_us`` (lower is better),
+* ``BENCH_admission.json`` ``warm_speedup_x`` (higher is better),
+* ``BENCH_scheduler.json`` ``speedup_x`` (higher is better).
+
+Missing baselines are *skipped*, not failed — the first run of a branch,
+a renamed artifact, or a new metric must not break CI.  Locally,
+``make bench-trend`` runs the smoke benches and diffs against
+``.bench-baseline/`` (seeding it on first use via ``--update-baseline``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Mapping, Optional, Tuple
+
+#: (artifact file, metric key, direction, noise scale).  direction says
+#: which way is good; the base --tolerance is multiplied by the noise
+#: scale per metric.  warm_checkout_p50_us is a ~5us absolute timing:
+#: even best-of-5 it carries a ~2x machine-state noise floor on shared
+#: runners, and its gate exists to catch the order-of-magnitude jump of
+#: the warm path going cold (5-30x), so it runs at twice the tolerance.
+#: The speedup ratios are same-process relative measures and hold 30%.
+TRACKED = (
+    ("BENCH_pool.json", "warm_checkout_p50_us", "lower", 2.0),
+    ("BENCH_admission.json", "warm_speedup_x", "higher", 1.0),
+    ("BENCH_scheduler.json", "speedup_x", "higher", 1.0),
+)
+
+
+def compare_metric(
+    old: Mapping, new: Mapping, key: str, direction: str, tolerance: float
+) -> Optional[str]:
+    """A human-readable regression line, or None if within tolerance."""
+    if key not in old or key not in new:
+        return None
+    old_v, new_v = float(old[key]), float(new[key])
+    if old_v <= 0:
+        return None                       # degenerate baseline: no signal
+    if direction == "lower":
+        regressed = new_v > old_v * (1.0 + tolerance)
+        change = new_v / old_v - 1.0
+    else:
+        regressed = new_v < old_v * (1.0 - tolerance)
+        change = 1.0 - new_v / old_v
+    if not regressed:
+        return None
+    return (
+        f"{key}: {old_v:.3f} -> {new_v:.3f} "
+        f"({change:+.0%} worse; direction={direction}, "
+        f"tolerance={tolerance:.0%})"
+    )
+
+
+def _load(path: str) -> Optional[Dict]:
+    if not os.path.isfile(path):
+        return None
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None
+
+
+def run(
+    old_dir: str, new_dir: str, tolerance: float = 0.30
+) -> Tuple[List[str], List[str], List[str]]:
+    """Returns (regressions, checked, skipped) description lines."""
+    regressions: List[str] = []
+    checked: List[str] = []
+    skipped: List[str] = []
+    for fname, key, direction, noise_scale in TRACKED:
+        new = _load(os.path.join(new_dir, fname))
+        if new is None:
+            skipped.append(f"{fname}: no current artifact")
+            continue
+        old = _load(os.path.join(old_dir, fname))
+        if old is None:
+            skipped.append(f"{fname}: no baseline (first run?)")
+            continue
+        if key not in old or key not in new:
+            skipped.append(f"{fname}: metric {key!r} absent")
+            continue
+        line = compare_metric(
+            old, new, key, direction, tolerance * noise_scale
+        )
+        if line is not None:
+            regressions.append(f"{fname} {line}")
+        else:
+            checked.append(
+                f"{fname} {key}: {float(old[key]):.3f} -> "
+                f"{float(new[key]):.3f} OK"
+            )
+    return regressions, checked, skipped
+
+
+def update_baseline(old_dir: str, new_dir: str) -> List[str]:
+    """Copy current artifacts over the baseline; returns copied names."""
+    os.makedirs(old_dir, exist_ok=True)
+    copied = []
+    for fname, _, _, _ in TRACKED:
+        src = os.path.join(new_dir, fname)
+        if os.path.isfile(src):
+            shutil.copyfile(src, os.path.join(old_dir, fname))
+            copied.append(fname)
+    return copied
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--old-dir", required=True,
+                    help="directory holding the previous BENCH_*.json")
+    ap.add_argument("--new-dir", default=".",
+                    help="directory holding the current BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="relative regression that fails (0.30 = 30%%)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="on success, copy current artifacts into "
+                         "--old-dir for the next comparison")
+    args = ap.parse_args(argv)
+
+    regressions, checked, skipped = run(
+        args.old_dir, args.new_dir, tolerance=args.tolerance
+    )
+    print("# trend_check")
+    for line in checked:
+        print(f"  ok       {line}")
+    for line in skipped:
+        print(f"  skipped  {line}")
+    for line in regressions:
+        print(f"  REGRESSED {line}")
+    if regressions:
+        print(f"trend_check: {len(regressions)} regression(s) beyond "
+              f"{args.tolerance:.0%}")
+        return 1
+    if args.update_baseline:
+        for fname in update_baseline(args.old_dir, args.new_dir):
+            print(f"  baseline {fname} updated in {args.old_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

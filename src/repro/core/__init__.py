@@ -22,7 +22,12 @@ Subsystem map (see DESIGN.md §2 for the paper↔TPU correspondence):
 ``image``          §III.B standardized base image
 ``gofer``          mediated (capability-checked) I/O
 ``sandbox``        per-tenant facade combining all of the above
-``tasks``          §V.A serverless multi-tenant scheduler (draws sandboxes
+``sim``            execution substrate: real threads + wall clock in
+                   production, seeded cooperative interleaving + virtual
+                   clock under test (deterministic concurrency)
+``tasks``          §V.A serverless multi-tenant scheduler: N workers over
+                   per-tenant fair queues (weighted DRR), deadlines,
+                   cancellation, fault-tolerant dispatch (draws sandboxes
                    from the pool, reuses cached verifications)
 ``artifacts``      §V.B artifact repository (registration populates the
                    admission cache)
@@ -59,7 +64,23 @@ from .sentry import (
     sandboxed,
     static_verify,
 )
-from .tasks import ServerlessScheduler, TaskSpec, TaskState, TenantQuota
+from .sim import (
+    Clock,
+    Executor,
+    RealClock,
+    SimDeadlock,
+    SimExecutor,
+    ThreadExecutor,
+    VirtualClock,
+    WorkerKilled,
+)
+from .tasks import (
+    ServerlessScheduler,
+    TaskRecord,
+    TaskSpec,
+    TaskState,
+    TenantQuota,
+)
 from .telemetry import Histogram, TelemetryEvent, TelemetrySink
 from .vma import (
     MAX_MAP_COUNT,

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import hashlib
 import pickle
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -184,6 +185,14 @@ class AdmissionController:
         self._evictions = 0
         self._invalidations = 0
         self._denials = 0
+        # per-tenant hit/miss/denial split (the /metrics follow-on); the
+        # cache itself stays global — verification is tenant-independent,
+        # only the *accounting* is attributed
+        self._per_tenant: Dict[str, Dict[str, int]] = {}
+        # the concurrent scheduler admits from many workers at once: all
+        # cache and counter mutations happen under this lock (tracing and
+        # verification stay outside it so cold admissions don't serialize)
+        self._lock = threading.Lock()
 
     # ---------------------------------------------------------------- admit
 
@@ -213,7 +222,9 @@ class AdmissionController:
         if image is not None:
             digest = image.digest() if callable(image.digest) else image.digest
             if self._allowed_digests is not None and digest not in self._allowed_digests:
-                self._denials += 1
+                with self._lock:
+                    self._denials += 1
+                    self._bump_tenant_locked(tenant, "denials")
                 self.sink.emit(
                     "admission", "image_rejected", tenant=tenant,
                     detail=f"digest={digest}", stage=stage,
@@ -230,14 +241,22 @@ class AdmissionController:
             _abstract_signature(args, kwargs),
             _policy_fingerprint(policy),
         )
-        entry = self._cache.get(key)
+        with self._lock:
+            entry = self._cache.get(key)
+            if entry is not None:
+                self._cache.move_to_end(key)
+                self._hits += 1
+                self._bump_tenant_locked(tenant, "hits")
+            else:
+                self._misses += 1
+                self._bump_tenant_locked(tenant, "misses")
         if entry is not None:
-            self._cache.move_to_end(key)
-            self._hits += 1
             self.sink.count("admission.cache_hit")
             cache_hit = True
         else:
-            self._misses += 1
+            # trace + verify OUTSIDE the lock: a cold admission must not
+            # serialize every other worker's warm hits; a racing duplicate
+            # verification is idempotent (last insert wins)
             try:
                 closed, out_shape = jax.make_jaxpr(
                     lambda *a: fn(*a, **kwargs), return_shape=True
@@ -245,7 +264,9 @@ class AdmissionController:
                 scratch = ResourceMeter()   # budget-free costing pass
                 hist = static_verify(closed, policy, scratch)
             except SandboxViolation as e:
-                self._denials += 1
+                with self._lock:
+                    self._denials += 1
+                    self._bump_tenant_locked(tenant, "denials")
                 self.sink.emit(
                     "admission", "denied", tenant=tenant,
                     detail=f"{fn_name}: {e}", stage=stage,
@@ -262,10 +283,11 @@ class AdmissionController:
                 by_primitive=dict(scratch.by_primitive),
                 policy_name=policy.name,
             )
-            self._cache[key] = entry
-            while len(self._cache) > self._max_entries:
-                self._cache.popitem(last=False)
-                self._evictions += 1
+            with self._lock:
+                self._cache[key] = entry
+                while len(self._cache) > self._max_entries:
+                    self._cache.popitem(last=False)
+                    self._evictions += 1
             self.sink.emit(
                 "admission", "verified", tenant=tenant,
                 detail=f"{fn_name}: {sum(hist.values())} eqns", stage=stage,
@@ -308,29 +330,44 @@ class AdmissionController:
         since-mutated policy object (e.g. ``extended()``) stay live — they
         were verified under a different decision surface.
         """
-        if policy is None:
-            n = len(self._cache)
-            self._cache.clear()
-        else:
-            fp = _policy_fingerprint(policy)
-            doomed = [k for k in self._cache if k[-1] == fp]
-            for k in doomed:
-                del self._cache[k]
-            n = len(doomed)
-        self._invalidations += n
+        with self._lock:
+            if policy is None:
+                n = len(self._cache)
+                self._cache.clear()
+            else:
+                fp = _policy_fingerprint(policy)
+                doomed = [k for k in self._cache if k[-1] == fp]
+                for k in doomed:
+                    del self._cache[k]
+                n = len(doomed)
+            self._invalidations += n
         if n:
             self.sink.emit("admission", "invalidate", detail=f"{n} entries")
         return n
 
+    def _bump_tenant_locked(self, tenant: str, key: str) -> None:
+        bucket = self._per_tenant.get(tenant)
+        if bucket is None:
+            bucket = self._per_tenant[tenant] = {
+                "hits": 0, "misses": 0, "denials": 0,
+            }
+        bucket[key] += 1
+
     def stats(self) -> Dict[str, int]:
-        return {
-            "hits": self._hits,
-            "misses": self._misses,
-            "evictions": self._evictions,
-            "invalidations": self._invalidations,
-            "denials": self._denials,
-            "entries": len(self._cache),
-        }
+        with self._lock:
+            return {
+                "hits": self._hits,
+                "misses": self._misses,
+                "evictions": self._evictions,
+                "invalidations": self._invalidations,
+                "denials": self._denials,
+                "entries": len(self._cache),
+            }
+
+    def stats_by_tenant(self) -> Dict[str, Dict[str, int]]:
+        """Per-tenant hit/miss/denial counts (``/metrics`` follow-on)."""
+        with self._lock:
+            return {t: dict(b) for t, b in self._per_tenant.items()}
 
 
 # ---------------------------------------------------------------------------

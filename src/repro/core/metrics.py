@@ -149,6 +149,39 @@ class MetricsRegistry:
             self._gauges.append((name, help_text, fn))
         return self
 
+    def register_arena(self, kv: Any) -> "MetricsRegistry":
+        """Occupancy gauges for a :class:`~repro.core.arena.PagedKVAllocator`.
+
+        Exposes the §IV.A story live: host-VMA count (the 182x fix keeps
+        it flat), its high-water mark, contiguous-run counts (DMA
+        descriptors) and live sequences — all sampled at scrape time.
+        """
+        mm = kv.arena.mm
+        return (
+            self.register_gauge(
+                "arena_host_vmas",
+                "Live host VMAs backing the KV arena "
+                "(flat under the modern direction-aligned allocator).",
+                mm.host_vma_count,
+            )
+            .register_gauge(
+                "arena_host_vma_high_water",
+                "High-water mark of host VMAs since arena creation.",
+                lambda: mm.host_vma_high_water,
+            )
+            .register_gauge(
+                "arena_contiguous_runs",
+                "Contiguous physical runs across live sequences "
+                "(DMA descriptors needed).",
+                kv.total_runs,
+            )
+            .register_gauge(
+                "arena_live_sequences",
+                "Sequences currently holding KV pages in the arena.",
+                lambda: float(len(kv.seq_lens())),
+            )
+        )
+
     # -------------------------------------------------------------- render
 
     def _n(self, name: str) -> str:
@@ -323,6 +356,33 @@ class MetricsRegistry:
         )
         entries.add(merged.get("entries", 0))
         fams.append(entries)
+
+        # per-tenant split (the cache is global; accounting is attributed)
+        tenant_merged: Dict[str, Dict[str, int]] = {}
+        for ctl in admissions:
+            by_tenant = getattr(ctl, "stats_by_tenant", None)
+            if by_tenant is None:
+                continue
+            for tenant, bucket in by_tenant().items():
+                agg = tenant_merged.setdefault(
+                    tenant, {"hits": 0, "misses": 0, "denials": 0}
+                )
+                for key in agg:
+                    agg[key] += bucket.get(key, 0)
+        if tenant_merged:
+            tenant_families = [
+                ("hits", "admission_tenant_cache_hit_total",
+                 "Verification-cache hits per tenant."),
+                ("misses", "admission_tenant_cache_miss_total",
+                 "Verification-cache misses per tenant."),
+                ("denials", "admission_tenant_denied_total",
+                 "Programs denied at admission per tenant."),
+            ]
+            for key, name, text in tenant_families:
+                fam = _Family(self._n(name), "counter", text)
+                for tenant in sorted(tenant_merged):
+                    fam.add(tenant_merged[tenant][key], {"tenant": tenant})
+                fams.append(fam)
         return fams
 
     def _scheduler_families(self, schedulers: List[Any]) -> List[_Family]:
@@ -338,9 +398,24 @@ class MetricsRegistry:
             self._n("scheduler_tasks_total"), "counter",
             "Tasks by terminal/current state.",
         )
+        workers = _Family(
+            self._n("scheduler_workers"), "gauge",
+            "Configured worker threads (0 = serial drain mode).",
+        )
+        busy = _Family(
+            self._n("scheduler_worker_busy_seconds_total"), "counter",
+            "Cumulative busy time per worker (executor clock).",
+        )
+        per_worker = _Family(
+            self._n("scheduler_worker_tasks_total"), "counter",
+            "Tasks executed per worker.",
+        )
         depths: Dict[str, int] = {}
         flights: Dict[str, int] = {}
         by_state: Dict[str, int] = {}
+        n_workers = 0
+        worker_busy: Dict[str, float] = {}
+        worker_tasks: Dict[str, float] = {}
         for sched in schedulers:
             for tenant, n in sched.queue_depths().items():
                 depths[tenant] = depths.get(tenant, 0) + n
@@ -348,13 +423,30 @@ class MetricsRegistry:
                 flights[tenant] = flights.get(tenant, 0) + n
             for state, n in sched.stats().items():
                 by_state[state] = by_state.get(state, 0) + n
+            n_workers += getattr(sched, "worker_count", 0)
+            stats_fn = getattr(sched, "worker_stats", None)
+            if stats_fn is not None:
+                for name, ws in stats_fn().items():
+                    worker_busy[name] = (
+                        worker_busy.get(name, 0.0) + ws["busy_seconds"]
+                    )
+                    worker_tasks[name] = (
+                        worker_tasks.get(name, 0.0) + ws["tasks"]
+                    )
         for tenant, n in sorted(depths.items()):
             depth.add(n, {"tenant": tenant})
         for tenant, n in sorted(flights.items()):
             flight.add(n, {"tenant": tenant})
         for state, n in sorted(by_state.items()):
             states.add(n, {"state": state})
-        return [depth, flight, states]
+        workers.add(n_workers)
+        for name in sorted(worker_busy):
+            busy.add(worker_busy[name], {"worker": name})
+            per_worker.add(worker_tasks[name], {"worker": name})
+        fams = [depth, flight, states, workers]
+        if worker_busy:
+            fams += [busy, per_worker]
+        return fams
 
     # -------------------------------------------------------------- output
 

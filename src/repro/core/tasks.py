@@ -1,18 +1,30 @@
-"""Serverless Tasks — multi-tenant scheduled execution (paper §V.A).
+"""Serverless Tasks — concurrent multi-tenant scheduled execution (§V.A).
 
-The paper's Serverless Tasks run user workloads in a multi-tenant setup,
-*enabled* by the stronger isolation of the modern sandbox.  This module is
-the engine-side scheduler: tenants submit tasks (sandboxed callables with
-resource quotas); the scheduler admits them through load-time verification,
-executes them in priority order, enforces per-tenant concurrency and
-budget, retries transient failures, and never lets one tenant's violation
-take down another's task.  Deterministic (single-threaded) execution keeps
-tests reproducible; the scheduling policy itself is what we are modeling.
+The paper's Serverless Tasks run many tenants' workloads *concurrently* on
+warehouse nodes.  :class:`ServerlessScheduler` is the engine-side execution
+plane: tenants submit tasks (sandboxed callables with resource quotas);
+``workers`` threads drain per-tenant fair queues — weighted deficit
+round-robin **across** tenants, priority order **within** a tenant — under
+per-tenant in-flight caps that hold under parallelism.  Tasks carry
+optional deadlines (an expired task lands in :attr:`TaskState.EXPIRED`
+without consuming its quota slot) and pending tasks can be cancelled.
+
+Concurrency runs on the :mod:`~repro.core.sim` substrate: production uses
+:class:`~repro.core.sim.ThreadExecutor` (real threads, wall time) while
+tests pass a :class:`~repro.core.sim.SimExecutor` (virtual clock + seeded
+cooperative interleaving), so every concurrency test is deterministic and
+replayable from a seed — including injected faults: poisoned sandboxes,
+mid-task worker death (the task is requeued exactly once), slow builds.
+
+The serial API is preserved: ``run_pending()`` drains the queue on the
+calling thread in global priority order, exactly as the seed did.
 
 Sandboxes are drawn from a shared :class:`~repro.core.pool.SandboxPool`
 (warm startup) and all verification routes through one
 :class:`~repro.core.admission.AdmissionController`, so retries and
-resubmissions of an already-verified program are warm admissions.
+resubmissions of an already-verified program are warm admissions.  Every
+scheduling decision lands in :meth:`trace` with executor timestamps —
+byte-identical across sim runs with the same seed.
 """
 
 from __future__ import annotations
@@ -20,6 +32,7 @@ from __future__ import annotations
 import enum
 import heapq
 import itertools
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
@@ -29,12 +42,19 @@ from .policy import SandboxViolation
 from .pool import SandboxPool
 from .sandbox import Sandbox, SandboxResult
 from .sentry import BudgetExceeded
+from .sim import Executor, ThreadExecutor, WorkerKilled
 from .telemetry import TelemetrySink, resolve_sink
 
 if TYPE_CHECKING:
     from .metrics import MetricsRegistry
 
-__all__ = ["TaskState", "TaskSpec", "TaskRecord", "ServerlessScheduler", "TenantQuota"]
+__all__ = [
+    "TaskState",
+    "TaskSpec",
+    "TaskRecord",
+    "ServerlessScheduler",
+    "TenantQuota",
+]
 
 
 class TaskState(enum.Enum):
@@ -43,7 +63,16 @@ class TaskState(enum.Enum):
     SUCCEEDED = "succeeded"
     FAILED = "failed"
     DENIED = "denied"        # sandbox policy violation at admission
-    THROTTLED = "throttled"  # quota exceeded
+    THROTTLED = "throttled"  # legacy transient marker (kept for API compat)
+    EXPIRED = "expired"      # deadline passed before the task could run
+    CANCELLED = "cancelled"  # cancelled while still pending
+
+
+#: states a task never leaves
+TERMINAL_STATES = frozenset({
+    TaskState.SUCCEEDED, TaskState.FAILED, TaskState.DENIED,
+    TaskState.EXPIRED, TaskState.CANCELLED,
+})
 
 
 @dataclass(frozen=True)
@@ -51,6 +80,9 @@ class TenantQuota:
     max_tasks_in_flight: int = 4
     flop_budget_per_task: Optional[float] = None
     byte_budget_per_task: Optional[float] = None
+    #: deficit-round-robin share: a weight-3 tenant is offered three task
+    #: dispatches for every one a weight-1 tenant gets while both queue
+    weight: int = 1
 
 
 @dataclass(frozen=True)
@@ -58,9 +90,12 @@ class TaskSpec:
     tenant: str
     fn: Callable
     args: Tuple = ()
-    priority: int = 10          # lower = sooner
+    priority: int = 10          # lower = sooner (within the tenant)
     max_retries: int = 1
     name: str = ""
+    #: seconds after submission by which the task must *start*; past it
+    #: the task is EXPIRED at dispatch instead of run
+    deadline_s: Optional[float] = None
 
 
 @dataclass
@@ -72,11 +107,41 @@ class TaskRecord:
     error: Optional[str] = None
     attempts: int = 0
     submitted_at: float = field(default_factory=time.time)
+    started_at: Optional[float] = None
     finished_at: Optional[float] = None
+    worker: Optional[str] = None       # worker that (last) ran the task
+    death_requeues: int = 0            # times requeued after worker death
+
+    def history(self) -> Tuple:
+        """Deterministic summary for replay comparison (sim mode).
+
+        Everything here derives from the executor clock and the schedule,
+        so two sim runs with the same seed produce identical histories.
+        Wall-clock artifacts (``result.wall_s``) are deliberately absent.
+        """
+        return (
+            self.task_id,
+            self.spec.tenant,
+            self.spec.name,
+            self.state.value,
+            self.attempts,
+            self.worker,
+            self.death_requeues,
+            self.submitted_at,
+            self.started_at,
+            self.finished_at,
+            self.error,
+        )
 
 
 class ServerlessScheduler:
-    """Priority scheduler running sandboxed tasks for many tenants."""
+    """Fair concurrent scheduler running sandboxed tasks for many tenants.
+
+    With ``workers == 0`` (default) it behaves like the seed: a serial,
+    deterministic ``run_pending()`` drain.  With ``workers > 0``, call
+    :meth:`start` then :meth:`drain`/:meth:`shutdown`; dispatch order is
+    weighted deficit round-robin across tenants and priority within one.
+    """
 
     def __init__(
         self,
@@ -87,6 +152,8 @@ class ServerlessScheduler:
         pool: Optional[SandboxPool] = None,
         telemetry: Optional[TelemetrySink] = None,
         refill_watermark: int = 0,
+        workers: int = 0,
+        executor: Optional[Executor] = None,
     ) -> None:
         self.telemetry = resolve_sink(admission, telemetry)
         self.admission = admission or AdmissionController(sink=self.telemetry)
@@ -98,10 +165,24 @@ class ServerlessScheduler:
             admission=self.admission,
             telemetry=self.telemetry,
         )
-        self._queue: List[Tuple[int, int, int]] = []  # (priority, task_id tiebreak, id)
+        self._exec = executor or ThreadExecutor()
+        self._workers_n = max(0, int(workers))
+        # one lock guards every queue/record/accounting structure below;
+        # telemetry and the pool have their own locks and never call back
+        # into the scheduler, so lock order is always scheduler -> them
+        self._lock = threading.RLock()
+        self._pending: Dict[str, List[Tuple[int, int, int]]] = {}
+        self._ring: List[str] = []         # DRR rotation (first-seen order)
+        self._rr_pos = 0
+        self._deficit: Dict[str, float] = {}
         self._records: Dict[int, TaskRecord] = {}
         self._ids = itertools.count(1)
         self._in_flight: Dict[str, int] = {}
+        self._trace: List[str] = []
+        self._started = False
+        self._stop = False
+        self._worker_busy: Dict[str, float] = {}
+        self._worker_tasks: Dict[str, int] = {}
 
     def _default_factory(self, tenant: str, quota: TenantQuota) -> Sandbox:
         # all tenant sandboxes share the scheduler's admission controller,
@@ -126,54 +207,301 @@ class ServerlessScheduler:
     def prewarm(self, tenant: str, count: int = 1) -> int:
         return self.pool.prewarm(tenant, count)
 
+    @property
+    def executor(self) -> Executor:
+        return self._exec
+
     # -------------------------------------------------------------- submit
 
     def submit(self, spec: TaskSpec) -> int:
-        task_id = next(self._ids)
-        rec = TaskRecord(task_id, spec)
-        self._records[task_id] = rec
-        heapq.heappush(self._queue, (spec.priority, task_id, task_id))
+        with self._lock:
+            task_id = next(self._ids)
+            rec = TaskRecord(task_id, spec, submitted_at=self._exec.now())
+            self._records[task_id] = rec
+            # seq = task_id: global submission order breaks priority ties
+            heapq.heappush(
+                self._pending.setdefault(spec.tenant, []),
+                (spec.priority, task_id, task_id),
+            )
+            if spec.tenant not in self._deficit:
+                self._ring.append(spec.tenant)
+                self._deficit[spec.tenant] = 0.0
+            self._note("submit", task_id, spec.tenant, "")
+        self._exec.notify()
         return task_id
+
+    def cancel(self, task_id: int) -> bool:
+        """Cancel a still-pending task.  Running tasks are not stopped."""
+        with self._lock:
+            rec = self._records[task_id]
+            if rec.state is not TaskState.PENDING:
+                return False
+            rec.state = TaskState.CANCELLED
+            rec.finished_at = self._exec.now()
+            self._note("cancel", task_id, rec.spec.tenant, "")
+        self.telemetry.count("scheduler.cancelled")
+        self._exec.notify()                # let workers sweep the heap entry
+        return True
+
+    # ------------------------------------------------------------ dispatch
+
+    def _note(self, event: str, task_id: int, tenant: str, worker: str) -> None:
+        # executor timestamps: virtual (deterministic) under SimExecutor
+        self._trace.append(
+            f"{self._exec.now():.6f} {event} task={task_id} "
+            f"tenant={tenant} worker={worker}"
+        )
+
+    def _expire_locked(self, rec: TaskRecord) -> None:
+        rec.state = TaskState.EXPIRED
+        rec.finished_at = self._exec.now()
+        rec.error = (
+            f"deadline {rec.spec.deadline_s}s passed before dispatch"
+        )
+        self._note("expire", rec.task_id, rec.spec.tenant, "")
+        self.telemetry.count("scheduler.expired")
+
+    def _clean_head_locked(self, tenant: str) -> Optional[Tuple[int, int, int]]:
+        """Drop cancelled/expired entries; return the live head, if any."""
+        heap = self._pending.get(tenant)
+        now = self._exec.now()
+        while heap:
+            _, _, task_id = heap[0]
+            rec = self._records[task_id]
+            if rec.state is TaskState.CANCELLED:
+                heapq.heappop(heap)
+                continue
+            dl = rec.spec.deadline_s
+            if dl is not None and now - rec.submitted_at > dl:
+                heapq.heappop(heap)
+                # EXPIRED without ever reserving a slot: the quota stays
+                # free for the tenant's live work
+                self._expire_locked(rec)
+                continue
+            return heap[0]
+        return None
+
+    def _reserve_locked(self, tenant: str, worker: str) -> int:
+        """Pop the tenant's best task and take its in-flight slot."""
+        _, _, task_id = heapq.heappop(self._pending[tenant])
+        rec = self._records[task_id]
+        now = self._exec.now()
+        rec.state = TaskState.RUNNING
+        rec.worker = worker
+        rec.started_at = now
+        self._in_flight[tenant] = self._in_flight.get(tenant, 0) + 1
+        if not self._pending[tenant]:
+            self._deficit[tenant] = 0.0    # DRR: credit dies with the queue
+        self.telemetry.observe(
+            "scheduler.queue_wait_seconds", now - rec.submitted_at,
+            tenant=tenant,
+        )
+        self._note("dispatch", task_id, tenant, worker)
+        return task_id
+
+    def _tenant_weight(self, tenant: str) -> float:
+        return float(max(1, int(self.quota(tenant).weight)))
+
+    def _saturated_locked(self, tenant: str) -> bool:
+        return (
+            self._in_flight.get(tenant, 0)
+            >= self.quota(tenant).max_tasks_in_flight
+        )
+
+    def _pick_fair_locked(self, worker: str) -> Optional[int]:
+        """Weighted deficit round-robin across tenants (concurrent mode)."""
+        for _replenished in (False, True):
+            n = len(self._ring)
+            if n == 0:
+                return None
+            eligible: List[str] = []
+            for off in range(n):
+                idx = (self._rr_pos + off) % n
+                tenant = self._ring[idx]
+                if self._clean_head_locked(tenant) is None:
+                    self._deficit[tenant] = 0.0
+                    continue
+                if self._saturated_locked(tenant):
+                    continue
+                eligible.append(tenant)
+                if self._deficit.get(tenant, 0.0) >= 1.0:
+                    self._deficit[tenant] -= 1.0
+                    self._rr_pos = (idx + 1) % n
+                    return self._reserve_locked(tenant, worker)
+            if not eligible:
+                return None                # empty, or every tenant capped
+            for tenant in eligible:        # everyone broke: new DRR round
+                self._deficit[tenant] = self._tenant_weight(tenant)
+        return None                        # unreachable (weight >= 1)
+
+    def _pick_serial_locked(self, saturated: set) -> Optional[int]:
+        """Global (priority, submission) order — the seed's drain rule."""
+        best_tenant: Optional[str] = None
+        best_key: Optional[Tuple[int, int]] = None
+        for tenant in sorted(self._pending):
+            if tenant in saturated:
+                continue
+            head = self._clean_head_locked(tenant)
+            if head is None:
+                continue
+            if self._saturated_locked(tenant):
+                # once saturated, skip the tenant for the rest of the
+                # drain: re-checking every queued record just churns
+                saturated.add(tenant)
+                continue
+            key = (head[0], head[1])
+            if best_key is None or key < best_key:
+                best_key, best_tenant = key, tenant
+        if best_tenant is None:
+            return None
+        return self._reserve_locked(best_tenant, "serial")
 
     # ----------------------------------------------------------------- run
 
     def run_pending(self, max_tasks: Optional[int] = None) -> List[TaskRecord]:
-        """Drain the queue (deterministically, in priority order)."""
+        """Drain the queue serially (deterministic, global priority order)."""
         done: List[TaskRecord] = []
-        n = 0
-        requeue: List[Tuple[int, int, int]] = []
         saturated: set = set()   # tenants found throttled this drain pass
-        while self._queue and (max_tasks is None or n < max_tasks):
-            _, _, task_id = heapq.heappop(self._queue)
+        while max_tasks is None or len(done) < max_tasks:
+            with self._lock:
+                task_id = self._pick_serial_locked(saturated)
+            if task_id is None:
+                break
             rec = self._records[task_id]
-            tenant = rec.spec.tenant
-            quota = self.quota(tenant)
-            if (
-                tenant in saturated
-                or self._in_flight.get(tenant, 0) >= quota.max_tasks_in_flight
-            ):
-                # skip this tenant for the remainder of the drain: once
-                # saturated, re-checking every queued record just churns
-                saturated.add(tenant)
-                rec.state = TaskState.THROTTLED
-                requeue.append((rec.spec.priority, task_id, task_id))
-                continue
-            self._execute(rec)
+            self._execute(rec, worker="serial")
             done.append(rec)
-            n += 1
-        for item in requeue:
-            rec = self._records[item[2]]
-            rec.state = TaskState.PENDING
-            heapq.heappush(self._queue, item)
         return done
 
-    def _execute(self, rec: TaskRecord) -> None:
+    # ------------------------------------------------------ worker plane
+
+    def start(self) -> "ServerlessScheduler":
+        """Spawn the worker threads (idempotent; no-op when workers=0)."""
+        with self._lock:
+            if self._started or self._workers_n <= 0:
+                return self
+            self._started = True
+            names = [f"w{i}" for i in range(self._workers_n)]
+            for name in names:
+                self._worker_busy.setdefault(name, 0.0)
+                self._worker_tasks.setdefault(name, 0)
+        for name in names:
+            self._exec.spawn(self._worker_loop, name, name=name)
+        return self
+
+    def spawn_worker(self) -> str:
+        """Add one worker (e.g. to replace one lost to fault injection)."""
+        with self._lock:
+            name = f"w{len(self._worker_busy)}"
+            self._worker_busy.setdefault(name, 0.0)
+            self._worker_tasks.setdefault(name, 0)
+            self._started = True
+        self._exec.spawn(self._worker_loop, name, name=name)
+        return name
+
+    def _worker_loop(self, worker: str) -> None:
+        while True:
+            self._exec.yield_point("loop")
+            with self._lock:
+                if self._stop:
+                    break
+                task_id = self._pick_fair_locked(worker)
+            if task_id is None:
+                self._exec.idle_wait()
+                continue
+            rec = self._records[task_id]
+            t0 = self._exec.now()
+            try:
+                self._execute(rec, worker=worker)
+            except WorkerKilled:
+                self._handle_worker_death(rec, worker)
+                raise                      # the worker itself dies
+            except Exception as e:
+                # infrastructure failure (e.g. the sandbox factory raised
+                # during checkout): the record was marked FAILED and its
+                # slot released in _execute's finally — the worker itself
+                # survives to serve other tenants' tasks
+                self.telemetry.emit(
+                    "scheduler", "worker_error", tenant=rec.spec.tenant,
+                    detail=f"{type(e).__name__}: {e}",
+                )
+            finally:
+                with self._lock:
+                    self._worker_busy[worker] = (
+                        self._worker_busy.get(worker, 0.0)
+                        + (self._exec.now() - t0)
+                    )
+                    self._worker_tasks[worker] = (
+                        self._worker_tasks.get(worker, 0) + 1
+                    )
+
+    def _handle_worker_death(self, rec: TaskRecord, worker: str) -> None:
+        """A worker died mid-task: requeue the task exactly once."""
+        with self._lock:
+            self._note("worker_death", rec.task_id, rec.spec.tenant, worker)
+            if rec.death_requeues < 1:
+                rec.death_requeues += 1
+                rec.state = TaskState.PENDING
+                rec.worker = None
+                rec.started_at = None
+                rec.finished_at = None
+                heapq.heappush(
+                    self._pending.setdefault(rec.spec.tenant, []),
+                    (rec.spec.priority, rec.task_id, rec.task_id),
+                )
+                self._note("requeue", rec.task_id, rec.spec.tenant, "")
+            else:
+                rec.state = TaskState.FAILED
+                rec.error = "worker died mid-task; requeue budget exhausted"
+                rec.finished_at = self._exec.now()
+        self.telemetry.count("scheduler.worker_death")
+        self._exec.notify()
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Block until every queued task reached a terminal state.
+
+        Serial mode (workers=0) just calls :meth:`run_pending`.  Under a
+        :class:`~repro.core.sim.SimExecutor` this *drives* the simulation.
+        """
+        if self._workers_n <= 0:
+            self.run_pending()
+            return
+        self.start()
+        self._exec.notify()
+        self._exec.run_until(self._quiescent, timeout=timeout)
+
+    def _quiescent(self) -> bool:
+        with self._lock:
+            if sum(self._in_flight.values()) > 0:
+                return False
+            return not any(
+                self._records[tid].state is TaskState.PENDING
+                for heap in self._pending.values()
+                for (_, _, tid) in heap
+            )
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        """Stop the workers and wait for them to exit."""
+        with self._lock:
+            self._stop = True
+        self._exec.notify()
+        if self._started:
+            self._exec.join(timeout=timeout)
+
+    # ------------------------------------------------------------- execute
+
+    def _execute(self, rec: TaskRecord, worker: str = "serial") -> None:
         tenant = rec.spec.tenant
-        sandbox = self.pool.checkout(tenant)
         poisoned = False
-        self._in_flight[tenant] = self._in_flight.get(tenant, 0) + 1
-        rec.state = TaskState.RUNNING
+        died = False
+        sandbox: Optional[Sandbox] = None
         try:
+            # checkout inside the try: the caller already reserved the
+            # in-flight slot, so a death or factory failure parked at
+            # these yield points (e.g. killed mid slow cold build) must
+            # still release the slot in the finally below
+            self._exec.yield_point("checkout")
+            sandbox = self.pool.checkout(tenant)
+            self._exec.yield_point("checked-out")
             # retries reuse the same warm sandbox; the shared admission
             # cache makes every attempt after the first skip re-verification
             while True:
@@ -194,40 +522,96 @@ class ServerlessScheduler:
                     if rec.attempts > rec.spec.max_retries:
                         rec.state = TaskState.FAILED
                         break
+                self._exec.yield_point("retry")
+        except WorkerKilled:
+            # injected death mid-task: the sandbox's state is unknowable,
+            # so it is discarded; the caller requeues the task
+            died = True
+            poisoned = True
+            raise
         finally:
-            rec.finished_at = time.time()
-            self._in_flight[tenant] -= 1
-            self.pool.checkin(sandbox, discard=poisoned)
-            # end-to-end task latency (queue wait + all attempts), the
-            # per-tenant histogram the /metrics endpoint exports
-            self.telemetry.observe(
-                "scheduler.task_seconds",
-                rec.finished_at - rec.submitted_at,
-                tenant=tenant,
-            )
+            with self._lock:
+                self._in_flight[tenant] -= 1
+            if sandbox is not None:
+                self.pool.checkin(sandbox, discard=poisoned)
+            if not died and rec.state is TaskState.RUNNING:
+                # a non-sandbox failure (e.g. the pool factory raised)
+                # escaped the retry loop: terminal, not silently RUNNING
+                rec.state = TaskState.FAILED
+                if rec.error is None:
+                    rec.error = "execution aborted before first attempt"
+            if not died:
+                rec.finished_at = self._exec.now()
+                with self._lock:
+                    self._note(
+                        f"finish:{rec.state.value}", rec.task_id, tenant,
+                        worker,
+                    )
+                # end-to-end task latency (queue wait + all attempts), the
+                # per-tenant histogram the /metrics endpoint exports
+                self.telemetry.observe(
+                    "scheduler.task_seconds",
+                    rec.finished_at - rec.submitted_at,
+                    tenant=tenant,
+                )
+            self._exec.notify()            # slot freed: wake idle workers
 
     # --------------------------------------------------------------- status
 
     def record(self, task_id: int) -> TaskRecord:
         return self._records[task_id]
 
+    def records(self) -> List[TaskRecord]:
+        with self._lock:
+            return [self._records[tid] for tid in sorted(self._records)]
+
+    def trace(self) -> List[str]:
+        """Scheduling decisions in order; deterministic under SimExecutor."""
+        with self._lock:
+            return list(self._trace)
+
+    def trace_text(self) -> str:
+        return "\n".join(self.trace()) + "\n"
+
     def stats(self) -> Dict[str, int]:
-        out: Dict[str, int] = {}
-        for rec in self._records.values():
-            out[rec.state.value] = out.get(rec.state.value, 0) + 1
-        return out
+        with self._lock:
+            out: Dict[str, int] = {}
+            for rec in self._records.values():
+                out[rec.state.value] = out.get(rec.state.value, 0) + 1
+            return out
 
     def queue_depths(self) -> Dict[str, int]:
         """Pending tasks per tenant (the ``/metrics`` queue-depth gauge)."""
-        out: Dict[str, int] = {}
-        for _, _, task_id in self._queue:
-            tenant = self._records[task_id].spec.tenant
-            out[tenant] = out.get(tenant, 0) + 1
-        return out
+        with self._lock:
+            out: Dict[str, int] = {}
+            for tenant, heap in self._pending.items():
+                n = sum(
+                    1 for (_, _, tid) in heap
+                    if self._records[tid].state is TaskState.PENDING
+                )
+                if n:
+                    out[tenant] = n
+            return out
 
     def in_flight(self) -> Dict[str, int]:
         """Currently-running tasks per tenant."""
-        return {t: n for t, n in self._in_flight.items() if n}
+        with self._lock:
+            return {t: n for t, n in self._in_flight.items() if n}
+
+    @property
+    def worker_count(self) -> int:
+        return self._workers_n
+
+    def worker_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-worker busy time and task count (utilization metrics)."""
+        with self._lock:
+            return {
+                name: {
+                    "busy_seconds": self._worker_busy[name],
+                    "tasks": float(self._worker_tasks.get(name, 0)),
+                }
+                for name in sorted(self._worker_busy)
+            }
 
     def metrics_registry(self, namespace: str = "seepp") -> "MetricsRegistry":
         """A registry covering this scheduler's whole control plane."""

@@ -37,6 +37,9 @@ def main() -> None:
     ap.add_argument("--pool-watermark", type=int, default=0,
                     help="keep this many warm postprocess sandboxes via "
                          "the background refiller (0 = off)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="run request post-processors on this many "
+                         "concurrent scheduler workers (0 = inline)")
     ap.add_argument("--hold", type=float, default=0.0, metavar="SECONDS",
                     help="keep the process (and /metrics) alive after the "
                          "batch completes, e.g. to scrape it")
@@ -48,6 +51,7 @@ def main() -> None:
     srv = Server(model, params, ServerConfig(
         max_batch=args.max_batch, max_seq=args.max_seq,
         mm_legacy=args.legacy_arena, pool_watermark=args.pool_watermark,
+        workers=args.workers,
     ))
     if args.metrics_port is not None:
         endpoint = srv.serve_metrics(port=args.metrics_port)

@@ -28,6 +28,7 @@ from repro.core.policy import SandboxViolation
 from repro.core.pool import SandboxPool
 from repro.core.sandbox import Sandbox
 from repro.core.sentry import BudgetExceeded
+from repro.core.tasks import ServerlessScheduler, TaskSpec, TaskState, TenantQuota
 from repro.core.telemetry import TelemetrySink, resolve_sink
 
 __all__ = ["Request", "ServerConfig", "Server"]
@@ -43,6 +44,7 @@ class Request:
     tokens: List[int] = field(default_factory=list)
     done: bool = False
     latency_s: float = 0.0
+    error: Optional[str] = None          # postprocess failure (workers > 0)
 
 
 @dataclass
@@ -53,6 +55,7 @@ class ServerConfig:
     greedy: bool = True
     mm_legacy: bool = False              # paper A/B: legacy vs modern arena
     pool_watermark: int = 0              # >0: refill postprocess pool async
+    workers: int = 0                     # >0: concurrent postprocess plane
 
 
 class Server:
@@ -84,12 +87,28 @@ class Server:
         if cfg.pool_watermark > 0:
             self.pool.set_watermark(self._postprocess_tenant, cfg.pool_watermark)
             self.pool.start_refiller()
+        # concurrent postprocess plane: user post-processors dispatch to N
+        # scheduler workers instead of running inline on the decode loop
+        self.scheduler: Optional[ServerlessScheduler] = None
+        if cfg.workers > 0:
+            self.scheduler = ServerlessScheduler(
+                quotas={
+                    self._postprocess_tenant: TenantQuota(
+                        max_tasks_in_flight=cfg.workers
+                    )
+                },
+                admission=self.admission,
+                pool=self.pool,
+                workers=cfg.workers,
+            ).start()
         self.metrics = (
             MetricsRegistry()
             .register_sink(self.telemetry)
             .register_admission(self.admission)
             .register_pool(self.pool)
         )
+        if self.scheduler is not None:
+            self.metrics.register_scheduler(self.scheduler)
         self._metrics_server: Optional[MetricsHTTPServer] = None
         mm_cfg = (MMConfig.legacy if cfg.mm_legacy else MMConfig.modern)(
             granule=4096
@@ -104,6 +123,7 @@ class Server:
             max_seq_pages=seq_pages,
             pool_pages=4 * cfg.max_batch * seq_pages,
         )
+        self.metrics.register_arena(self.kv)   # §IV.A occupancy gauges
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self.completed: List[Request] = []
 
@@ -116,6 +136,7 @@ class Server:
         B = self.cfg.max_batch
         state = None
         t_start = time.perf_counter()
+        post_tasks: List[tuple] = []       # (task_id, request) when workers>0
 
         while queue or active:
             # admit
@@ -148,18 +169,34 @@ class Server:
                     r.done = True
                     r.latency_s = time.perf_counter() - t_start
                     if r.postprocess is not None:
-                        sb = self.pool.checkout(self._postprocess_tenant)
-                        poisoned = False
-                        try:
-                            out = sb.run(
-                                r.postprocess, jnp.asarray(r.tokens, jnp.int32)
-                            )
-                            r.tokens = [int(t) for t in np.asarray(out.value)]
-                        except (SandboxViolation, BudgetExceeded):
-                            poisoned = True
-                            raise
-                        finally:
-                            self.pool.checkin(sb, discard=poisoned)
+                        if self.scheduler is not None:
+                            # concurrent plane: decode never blocks on user
+                            # code; results are joined after the batch
+                            post_tasks.append((
+                                self.scheduler.submit(TaskSpec(
+                                    self._postprocess_tenant,
+                                    r.postprocess,
+                                    (jnp.asarray(r.tokens, jnp.int32),),
+                                    name=f"post-req{r.request_id}",
+                                )),
+                                r,
+                            ))
+                        else:
+                            sb = self.pool.checkout(self._postprocess_tenant)
+                            poisoned = False
+                            try:
+                                out = sb.run(
+                                    r.postprocess,
+                                    jnp.asarray(r.tokens, jnp.int32),
+                                )
+                                r.tokens = [
+                                    int(t) for t in np.asarray(out.value)
+                                ]
+                            except (SandboxViolation, BudgetExceeded):
+                                poisoned = True
+                                raise
+                            finally:
+                                self.pool.checkin(sb, discard=poisoned)
                     self.kv.drop_sequence(f"req{r.request_id}")
                     active.remove(r)
                     self.completed.append(r)
@@ -171,6 +208,23 @@ class Server:
                     )
             if retired and (queue or active):
                 state = None                       # rebatch after retirement
+
+        if post_tasks:
+            # join the concurrent postprocess plane: a denied/failed
+            # post-processor marks its own request and never takes down
+            # the batch (tenant isolation extends to user post-code)
+            self.scheduler.drain()
+            for task_id, r in post_tasks:
+                rec = self.scheduler.record(task_id)
+                if rec.state is TaskState.SUCCEEDED:
+                    r.tokens = [int(t) for t in np.asarray(rec.result.value)]
+                else:
+                    r.error = f"postprocess {rec.state.value}: {rec.error}"
+                    self.telemetry.emit(
+                        "server", "postprocess_failed",
+                        tenant=self._postprocess_tenant,
+                        detail=r.error,
+                    )
         return self.completed
 
     def _pad(self, active: List[Request]) -> List[Request]:
@@ -208,10 +262,12 @@ class Server:
         return self.metrics.dump()
 
     def close(self) -> None:
-        """Stop the metrics endpoint and the pool's background refiller."""
+        """Stop metrics, the postprocess workers and the pool refiller."""
         if self._metrics_server is not None:
             self._metrics_server.close()
             self._metrics_server = None
+        if self.scheduler is not None:
+            self.scheduler.shutdown()
         self.pool.stop_refiller()
 
     # ------------------------------------------------------------- report

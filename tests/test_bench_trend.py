@@ -1,0 +1,106 @@
+"""The CI bench trend check: regression detection over BENCH_*.json."""
+
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "benchmarks"))
+
+import trend_check  # noqa: E402
+
+
+def _write(d: Path, fname: str, payload: dict) -> None:
+    d.mkdir(parents=True, exist_ok=True)
+    (d / fname).write_text(json.dumps(payload))
+
+
+def test_lower_is_better_regression_detected():
+    old = {"warm_checkout_p50_us": 10.0}
+    assert trend_check.compare_metric(
+        old, {"warm_checkout_p50_us": 14.0},
+        "warm_checkout_p50_us", "lower", 0.30,
+    ) is not None
+    # within tolerance: 30% worse exactly is not "beyond" 30%
+    assert trend_check.compare_metric(
+        old, {"warm_checkout_p50_us": 13.0},
+        "warm_checkout_p50_us", "lower", 0.30,
+    ) is None
+    # improvements never fail
+    assert trend_check.compare_metric(
+        old, {"warm_checkout_p50_us": 2.0},
+        "warm_checkout_p50_us", "lower", 0.30,
+    ) is None
+
+
+def test_higher_is_better_regression_detected():
+    old = {"warm_speedup_x": 50.0}
+    assert trend_check.compare_metric(
+        old, {"warm_speedup_x": 20.0}, "warm_speedup_x", "higher", 0.30,
+    ) is not None
+    assert trend_check.compare_metric(
+        old, {"warm_speedup_x": 40.0}, "warm_speedup_x", "higher", 0.30,
+    ) is None
+    assert trend_check.compare_metric(
+        old, {"warm_speedup_x": 500.0}, "warm_speedup_x", "higher", 0.30,
+    ) is None
+
+
+def test_missing_or_degenerate_baselines_are_skipped():
+    assert trend_check.compare_metric(
+        {}, {"k": 1.0}, "k", "lower", 0.3
+    ) is None
+    assert trend_check.compare_metric(
+        {"k": 0.0}, {"k": 1.0}, "k", "lower", 0.3
+    ) is None
+
+
+def test_run_flags_only_regressed_artifacts(tmp_path):
+    old, new = tmp_path / "old", tmp_path / "new"
+    _write(old, "BENCH_pool.json", {"warm_checkout_p50_us": 10.0})
+    _write(new, "BENCH_pool.json", {"warm_checkout_p50_us": 20.0})   # bad
+    _write(old, "BENCH_admission.json", {"warm_speedup_x": 50.0})
+    _write(new, "BENCH_admission.json", {"warm_speedup_x": 55.0})    # fine
+    regressions, checked, skipped = trend_check.run(str(old), str(new))
+    assert len(regressions) == 1 and "BENCH_pool.json" in regressions[0]
+    assert len(checked) == 1 and "BENCH_admission.json" in checked[0]
+    assert skipped == ["BENCH_scheduler.json: no current artifact"]
+
+
+def test_first_run_without_baseline_passes(tmp_path):
+    new = tmp_path / "new"
+    _write(new, "BENCH_pool.json", {"warm_checkout_p50_us": 10.0})
+    rc = trend_check.main([
+        "--old-dir", str(tmp_path / "nonexistent"), "--new-dir", str(new),
+    ])
+    assert rc == 0
+
+
+def test_main_exit_codes_and_baseline_update(tmp_path):
+    old, new = tmp_path / "old", tmp_path / "new"
+    _write(old, "BENCH_scheduler.json", {"speedup_x": 4.0})
+    _write(new, "BENCH_scheduler.json", {"speedup_x": 1.5})
+    assert trend_check.main(
+        ["--old-dir", str(old), "--new-dir", str(new)]
+    ) == 1
+    # tolerant enough -> passes, and --update-baseline rolls forward
+    assert trend_check.main([
+        "--old-dir", str(old), "--new-dir", str(new),
+        "--tolerance", "0.90", "--update-baseline",
+    ]) == 0
+    rolled = json.loads((old / "BENCH_scheduler.json").read_text())
+    assert rolled["speedup_x"] == 1.5
+
+
+def test_pool_p50_noise_scale_doubles_tolerance(tmp_path):
+    """Absolute us-scale timings get a 2x noise scale: +50% passes the
+    default 30% gate, an order-of-magnitude jump still fails."""
+    old, new = tmp_path / "old", tmp_path / "new"
+    _write(old, "BENCH_pool.json", {"warm_checkout_p50_us": 5.0})
+    _write(new, "BENCH_pool.json", {"warm_checkout_p50_us": 7.5})   # +50%
+    regressions, checked, _ = trend_check.run(str(old), str(new))
+    assert regressions == [] and len(checked) == 1
+
+    _write(new, "BENCH_pool.json", {"warm_checkout_p50_us": 50.0})  # 10x
+    regressions, _, _ = trend_check.run(str(old), str(new))
+    assert len(regressions) == 1

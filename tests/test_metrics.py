@@ -309,3 +309,108 @@ def test_admission_histograms_exported():
     text = reg.render()
     assert "seepp_admission_cold_seconds_bucket" in text
     assert "seepp_admission_cache_entries 1" in text
+
+
+# ------------------------------------------- per-tenant admission stats
+
+
+def test_per_tenant_admission_stats_exposition_format():
+    """The /metrics follow-on: tenant-labelled hit/miss/denial counters."""
+    ctl = AdmissionController()
+    pol = ModernEmulationPolicy()
+    fn = lambda a: (a * 2).sum()
+    args = (jnp.ones(4),)
+    ctl.admit(fn, args, policy=pol, tenant="alice")      # miss
+    ctl.admit(fn, args, policy=pol, tenant="alice")      # hit
+    ctl.admit(fn, args, policy=pol, tenant="bob")        # hit (shared cache)
+    by_tenant = ctl.stats_by_tenant()
+    assert by_tenant["alice"] == {"hits": 1, "misses": 1, "denials": 0}
+    assert by_tenant["bob"] == {"hits": 1, "misses": 0, "denials": 0}
+
+    text = (
+        MetricsRegistry().register_admission(ctl).render()
+    )
+    assert re.search(
+        r'^seepp_admission_tenant_cache_hit_total\{tenant="alice"\} 1$',
+        text, re.M,
+    ), text
+    assert re.search(
+        r'^seepp_admission_tenant_cache_miss_total\{tenant="alice"\} 1$',
+        text, re.M,
+    )
+    assert re.search(
+        r'^seepp_admission_tenant_cache_hit_total\{tenant="bob"\} 1$',
+        text, re.M,
+    )
+    # every sample line in the new families parses as valid exposition
+    for line in text.splitlines():
+        if line.startswith("seepp_admission_tenant_"):
+            assert SAMPLE_RE.match(line), line
+    # global counters unchanged by the split
+    assert "seepp_admission_cache_hit_total 2" in text
+    assert "seepp_admission_cache_miss_total 1" in text
+
+
+def test_per_tenant_admission_denials_exported():
+    import jax
+
+    ctl = AdmissionController()
+    pol = ModernEmulationPolicy()
+
+    def evil(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+        )
+
+    with pytest.raises(Exception):
+        ctl.admit(evil, (jnp.ones(2),), policy=pol, tenant="mallory")
+    text = MetricsRegistry().register_admission(ctl).render()
+    assert re.search(
+        r'^seepp_admission_tenant_denied_total\{tenant="mallory"\} 1$',
+        text, re.M,
+    ), text
+
+
+# ------------------------------------------------- arena / VMA gauges
+
+
+def test_register_arena_occupancy_gauges():
+    """The /metrics follow-on: live arena/VMA occupancy, scrape-sampled."""
+    from repro.core import PagedKVAllocator
+    from repro.core.mm import MMConfig
+
+    kv = PagedKVAllocator(
+        MMConfig.modern(granule=4096), tokens_per_page=16, token_bytes=64,
+        max_seq_pages=8, pool_pages=64,
+    )
+    reg = MetricsRegistry().register_arena(kv)
+    before = reg.dump()
+    assert before["seepp_arena_live_sequences"][""] == 0
+    assert before["seepp_arena_contiguous_runs"][""] == 0
+
+    kv.add_sequence("s0")
+    kv.append_tokens("s0", 40)          # forces page faults
+    kv.add_sequence("s1")
+    kv.append_tokens("s1", 16)
+    after = reg.dump()
+    assert after["seepp_arena_live_sequences"][""] == 2
+    assert after["seepp_arena_contiguous_runs"][""] >= 1
+    assert after["seepp_arena_host_vmas"][""] >= 1
+    assert (
+        after["seepp_arena_host_vma_high_water"][""]
+        >= after["seepp_arena_host_vmas"][""]
+    )
+
+    kv.drop_sequence("s0")
+    kv.drop_sequence("s1")
+    final = reg.dump()
+    assert final["seepp_arena_live_sequences"][""] == 0
+    # high-water is monotonic even after the arena empties
+    assert final["seepp_arena_host_vma_high_water"][""] >= 1
+
+    text = reg.render()
+    for family in (
+        "seepp_arena_host_vmas", "seepp_arena_host_vma_high_water",
+        "seepp_arena_contiguous_runs", "seepp_arena_live_sequences",
+    ):
+        assert f"# TYPE {family} gauge" in text, family
