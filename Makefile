@@ -1,10 +1,20 @@
 PYTHON ?= python
 
-.PHONY: test lint bench bench-smoke bench-trend ci dev-deps
+.PHONY: test lint bench bench-smoke bench-trend chaos ci dev-deps
 
 # tier-1 verification: the exact command CI and ROADMAP.md reference
+# (includes the scheduler chaos suite at its fixed default seed window)
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+# chaos sweep over a rotating seed window (a new 200-seed slice each
+# day), exploring interleavings CI's fixed window never visits; a
+# failure prints its replay seed — rerun it alone with
+# CHAOS_SEED_START=<seed> CHAOS_SEED_COUNT=1
+chaos:
+	CHAOS_SEED_START=$$(( ($$(date +%s) / 86400 % 5000) * 200 )) \
+	CHAOS_SEED_COUNT=200 \
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_scheduler_chaos.py
 
 # same invocation as the CI lint job (config in ruff.toml)
 lint:

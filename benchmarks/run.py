@@ -73,6 +73,8 @@ def main() -> None:
     sb = scheduler_bench.main()
     rows += [
         ("scheduler_concurrent_speedup_x", sb["speedup_x"], "target:>=2x"),
+        ("scheduler_steal_speedup_x", sb["steal_speedup_x"],
+         "skewed tenant, target:>=2x"),
         ("scheduler_sim_deterministic", float(sb["sim_deterministic"]),
          "3 same-seed runs byte-identical"),
     ]

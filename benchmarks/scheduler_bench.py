@@ -11,7 +11,14 @@ fast (2ms), medium (10ms) and slow (30ms) sandboxed tasks — through
 
 and reports tasks/second for each.  Target: **>= 2x** with 4 workers.
 
-It then proves the determinism story: the same workload under a
+It then measures **work stealing** on a skewed-tenant load: every worker
+is pinned (affinity) to its own tenant, but only one tenant — ``hot``,
+below its in-flight cap — has any work.  Without stealing the other
+workers idle and throughput collapses to one worker's; with stealing
+they drain the hot backlog.  Target: **>= 2x** steal speedup with 4
+workers.
+
+Finally it proves the determinism story: the same workload under a
 ``SimExecutor`` with one seed, run three times, must produce
 **byte-identical scheduling traces** (and identical TaskRecord
 histories).  ``--json-out`` writes a ``BENCH_scheduler.json`` artifact
@@ -96,6 +103,44 @@ def run_real(n_tasks: int, workers: int) -> float:
     return n_tasks / wall
 
 
+def run_skewed(n_tasks: int, workers: int, *, steal: bool) -> float:
+    """Tasks/second on the skewed-tenant workload (real threads).
+
+    ``workers`` tenants, one worker pinned to each; all ``n_tasks`` land
+    on the first tenant (``hot``, cap = workers, i.e. unthrottled).  With
+    ``steal=False`` only hot's home worker may serve them; with stealing
+    the idle workers take over the backlog.
+    """
+    import numpy as np
+
+    tenants = ["hot"] + [f"idle{i}" for i in range(1, workers)]
+    affinity = {f"w{i}": [tenants[i]] for i in range(workers)}
+    quotas = {t: TenantQuota(max_tasks_in_flight=workers) for t in tenants}
+    sched = ServerlessScheduler(
+        workers=workers, quotas=quotas, affinity=affinity, steal=steal,
+    )
+
+    def task(x):
+        time.sleep(0.004)             # I/O region: releases the GIL
+        return x
+
+    x = np.ones(4, np.float32)
+    ids = [sched.submit(TaskSpec("hot", task, (x,), name=f"skew{i}"))
+           for i in range(n_tasks)]
+    t0 = time.perf_counter()
+    sched.start()
+    sched.drain(timeout=120)
+    wall = time.perf_counter() - t0
+    bad = [i for i in ids if sched.record(i).state is not TaskState.SUCCEEDED]
+    assert not bad, f"tasks not succeeded: {bad}"
+    if steal:
+        assert sched.steal_count > 0, "skewed run recorded no steals"
+    else:
+        assert sched.steal_count == 0
+    sched.shutdown()
+    return n_tasks / wall
+
+
 def run_sim(n_tasks: int, workers: int, seed: int):
     """The same workload under the deterministic simulator."""
     sim = SimExecutor(seed=seed)
@@ -122,6 +167,12 @@ def main(
     concurrent_tps = run_real(tasks, workers=workers)
     speedup = concurrent_tps / serial_tps
 
+    # ---- skewed tenant: work stealing vs pinned-only dispatch ---------
+    skew_tasks = max(20, tasks // 2)
+    nosteal_tps = run_skewed(skew_tasks, workers, steal=False)
+    steal_tps = run_skewed(skew_tasks, workers, steal=True)
+    steal_speedup = steal_tps / nosteal_tps
+
     # ---- determinism: same seed => byte-identical scheduling trace ----
     runs = [run_sim(tasks, workers, seed) for _ in range(3)]
     digests = [
@@ -139,6 +190,10 @@ def main(
     print(f"  serial drain        : {serial_tps:8.1f} tasks/s")
     print(f"  {workers} workers           : {concurrent_tps:8.1f} tasks/s "
           f"({speedup:.1f}x)")
+    print(f"  skewed, no stealing : {nosteal_tps:8.1f} tasks/s "
+          f"(1 of {workers} workers eligible)")
+    print(f"  skewed, stealing    : {steal_tps:8.1f} tasks/s "
+          f"({steal_speedup:.1f}x)")
     print(f"  sim determinism     : 3 runs seed={seed} -> "
           f"trace sha256 {digests[0][:16]}... identical={deterministic}")
 
@@ -148,6 +203,9 @@ def main(
         "serial_tasks_per_s": serial_tps,
         "concurrent_tasks_per_s": concurrent_tps,
         "speedup_x": speedup,
+        "skewed_nosteal_tasks_per_s": nosteal_tps,
+        "skewed_steal_tasks_per_s": steal_tps,
+        "steal_speedup_x": steal_speedup,
         "sim_trace_sha256": digests[0],
         "sim_deterministic": deterministic,
     }

@@ -8,7 +8,8 @@ regression** (default 30%) of any tracked metric:
 
 * ``BENCH_pool.json`` ``warm_checkout_p50_us`` (lower is better),
 * ``BENCH_admission.json`` ``warm_speedup_x`` (higher is better),
-* ``BENCH_scheduler.json`` ``speedup_x`` (higher is better).
+* ``BENCH_scheduler.json`` ``speedup_x`` (higher is better),
+* ``BENCH_scheduler.json`` ``steal_speedup_x`` (higher is better).
 
 Missing baselines are *skipped*, not failed — the first run of a branch,
 a renamed artifact, or a new metric must not break CI.  Locally,
@@ -36,6 +37,7 @@ TRACKED = (
     ("BENCH_pool.json", "warm_checkout_p50_us", "lower", 2.0),
     ("BENCH_admission.json", "warm_speedup_x", "higher", 1.0),
     ("BENCH_scheduler.json", "speedup_x", "higher", 1.0),
+    ("BENCH_scheduler.json", "steal_speedup_x", "higher", 1.0),
 )
 
 

@@ -75,11 +75,15 @@ from .sim import (
     WorkerKilled,
 )
 from .tasks import (
+    CancelToken,
     ServerlessScheduler,
+    TaskPreempted,
     TaskRecord,
     TaskSpec,
     TaskState,
     TenantQuota,
+    checkpoint,
+    current_cancel_token,
 )
 from .telemetry import Histogram, TelemetryEvent, TelemetrySink
 from .vma import (

@@ -28,7 +28,7 @@ import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import numpy as np
@@ -189,6 +189,13 @@ class AdmissionController:
         # cache itself stays global — verification is tenant-independent,
         # only the *accounting* is attributed
         self._per_tenant: Dict[str, Dict[str, int]] = {}
+        # quota-slot ledger: tenant -> [acquired, released].  The
+        # scheduler mirrors every in-flight slot it reserves/frees here,
+        # giving the admission plane an independent second account of
+        # slot lifetimes — after a clean drain the two books must agree
+        # (slot_balance() == {}), so a leaked slot on ANY release path
+        # (preemption, worker death, heartbeat reap) is detectable
+        self._slots: Dict[str, List[int]] = {}
         # the concurrent scheduler admits from many workers at once: all
         # cache and counter mutations happen under this lock (tracing and
         # verification stay outside it so cold admissions don't serialize)
@@ -368,6 +375,38 @@ class AdmissionController:
         """Per-tenant hit/miss/denial counts (``/metrics`` follow-on)."""
         with self._lock:
             return {t: dict(b) for t, b in self._per_tenant.items()}
+
+    # ------------------------------------------------- quota-slot ledger
+
+    def slot_acquired(self, tenant: str) -> None:
+        """Record one in-flight quota slot reserved for ``tenant``."""
+        with self._lock:
+            self._slots.setdefault(tenant, [0, 0])[0] += 1
+
+    def slot_released(self, tenant: str) -> None:
+        """Record one in-flight quota slot released for ``tenant``."""
+        with self._lock:
+            self._slots.setdefault(tenant, [0, 0])[1] += 1
+
+    def slot_stats(self) -> Dict[str, Dict[str, int]]:
+        """Acquired/released slot counts per tenant."""
+        with self._lock:
+            return {
+                t: {"acquired": a, "released": r}
+                for t, (a, r) in self._slots.items()
+            }
+
+    def slot_balance(self) -> Dict[str, int]:
+        """Outstanding (acquired - released) slots per tenant.
+
+        Empty after a clean drain; any surviving entry is a leaked slot —
+        the chaos suite asserts this after every seed.
+        """
+        with self._lock:
+            return {
+                t: a - r for t, (a, r) in sorted(self._slots.items())
+                if a != r
+            }
 
 
 # ---------------------------------------------------------------------------

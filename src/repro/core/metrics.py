@@ -383,6 +383,44 @@ class MetricsRegistry:
                 for tenant in sorted(tenant_merged):
                     fam.add(tenant_merged[tenant][key], {"tenant": tenant})
                 fams.append(fam)
+
+        # quota-slot ledger: the scheduler mirrors slot acquire/release
+        # into the admission plane; the outstanding balance is the leak
+        # detector (should scrape as 0 whenever the plane is drained)
+        slot_merged: Dict[str, Dict[str, int]] = {}
+        for ctl in admissions:
+            slot_fn = getattr(ctl, "slot_stats", None)
+            if slot_fn is None:
+                continue
+            for tenant, bucket in slot_fn().items():
+                agg = slot_merged.setdefault(
+                    tenant, {"acquired": 0, "released": 0}
+                )
+                agg["acquired"] += bucket.get("acquired", 0)
+                agg["released"] += bucket.get("released", 0)
+        if slot_merged:
+            slot_families = [
+                ("acquired", "admission_tenant_slots_acquired_total",
+                 "Quota slots reserved per tenant (scheduler mirror)."),
+                ("released", "admission_tenant_slots_released_total",
+                 "Quota slots released per tenant (scheduler mirror)."),
+            ]
+            for key, name, text in slot_families:
+                fam = _Family(self._n(name), "counter", text)
+                for tenant in sorted(slot_merged):
+                    fam.add(slot_merged[tenant][key], {"tenant": tenant})
+                fams.append(fam)
+            balance = _Family(
+                self._n("admission_tenant_slots_in_flight"), "gauge",
+                "Outstanding quota slots per tenant "
+                "(acquired - released; nonzero after drain = leak).",
+            )
+            for tenant in sorted(slot_merged):
+                agg = slot_merged[tenant]
+                balance.add(
+                    agg["acquired"] - agg["released"], {"tenant": tenant}
+                )
+            fams.append(balance)
         return fams
 
     def _scheduler_families(self, schedulers: List[Any]) -> List[_Family]:
@@ -446,6 +484,22 @@ class MetricsRegistry:
         fams = [depth, flight, states, workers]
         if worker_busy:
             fams += [busy, per_worker]
+        # resilience counters: stealing, cooperative preemption and the
+        # two worker-reaping paths (heartbeat timeout, straggler evict)
+        resilience = [
+            ("steal_count", "scheduler_steal_total",
+             "Tasks stolen from a foreign tenant by an idle worker."),
+            ("preempt_count", "scheduler_preempted_total",
+             "Running tasks preempted (cancel() or run-deadline expiry)."),
+            ("heartbeat_death_count", "scheduler_heartbeat_death_total",
+             "Workers reaped after their heartbeat went dark mid-task."),
+            ("straggler_evict_count", "scheduler_straggler_evict_total",
+             "Workers evicted by the straggler detector."),
+        ]
+        for attr, name, text in resilience:
+            fam = _Family(self._n(name), "counter", text)
+            fam.add(sum(getattr(s, attr, 0) for s in schedulers))
+            fams.append(fam)
         return fams
 
     # -------------------------------------------------------------- output

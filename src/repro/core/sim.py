@@ -30,7 +30,12 @@ including in the middle of a task's ``sleep`` — and
 :meth:`SimExecutor.call_later` schedules arbitrary callbacks (kills,
 submissions, cancellations) at virtual times.  ``WorkerKilled`` derives
 from ``BaseException`` so task code's ``except Exception`` can never
-swallow an injected death.
+swallow an injected death.  :meth:`SimExecutor.slow` stretches one
+worker's subsequent ``sleep`` durations by a factor — the node-level
+"sick host" fault: a slowed worker keeps running but stops making
+progress (and stops heartbeating) fast enough, so chaos tests can
+exercise heartbeat-timeout death and straggler eviction instead of
+only direct kills.
 """
 
 from __future__ import annotations
@@ -237,7 +242,7 @@ _NEW, _READY, _RUNNING, _SLEEPING, _IDLE, _DONE = (
 class _SimWorker:
     __slots__ = (
         "name", "thread", "event", "state", "wake_at", "die", "error",
-        "killed",
+        "killed", "slow_factor",
     )
 
     def __init__(self, name: str) -> None:
@@ -249,6 +254,7 @@ class _SimWorker:
         self.die = False
         self.error: Optional[BaseException] = None
         self.killed = False
+        self.slow_factor = 1.0             # straggler fault: sleeps stretch
 
 
 class SimExecutor(Executor):
@@ -335,7 +341,7 @@ class SimExecutor(Executor):
             self.clock.advance(seconds)
             self._fire_due_timers()
             return
-        worker.wake_at = self.clock.now() + float(seconds)
+        worker.wake_at = self.clock.now() + float(seconds) * worker.slow_factor
         self._park(worker, _SLEEPING)
 
     def idle_wait(self) -> None:
@@ -362,6 +368,23 @@ class SimExecutor(Executor):
         if worker.state in (_SLEEPING, _IDLE):
             worker.wake_at = None
             worker.state = _READY          # schedulable so it can die now
+        return True
+
+    def slow(self, name: str, factor: float) -> bool:
+        """Stretch ``name``'s future ``sleep`` durations by ``factor``.
+
+        The "sick node" fault: the worker stays alive and keeps its state,
+        but a 0.01s sleep now burns ``0.01 * factor`` virtual seconds — long
+        enough and a heartbeat monitor declares it dead, or a straggler
+        detector flags it for eviction.  ``factor=1.0`` heals the worker.
+        Returns False if the worker has already exited.
+        """
+        if factor <= 0:
+            raise ValueError(f"slow factor must be positive ({factor})")
+        worker = self._workers[name]
+        if worker.state == _DONE:
+            return False
+        worker.slow_factor = float(factor)
         return True
 
     def call_at(self, when: float, fn: Callable[[], None]) -> None:

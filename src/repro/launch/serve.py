@@ -40,6 +40,12 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=0,
                     help="run request post-processors on this many "
                          "concurrent scheduler workers (0 = inline)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="reap postprocess workers silent this long "
+                         "mid-task; their task requeues exactly once and "
+                         "a replacement worker is spawned (0 = off; "
+                         "needs --workers > 0)")
     ap.add_argument("--hold", type=float, default=0.0, metavar="SECONDS",
                     help="keep the process (and /metrics) alive after the "
                          "batch completes, e.g. to scrape it")
@@ -51,7 +57,7 @@ def main() -> None:
     srv = Server(model, params, ServerConfig(
         max_batch=args.max_batch, max_seq=args.max_seq,
         mm_legacy=args.legacy_arena, pool_watermark=args.pool_watermark,
-        workers=args.workers,
+        workers=args.workers, heartbeat_timeout_s=args.heartbeat_timeout,
     ))
     if args.metrics_port is not None:
         endpoint = srv.serve_metrics(port=args.metrics_port)

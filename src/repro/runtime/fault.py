@@ -5,13 +5,20 @@ is unit-testable without hardware:
 
 * :class:`HeartbeatMonitor` — per-worker liveness with a miss threshold;
   the trainer polls ``dead_workers()`` each step and triggers the
-  restart-from-checkpoint path when nonempty.
+  restart-from-checkpoint path when nonempty.  The scheduler
+  (:meth:`repro.core.tasks.ServerlessScheduler.enable_heartbeats`) reuses
+  it with ``clock=executor.now``, so the same monitor judges liveness by
+  wall time under :class:`~repro.core.sim.ThreadExecutor` and by virtual
+  time under :class:`~repro.core.sim.SimExecutor`.
 * :class:`StragglerDetector` — robust (median/MAD) per-worker step-time
   z-scores; persistent outliers are flagged for eviction *before* they
   become failures — the mitigation is re-meshing without them (elastic.py)
   rather than waiting on a 10x-slow host every step.
 * :class:`FailureInjector` — deterministic chaos hooks for tests and the
-  fault-tolerance example.
+  fault-tolerance example.  :meth:`FailureInjector.arm` adapts a plan of
+  node-level faults (kills, slowdowns at virtual times) onto a
+  ``SimExecutor``, so scheduler chaos tests express "node w1 gets sick at
+  t=0.2" instead of hand-scheduled ``call_at`` lambdas.
 """
 
 from __future__ import annotations
@@ -20,7 +27,7 @@ import threading
 import time
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Set
+from typing import Callable, Dict, List, Optional, Set
 
 __all__ = ["HeartbeatMonitor", "StragglerDetector", "FailureInjector",
            "WorkerFailure"]
@@ -55,13 +62,22 @@ class HeartbeatMonitor:
         with self._lock:
             self._last.pop(worker, None)
 
+    def last(self, worker: str) -> Optional[float]:
+        """Timestamp of the worker's last beat (None if never seen)."""
+        with self._lock:
+            return self._last.get(worker)
+
     def workers(self) -> List[str]:
         with self._lock:
             return sorted(self._last)
 
 
 class StragglerDetector:
-    """Median/MAD z-score over a sliding window of per-worker step times."""
+    """Median/MAD z-score over a sliding window of per-worker step times.
+
+    Thread-safe: the scheduler records step times from every worker
+    thread while a control thread polls ``stragglers()``.
+    """
 
     def __init__(self, *, window: int = 32, z_threshold: float = 4.0,
                  min_steps: int = 8, patience: int = 3):
@@ -73,44 +89,64 @@ class StragglerDetector:
             lambda: deque(maxlen=window)
         )
         self._strikes: Dict[str, int] = defaultdict(int)
+        self._lock = threading.Lock()
 
     def record(self, worker: str, step_time_s: float) -> None:
-        self._times[worker].append(step_time_s)
+        with self._lock:
+            self._times[worker].append(step_time_s)
 
-    def _medians(self) -> Dict[str, float]:
+    def _medians_locked(self) -> Dict[str, float]:
         return {
             w: sorted(ts)[len(ts) // 2] for w, ts in self._times.items() if ts
         }
 
     def stragglers(self) -> List[str]:
-        meds = self._medians()
-        if len(meds) < 2:
-            return []
-        vals = sorted(meds.values())
-        global_med = vals[len(vals) // 2]
-        mad = sorted(abs(v - global_med) for v in vals)[len(vals) // 2]
-        scale = max(mad * 1.4826, global_med * 0.01, 1e-9)
-        out = []
-        for w, v in meds.items():
-            if len(self._times[w]) < self.min_steps:
-                continue
-            z = (v - global_med) / scale
-            if z > self.z_threshold:
-                self._strikes[w] += 1
-            else:
-                self._strikes[w] = 0
-            if self._strikes[w] >= self.patience:
-                out.append(w)
-        return sorted(out)
+        with self._lock:
+            meds = self._medians_locked()
+            if len(meds) < 2:
+                return []
+            vals = sorted(meds.values())
+            global_med = vals[len(vals) // 2]
+            mad = sorted(abs(v - global_med) for v in vals)[len(vals) // 2]
+            scale = max(mad * 1.4826, global_med * 0.01, 1e-9)
+            out = []
+            for w, v in meds.items():
+                if len(self._times[w]) < self.min_steps:
+                    continue
+                z = (v - global_med) / scale
+                if z > self.z_threshold:
+                    self._strikes[w] += 1
+                else:
+                    self._strikes[w] = 0
+                if self._strikes[w] >= self.patience:
+                    out.append(w)
+            return sorted(out)
+
+    def strikes(self) -> Dict[str, int]:
+        """Current strike count per worker (observability/debugging)."""
+        with self._lock:
+            return dict(self._strikes)
 
 
 @dataclass
 class FailureInjector:
-    """Deterministic chaos: fail worker W at step N, or slow it down."""
+    """Deterministic chaos: fail worker W at step N, or slow it down.
+
+    Two planes share this planner: the trainer's step-indexed hooks
+    (``fail_at``/``slow_at`` + :meth:`check`/:meth:`step_time`), and the
+    scheduler sim's *time*-indexed node faults (``kill_at_t``/
+    ``slow_at_t`` + :meth:`arm`), where faults land at virtual times on a
+    :class:`~repro.core.sim.SimExecutor`.
+    """
 
     fail_at: Dict[int, List[str]] = field(default_factory=dict)
     slow_at: Dict[str, float] = field(default_factory=dict)  # worker→factor
     killed: Set[str] = field(default_factory=set)
+    #: virtual time → workers to kill outright (direct node loss)
+    kill_at_t: Dict[float, List[str]] = field(default_factory=dict)
+    #: virtual time → {worker: slow factor} (node gets sick, stops
+    #: beating fast enough — the heartbeat-timeout death path)
+    slow_at_t: Dict[float, Dict[str, float]] = field(default_factory=dict)
 
     def check(self, step: int) -> None:
         victims = [w for w in self.fail_at.get(step, []) if w not in self.killed]
@@ -120,3 +156,23 @@ class FailureInjector:
 
     def step_time(self, worker: str, base_s: float) -> float:
         return base_s * self.slow_at.get(worker, 1.0)
+
+    def arm(self, sim) -> None:
+        """Schedule the time-indexed plan onto a ``SimExecutor``.
+
+        Kills use ``sim.kill`` (the worker dies at its next scheduling
+        point); slowdowns use ``sim.slow`` (the worker lives but its
+        sleeps stretch, so heartbeat monitors see it go dark).  The plan
+        is sorted, so identical plans replay identically per sim seed.
+        """
+        for when in sorted(self.kill_at_t):
+            def _kill(victims=tuple(self.kill_at_t[when])) -> None:
+                for w in victims:
+                    if sim.kill(w):
+                        self.killed.add(w)
+            sim.call_at(when, _kill)
+        for when in sorted(self.slow_at_t):
+            def _slow(pairs=tuple(sorted(self.slow_at_t[when].items()))) -> None:
+                for w, factor in pairs:
+                    sim.slow(w, factor)
+            sim.call_at(when, _slow)

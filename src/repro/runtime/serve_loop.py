@@ -56,6 +56,12 @@ class ServerConfig:
     mm_legacy: bool = False              # paper A/B: legacy vs modern arena
     pool_watermark: int = 0              # >0: refill postprocess pool async
     workers: int = 0                     # >0: concurrent postprocess plane
+    #: >0: reap postprocess workers silent this long mid-task (their task
+    #: requeues exactly once, a replacement worker is spawned).  Post-
+    #: processors legitimately running longer than this must call
+    #: ``repro.core.checkpoint()`` periodically — it heartbeats the
+    #: worker (and honors preemption), so live progress is never reaped
+    heartbeat_timeout_s: float = 0.0
 
 
 class Server:
@@ -101,6 +107,16 @@ class Server:
                 pool=self.pool,
                 workers=cfg.workers,
             ).start()
+            if cfg.heartbeat_timeout_s > 0:
+                # node-fault tolerance for user post-code: a worker hung
+                # inside a post-processor is reaped, its request's task
+                # requeued once, and a fresh worker keeps the plane full
+                self.scheduler.enable_heartbeats(
+                    cfg.heartbeat_timeout_s, replace_dead=True,
+                )
+                self.scheduler.start_heartbeat_watchdog(
+                    interval_s=max(1e-3, cfg.heartbeat_timeout_s / 4),
+                )
         self.metrics = (
             MetricsRegistry()
             .register_sink(self.telemetry)

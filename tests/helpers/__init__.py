@@ -1,0 +1,1 @@
+"""Shared test helpers (not collected as tests)."""

@@ -1,0 +1,146 @@
+"""Scheduler safety invariants shared by the chaos, concurrent and sim
+tests.
+
+PR 3 grew its safety assertions (single sandbox ownership, quota caps,
+completion accounting) inline in ``test_scheduler_concurrent.py``; the
+chaos suite needs the same checks over hundreds of seeds, so they live
+here once:
+
+* :class:`AuditedPool` — a :class:`~repro.core.pool.SandboxPool` that
+  records double checkouts (two owners of one sandbox = isolation bug).
+* :class:`WatchedScheduler` — a :class:`~repro.core.tasks.
+  ServerlessScheduler` recording the per-tenant in-flight high-water mark
+  at reservation time (the instant the count can peak), so quota
+  overshoot is observable without probes inside task bodies.
+* :func:`check_drain_invariants` — every global invariant that must hold
+  after ``drain()``, in one call.  Pass ``ctx`` (e.g. ``"seed=17"``) and
+  every failure message carries the replay seed.
+"""
+
+from repro.core import SandboxPool, ServerlessScheduler, TaskState
+from repro.core.tasks import TERMINAL_STATES
+
+__all__ = [
+    "AuditedPool",
+    "WatchedScheduler",
+    "check_drain_invariants",
+]
+
+
+class AuditedPool(SandboxPool):
+    """SandboxPool asserting single ownership of every checkout."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.live = set()
+        self.double_checkouts = []
+
+    def checkout(self, tenant):
+        sb = super().checkout(tenant)
+        if id(sb) in self.live:
+            self.double_checkouts.append((tenant, id(sb)))
+        self.live.add(id(sb))
+        return sb
+
+    def checkin(self, sandbox, *, discard=False):
+        self.live.discard(id(sandbox))
+        super().checkin(sandbox, discard=discard)
+
+
+class WatchedScheduler(ServerlessScheduler):
+    """Scheduler recording the per-tenant in-flight high-water mark."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.max_in_flight = {}
+
+    def _reserve_locked(self, tenant, worker):
+        task_id = super()._reserve_locked(tenant, worker)
+        n = self._in_flight.get(tenant, 0)
+        if n > self.max_in_flight.get(tenant, 0):
+            self.max_in_flight[tenant] = n
+        return task_id
+
+
+#: terminal states whose transition lands as a ``finish:<state>`` trace
+#: line (EXPIRED and CANCELLED are swept pre-dispatch and trace as
+#: ``expire`` / ``cancel`` instead)
+_FINISH_STATES = frozenset({
+    TaskState.SUCCEEDED, TaskState.FAILED, TaskState.DENIED,
+    TaskState.PREEMPTED,
+})
+
+
+def _finish_ids(sched):
+    return [
+        int(line.split("task=")[1].split(" ")[0])
+        for line in sched.trace() if " finish:" in line
+    ]
+
+
+def check_drain_invariants(sched, ids, *, quotas=None, ctx=""):
+    """Assert every global safety invariant after a ``drain()``.
+
+    * every submitted task reached a terminal state (none lost),
+    * exactly one ``finish:`` transition per finished task (none doubled),
+    * no quota slot leaked (scheduler view AND the admission-plane slot
+      ledger agree on zero outstanding),
+    * no sandbox leaked or double-owned,
+    * nobody overshot its in-flight cap (``WatchedScheduler``),
+    * the worker-death requeue budget (exactly once) was respected.
+    """
+    tag = f" [{ctx}]" if ctx else ""
+
+    # -- completion accounting ------------------------------------------
+    non_terminal = {
+        i: sched.record(i).state for i in ids
+        if sched.record(i).state not in TERMINAL_STATES
+    }
+    assert not non_terminal, f"lost (non-terminal) tasks{tag}: {non_terminal}"
+
+    finished = _finish_ids(sched)
+    expect_finish = sorted(
+        i for i in ids if sched.record(i).state in _FINISH_STATES
+    )
+    assert sorted(finished) == expect_finish, (
+        f"finish transitions != finished tasks{tag}: "
+        f"{sorted(finished)} vs {expect_finish}"
+    )
+    assert len(finished) == len(set(finished)), (
+        f"task finished twice{tag}: {finished}"
+    )
+
+    # -- slot accounting -------------------------------------------------
+    assert sched.in_flight() == {}, (
+        f"leaked in-flight slots{tag}: {sched.in_flight()}"
+    )
+    assert sched.queue_depths() == {}, (
+        f"tasks still queued after drain{tag}: {sched.queue_depths()}"
+    )
+    balance = sched.admission.slot_balance()
+    assert balance == {}, f"slot ledger out of balance{tag}: {balance}"
+
+    # -- sandbox ownership ----------------------------------------------
+    assert sched.pool.checked_out() == 0, (
+        f"sandboxes never checked in{tag}: {sched.pool.checked_out()}"
+    )
+    double = getattr(sched.pool, "double_checkouts", [])
+    assert double == [], f"double checkouts{tag}: {double}"
+
+    # -- quota caps ------------------------------------------------------
+    observed = getattr(sched, "max_in_flight", {})
+    for tenant, peak in observed.items():
+        cap = (quotas or {}).get(tenant)
+        cap = cap.max_tasks_in_flight if cap is not None else (
+            sched.quota(tenant).max_tasks_in_flight
+        )
+        assert peak <= cap, (
+            f"quota overshoot{tag}: tenant={tenant} peak={peak} cap={cap}"
+        )
+
+    # -- death/requeue budget -------------------------------------------
+    over = {
+        i: sched.record(i).death_requeues for i in ids
+        if sched.record(i).death_requeues > 1
+    }
+    assert not over, f"requeue budget exceeded{tag}: {over}"

@@ -64,7 +64,25 @@ def test_run_flags_only_regressed_artifacts(tmp_path):
     regressions, checked, skipped = trend_check.run(str(old), str(new))
     assert len(regressions) == 1 and "BENCH_pool.json" in regressions[0]
     assert len(checked) == 1 and "BENCH_admission.json" in checked[0]
-    assert skipped == ["BENCH_scheduler.json: no current artifact"]
+    # both scheduler metrics ride on the one absent artifact
+    assert skipped == [
+        "BENCH_scheduler.json: no current artifact",
+        "BENCH_scheduler.json: no current artifact",
+    ]
+
+
+def test_steal_speedup_metric_is_gated(tmp_path):
+    """The skewed-tenant work-stealing speedup is its own tracked gate:
+    a collapse to ~1x (stealing broken) fails even when the plain
+    concurrency speedup is healthy."""
+    old, new = tmp_path / "old", tmp_path / "new"
+    _write(old, "BENCH_scheduler.json",
+           {"speedup_x": 3.0, "steal_speedup_x": 3.2})
+    _write(new, "BENCH_scheduler.json",
+           {"speedup_x": 3.1, "steal_speedup_x": 1.05})
+    regressions, checked, _ = trend_check.run(str(old), str(new))
+    assert len(regressions) == 1 and "steal_speedup_x" in regressions[0]
+    assert len(checked) == 1 and "speedup_x" in checked[0]
 
 
 def test_first_run_without_baseline_passes(tmp_path):

@@ -414,3 +414,46 @@ def test_register_arena_occupancy_gauges():
         "seepp_arena_contiguous_runs", "seepp_arena_live_sequences",
     ):
         assert f"# TYPE {family} gauge" in text, family
+
+
+def test_resilience_counter_families_and_slot_ledger_render():
+    """Steal/preempt/heartbeat/straggler counters + the quota-slot ledger
+    (the scheduler's admission-plane slot mirror) in the exposition."""
+    from repro.core import SimExecutor, TenantQuota
+
+    sim = SimExecutor(seed=0)
+    sched = ServerlessScheduler(
+        workers=2, executor=sim,
+        quotas={"hot": TenantQuota(max_tasks_in_flight=2)},
+        affinity={"w0": ["hot"], "w1": ["cold"]},
+    )
+
+    def slow(x):
+        sim.sleep(0.01)
+        return x.sum()
+
+    for _ in range(4):
+        sched.submit(TaskSpec("hot", slow, (jnp.ones(2),)))
+    sched.start()
+    sched.drain()
+    text = sched.metrics_registry().render()
+    assert re.search(r"^seepp_scheduler_steal_total [1-9]", text, re.M), text
+    for family in (
+        "seepp_scheduler_preempted_total",
+        "seepp_scheduler_heartbeat_death_total",
+        "seepp_scheduler_straggler_evict_total",
+        "seepp_admission_tenant_slots_acquired_total",
+        "seepp_admission_tenant_slots_released_total",
+        "seepp_admission_tenant_slots_in_flight",
+    ):
+        assert family in text, family
+    # drained plane: acquired == released, outstanding gauge reads 0
+    assert re.search(
+        r'^seepp_admission_tenant_slots_in_flight\{tenant="hot"\} 0$',
+        text, re.M,
+    ), text
+    dump = sched.metrics_registry().dump()
+    acq = dump["seepp_admission_tenant_slots_acquired_total"]['{tenant="hot"}']
+    rel = dump["seepp_admission_tenant_slots_released_total"]['{tenant="hot"}']
+    assert acq == rel == 4
+    sched.shutdown()

@@ -1,0 +1,396 @@
+"""Chaos/property suite for the resilient scheduler plane.
+
+Replays a seed-parameterized multi-tenant workload through
+:class:`~repro.core.sim.SimExecutor` with *injected chaos* — cooperative
+preemption, work stealing (affinity on half the seeds), node kills,
+sick-node slowdowns reaped by heartbeat timeout, expiring deadlines —
+and asserts the global safety invariants from
+:mod:`helpers.invariants` after every drain:
+
+* no lost or doubled completions,
+* no quota-slot leak (scheduler view and the admission-plane slot
+  ledger must both read zero),
+* no sandbox leak or double checkout,
+* no in-flight cap overshoot,
+* the worker-death requeue budget (exactly once) respected.
+
+Every failure message carries ``seed=N``; the schedule is a pure
+function of the seed, so replay is::
+
+    CHAOS_SEED_START=N CHAOS_SEED_COUNT=1 \
+        PYTHONPATH=src python -m pytest tests/test_scheduler_chaos.py
+
+CI runs the fixed default window (seeds 0..119); ``make chaos`` sweeps a
+rotating window locally.
+"""
+
+import os
+import random
+import threading
+import time
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+from helpers.invariants import (
+    AuditedPool,
+    WatchedScheduler,
+    check_drain_invariants,
+)
+
+from repro.core import (
+    ServerlessScheduler,
+    SimExecutor,
+    TaskSpec,
+    TaskState,
+    TenantQuota,
+    checkpoint,
+)
+from repro.runtime.fault import FailureInjector
+
+CHAOS_SEED_START = int(os.environ.get("CHAOS_SEED_START", "0"))
+CHAOS_SEED_COUNT = int(os.environ.get("CHAOS_SEED_COUNT", "120"))
+SEEDS = range(CHAOS_SEED_START, CHAOS_SEED_START + CHAOS_SEED_COUNT)
+REPLAY_STRIDE = 10        # every 10th seed is re-run byte-for-byte
+
+TENANTS = ("alice", "bob", "carol")
+QUOTAS = {
+    "alice": TenantQuota(max_tasks_in_flight=2, weight=2),
+    "bob": TenantQuota(max_tasks_in_flight=1),
+    "carol": TenantQuota(max_tasks_in_flight=2),
+}
+AFFINITY = {"w0": ["alice"], "w1": ["bob"], "w2": ["carol"],
+            "w3": ["alice", "bob"]}
+
+
+def chaos_run(seed):
+    """One seeded chaos scenario; returns (trace, histories, counters).
+
+    Everything — workload shape, fault plan, cancellation times — derives
+    from ``seed``, so two calls with the same seed must produce
+    byte-identical traces and histories.
+    """
+    rng = random.Random(seed * 7919 + 13)
+    sim = SimExecutor(seed=seed)
+    pool = AuditedPool()
+    affinity = AFFINITY if rng.random() < 0.5 else None
+    sched = WatchedScheduler(
+        workers=4, executor=sim, quotas=QUOTAS, pool=pool,
+        affinity=affinity,
+    )
+    sched.enable_heartbeats(timeout_s=0.3, replace_dead=True)
+
+    # sleeping bodies are per-run closures on purpose: a fresh admission
+    # cache key per run keeps the cold/warm verification pattern — and
+    # with it the schedule — identical between a run and its replay
+    def slow_ok(x):
+        sim.sleep(0.02)
+        return (x + 1).sum()
+
+    def cooperative(x):
+        for _ in range(4):
+            sim.sleep(0.01)
+            checkpoint()               # mid-run preemption point
+        return (x * 2).sum()
+
+    def quick(x):
+        return (x * 3).sum()
+
+    def flaky(x):
+        raise RuntimeError("transient chaos failure")
+
+    bodies = (quick, slow_ok, cooperative, slow_ok, cooperative, flaky)
+    x = jnp.ones(2)
+    ids = []
+    for i in range(14):
+        ids.append(sched.submit(TaskSpec(
+            tenant=rng.choice(TENANTS),
+            fn=rng.choice(bodies),
+            args=(x,),
+            priority=rng.choice((1, 5, 10)),
+            name=f"chaos{i}",
+            deadline_s=0.15 if rng.random() < 0.15 else None,
+            run_deadline_s=0.08 if rng.random() < 0.15 else None,
+        )))
+
+    # -- fault plan (node-level, via the runtime fault injector) --------
+    injector = FailureInjector()
+    if rng.random() < 0.5:             # a node gets sick: stops beating
+        sick = f"w{rng.randrange(4)}"
+        injector.slow_at_t[round(rng.uniform(0.02, 0.2), 3)] = {
+            sick: rng.choice((20.0, 50.0)),
+        }
+    if rng.random() < 0.35:            # a node dies outright
+        when = round(rng.uniform(0.02, 0.25), 3)
+        injector.kill_at_t[when] = [f"w{rng.randrange(4)}"]
+        sim.call_at(when + 0.01, sched.spawn_worker)   # ops replaces it
+    injector.arm(sim)
+
+    # -- preemption plan ------------------------------------------------
+    for tid in rng.sample(ids, k=2):   # pending -> CANCELLED, running ->
+        sim.call_at(round(rng.uniform(0.01, 0.3), 3),   # PREEMPTED
+                    lambda t=tid: sched.cancel(t))
+
+    # -- heartbeat pump (the sim-side worker-death detector) ------------
+    for k in range(1, 60):
+        sim.call_at(0.05 * k, sched.check_heartbeats)
+
+    sched.start()
+    sched.drain(timeout=60)
+    # drain() returns when every task is terminal; a condemned zombie
+    # worker may still be parked holding its revoked sandbox — run the
+    # sim to quiescence so its discard lands before ownership is judged
+    sim.run()
+    check_drain_invariants(sched, ids, quotas=QUOTAS, ctx=f"seed={seed}")
+
+    trace = sched.trace_text()
+    histories = tuple(sched.record(i).history() for i in ids)
+    counters = Counter(sched.stats())
+    counters.update({
+        "steals": sched.steal_count,
+        "preempts": sched.preempt_count,
+        "hb_deaths": sched.heartbeat_death_count,
+        "kills": len(sim.killed_workers()),
+    })
+    sched.shutdown()
+    return trace, histories, counters
+
+
+# ------------------------------------------------------------ the sweep
+
+
+def test_chaos_sweep_holds_all_invariants():
+    """The headline property: every seed in the window drains with every
+    global invariant intact, and the sweep as a whole actually exercised
+    the resilience paths (not a sweep of no-op schedules)."""
+    totals = Counter()
+    for seed in SEEDS:
+        try:
+            _, _, counters = chaos_run(seed)
+        except AssertionError:
+            raise
+        except BaseException as e:     # SimDeadlock, timeout, ...
+            raise AssertionError(
+                f"chaos scenario crashed [seed={seed}]: "
+                f"{type(e).__name__}: {e}"
+            ) from e
+        totals.update(counters)
+
+    # coverage floor — only meaningful on a full-size sweep (rotating
+    # small windows via `make chaos CHAOS_SEED_COUNT=...` skip it)
+    if CHAOS_SEED_COUNT >= 50:
+        assert totals["preempts"] > 0, totals
+        assert totals["hb_deaths"] > 0, totals
+        assert totals["steals"] > 0, totals
+        assert totals["kills"] > 0, totals
+        assert totals[TaskState.FAILED.value] > 0, totals
+        assert totals[TaskState.SUCCEEDED.value] > 0, totals
+
+
+def test_chaos_seeds_replay_byte_identically():
+    """Any chaos schedule is a pure function of its seed: re-running a
+    seed reproduces the trace and every task history byte for byte —
+    which is what makes a failing seed a complete bug report."""
+    replayed = 0
+    for seed in SEEDS:
+        if seed % REPLAY_STRIDE:
+            continue
+        first = chaos_run(seed)
+        second = chaos_run(seed)
+        assert first[0] == second[0], f"trace diverged on replay [seed={seed}]"
+        assert first[1] == second[1], (
+            f"task histories diverged on replay [seed={seed}]"
+        )
+        replayed += 1
+    assert replayed >= 1
+
+
+# ---------------------------------------------- sim vs production drift
+
+
+def _differential_workload(executor):
+    """Timing-insensitive workload: the terminal state of every task is
+    schedule-independent, so sim and real threads must agree exactly."""
+    sched = ServerlessScheduler(
+        workers=4, executor=executor,
+        quotas={
+            "u": TenantQuota(max_tasks_in_flight=3),
+            "v": TenantQuota(max_tasks_in_flight=2),
+        },
+    )
+    sleeper = executor.sleep
+
+    def ok(x):
+        sleeper(0.003)
+        return (x * 2).sum()
+
+    def always_fails(x):
+        raise RuntimeError("always fails")
+
+    def evil(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x
+        )
+
+    x = jnp.ones(2)
+    ids = []
+    for i in range(10):
+        ids.append(sched.submit(TaskSpec("u" if i % 2 else "v", ok, (x,))))
+    for _ in range(3):
+        ids.append(sched.submit(TaskSpec("u", always_fails, (x,),
+                                         max_retries=1)))
+    for _ in range(2):
+        ids.append(sched.submit(TaskSpec("v", evil, (x,))))
+    sched.start()
+    sched.drain(timeout=60)
+    states = Counter(sched.record(i).state.value for i in ids)
+    check_drain_invariants(sched, ids, ctx=type(executor).__name__)
+    sched.shutdown()
+    return states
+
+
+def test_sim_and_thread_executors_reach_identical_terminal_multisets():
+    """Differential guard against sim/production drift: the same workload
+    reaches the same terminal task-state multiset under SimExecutor and
+    under real threads (timing ignored, outcomes identical)."""
+    from repro.core import ThreadExecutor
+
+    sim_states = _differential_workload(SimExecutor(seed=5))
+    thread_states = _differential_workload(ThreadExecutor())
+    assert sim_states == thread_states
+    assert sim_states == {"succeeded": 10, "failed": 3, "denied": 2}
+
+
+# ------------------------------------------- node faults, deterministic
+
+
+def test_heartbeat_timeout_reaps_sick_worker_and_requeues_exactly_once():
+    """A worker slowed 100x mid-task goes dark; the heartbeat pump reaps
+    it (no direct kill() in the test plan), the task requeues exactly
+    once and finishes on a replacement."""
+    sim = SimExecutor(seed=2)
+    pool = AuditedPool()
+    sched = WatchedScheduler(workers=2, executor=sim, pool=pool)
+    sched.enable_heartbeats(timeout_s=0.25, replace_dead=True)
+
+    def job(x):
+        sim.sleep(0.02)
+        return (x + 1).sum()
+
+    t = sched.submit(TaskSpec("a", job, (jnp.ones(2),)))
+    sched.start()
+    sim.run_until(
+        lambda: any(" dispatch " in ln for ln in sched.trace()),
+        max_steps=300,
+    )
+    victim = next(
+        ln for ln in sched.trace() if " dispatch " in ln
+    ).split("worker=")[1].strip()
+    injector = FailureInjector(slow_at_t={0.005: {victim: 100.0}})
+    injector.arm(sim)
+    for k in range(1, 80):
+        sim.call_at(0.05 * k, sched.check_heartbeats)
+    sched.drain()
+    sim.run()                          # unwind the condemned zombie
+    rec = sched.record(t)
+    assert rec.state is TaskState.SUCCEEDED
+    assert rec.death_requeues == 1
+    assert sched.heartbeat_death_count == 1
+    assert len(sched.condemned_workers()) == 1
+    assert rec.worker not in sched.condemned_workers()  # finished elsewhere
+    assert sched.telemetry.counter("scheduler.heartbeat_death") == 1
+    check_drain_invariants(sched, [t], ctx="heartbeat-reap")
+    sched.shutdown()
+
+
+def test_checkpointing_long_task_beats_and_is_never_reaped():
+    """Regression: a healthy body running far past the heartbeat timeout
+    must not be reaped as long as it checkpoints — checkpoint() beats the
+    worker, so only *stuck* workers go dark."""
+    sim = SimExecutor(seed=0)
+    sched = WatchedScheduler(workers=1, executor=sim)
+    sched.enable_heartbeats(timeout_s=0.05)
+
+    def marathon(x):
+        for _ in range(10):                # 0.2s total >> 0.05s timeout
+            sim.sleep(0.02)
+            checkpoint()                   # beats + honors preemption
+        return x.sum()
+
+    t = sched.submit(TaskSpec("a", marathon, (jnp.ones(2),)))
+    sched.start()
+    for k in range(1, 40):
+        sim.call_at(0.02 * k, sched.check_heartbeats)
+    sched.drain()
+    rec = sched.record(t)
+    assert rec.state is TaskState.SUCCEEDED
+    assert rec.death_requeues == 0
+    assert sched.heartbeat_death_count == 0
+    assert sched.condemned_workers() == []
+    check_drain_invariants(sched, [t], ctx="checkpoint-beats")
+    sched.shutdown()
+
+
+def test_straggler_eviction_clears_slow_node_and_work_completes():
+    """A 10x-slow worker is flagged by the median/MAD detector and
+    evicted through the same revoke/requeue path as heartbeat deaths."""
+    sim = SimExecutor(seed=4)
+    pool = AuditedPool()
+    quotas = {"u": TenantQuota(max_tasks_in_flight=3)}
+    sched = WatchedScheduler(workers=3, executor=sim, quotas=quotas,
+                             pool=pool)
+    sched.enable_heartbeats(timeout_s=30.0, replace_dead=True)
+    sched.enable_straggler_detection(min_steps=1, patience=1,
+                                     z_threshold=3.0)
+
+    def job(x):
+        sim.sleep(0.05)
+        return x.sum()
+
+    ids = [sched.submit(TaskSpec("u", job, (jnp.ones(2),)))
+           for _ in range(40)]
+    sched.start()
+    sim.call_at(0.001, lambda: sim.slow("w1", 10.0))
+    for k in range(1, 100):
+        sim.call_at(0.1 * k, sched.evict_stragglers)
+    sched.drain()
+    sim.run()                          # unwind the condemned zombie
+    assert sched.straggler_evict_count == 1
+    assert "w1" in sched.condemned_workers()
+    assert all(sched.record(i).state is TaskState.SUCCEEDED for i in ids)
+    check_drain_invariants(sched, ids, quotas=quotas, ctx="straggler")
+    sched.shutdown()
+
+
+def test_thread_executor_heartbeat_watchdog_requeues_hung_task():
+    """Production path: a worker thread hung inside user code stops
+    beating; the watchdog daemon reaps it, the task finishes on another
+    worker, and the zombie's late completion is discarded (no double
+    finish, no slot leak)."""
+    sched = ServerlessScheduler(
+        workers=2, quotas={"u": TenantQuota(max_tasks_in_flight=2)},
+    )
+    sched.enable_heartbeats(timeout_s=0.08, replace_dead=True)
+    hung_once = threading.Event()
+
+    def hangs_once(x):
+        if not hung_once.is_set():
+            hung_once.set()
+            time.sleep(0.5)            # well past the heartbeat timeout
+        return (x + 1).sum()
+
+    t = sched.submit(TaskSpec("u", hangs_once, (jnp.ones(2),)))
+    sched.start()
+    sched.start_heartbeat_watchdog(interval_s=0.02)
+    sched.drain(timeout=30)
+    rec = sched.record(t)
+    assert rec.state is TaskState.SUCCEEDED
+    assert rec.death_requeues == 1
+    assert sched.heartbeat_death_count == 1
+    time.sleep(0.7)                    # let the zombie wake and unwind
+    finishes = [ln for ln in sched.trace() if " finish:" in ln]
+    assert len(finishes) == 1          # the zombie completion was discarded
+    assert sched.in_flight() == {}
+    assert sched.admission.slot_balance() == {}
+    assert sched.pool.checked_out() == 0
+    sched.shutdown()

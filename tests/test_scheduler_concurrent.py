@@ -9,6 +9,11 @@ seeds — each seed is a different interleaving of the same workload.
 import jax
 import jax.numpy as jnp
 import numpy as np
+from helpers.invariants import (
+    AuditedPool,
+    WatchedScheduler,
+    check_drain_invariants,
+)
 
 from repro.core import (
     SandboxPool,
@@ -18,29 +23,7 @@ from repro.core import (
     TaskState,
     TenantQuota,
 )
-from repro.core.tasks import TERMINAL_STATES
-
 SEEDS = range(5)
-
-
-class AuditedPool(SandboxPool):
-    """SandboxPool asserting single ownership of every checkout."""
-
-    def __init__(self, *args, **kwargs):
-        super().__init__(*args, **kwargs)
-        self.live = set()
-        self.double_checkouts = []
-
-    def checkout(self, tenant):
-        sb = super().checkout(tenant)
-        if id(sb) in self.live:
-            self.double_checkouts.append((tenant, id(sb)))
-        self.live.add(id(sb))
-        return sb
-
-    def checkin(self, sandbox, *, discard=False):
-        self.live.discard(id(sandbox))
-        super().checkin(sandbox, discard=discard)
 
 
 def build(sim, workers=3, quotas=None, pool_cls=SandboxPool):
@@ -89,17 +72,13 @@ def test_concurrent_drain_completes_everything():
 
 
 def test_no_lost_or_duplicated_completions_across_seeds():
+    """The shared invariant checker covers completion accounting; on top,
+    this workload is fault-free so every task must have SUCCEEDED."""
     for seed in SEEDS:
         sched, _, ids = run_workload(seed)
-        finishes = [ln for ln in sched.trace() if " finish:" in ln]
-        # exactly one terminal transition per task, no task forgotten
-        assert len(finishes) == len(ids), (seed, finishes)
-        finished_ids = sorted(
-            int(ln.split("task=")[1].split(" ")[0]) for ln in finishes
-        )
-        assert finished_ids == sorted(ids)
+        check_drain_invariants(sched, ids, ctx=f"seed={seed}")
         assert all(
-            sched.record(i).state in TERMINAL_STATES for i in ids
+            sched.record(i).state is TaskState.SUCCEEDED for i in ids
         ), seed
         sched.shutdown()
 
@@ -107,31 +86,27 @@ def test_no_lost_or_duplicated_completions_across_seeds():
 def test_no_double_checkout_across_seeds():
     for seed in SEEDS:
         sched, _, ids = run_workload(seed, pool_cls=AuditedPool)
-        assert sched.pool.double_checkouts == [], seed
-        assert sched.pool.checked_out() == 0, seed   # everything returned
+        check_drain_invariants(sched, ids, ctx=f"seed={seed}")
         sched.shutdown()
 
 
 def test_quota_never_overshoots_across_seeds():
-    """Sample in-flight from inside running tasks: with caps 2 and 1 the
-    observed per-tenant concurrency can never exceed the quota."""
+    """With caps 2 and 1, the per-tenant in-flight high-water mark
+    (recorded atomically at reservation time) never exceeds the quota."""
     for seed in SEEDS:
         sim = SimExecutor(seed=seed)
         quotas = {
             "alice": TenantQuota(max_tasks_in_flight=2),
             "bob": TenantQuota(max_tasks_in_flight=1),
         }
-        sched = build(sim, workers=4, quotas=quotas)
-        observed = {"alice": 0, "bob": 0}
+        sched = WatchedScheduler(workers=4, executor=sim, quotas=quotas)
 
-        def probe(x):
+        def task(x):
             sim.sleep(0.005)            # stay in flight across interleaves
-            for tenant, n in sched.in_flight().items():
-                observed[tenant] = max(observed[tenant], n)
             return x.sum()
 
         ids = [
-            sched.submit(TaskSpec("alice" if i % 2 else "bob", probe,
+            sched.submit(TaskSpec("alice" if i % 2 else "bob", task,
                                   (jnp.ones(2),)))
             for i in range(10)
         ]
@@ -140,8 +115,8 @@ def test_quota_never_overshoots_across_seeds():
         assert all(
             sched.record(i).state is TaskState.SUCCEEDED for i in ids
         )
-        assert observed["alice"] <= 2, (seed, observed)
-        assert observed["bob"] <= 1, (seed, observed)
+        assert sched.max_in_flight["alice"] >= 1   # the watch saw traffic
+        check_drain_invariants(sched, ids, quotas=quotas, ctx=f"seed={seed}")
         sched.shutdown()
 
 
@@ -316,6 +291,195 @@ def test_cancel_running_or_finished_returns_false():
     sched.shutdown()
 
 
+def test_cancel_preempts_running_task_at_body_checkpoint():
+    """cancel() on a RUNNING task trips its CancelToken; the body's next
+    checkpoint() raises and the task lands in PREEMPTED with its slot
+    released and the mid-run sandbox discarded (state unknowable)."""
+    from repro.core import checkpoint
+
+    sim = SimExecutor(seed=0)
+    sched = build(sim, workers=1)
+
+    def cooperative(x):
+        for _ in range(10):
+            sim.sleep(0.01)
+            checkpoint()
+        return x.sum()
+
+    t = sched.submit(TaskSpec("t", cooperative, (jnp.ones(2),)))
+    sched.start()
+    sim.call_at(0.025, lambda: sched.cancel(t))
+    sched.drain()
+    rec = sched.record(t)
+    assert rec.state is TaskState.PREEMPTED
+    assert rec.attempts == 1                  # interrupted, not retried
+    assert sched.in_flight() == {}            # slot released
+    assert sched.admission.slot_balance() == {}
+    assert sched.pool.stats.discards == 1     # mid-run sandbox discarded
+    assert sched.pool.checked_out() == 0
+    assert "preempt_request" in "".join(sched.trace())
+    assert "finish:preempted" in "".join(sched.trace())
+    sched.shutdown()
+
+
+def test_cancel_preempts_between_retry_attempts_and_recycles_sandbox():
+    """A preemption observed at the attempt boundary (between retries)
+    keeps the sandbox: the previous attempt completed, so it is clean."""
+    sim = SimExecutor(seed=0)
+    sched = build(sim, workers=1)
+
+    def flaky(x):
+        sim.sleep(0.02)
+        raise RuntimeError("transient")
+
+    t = sched.submit(TaskSpec("t", flaky, (jnp.ones(2),), max_retries=5))
+    sched.start()
+    sim.call_at(0.03, lambda: sched.cancel(t))
+    sched.drain()
+    rec = sched.record(t)
+    assert rec.state is TaskState.PREEMPTED
+    assert 1 <= rec.attempts <= 2
+    assert sched.pool.stats.discards == 0     # boundary preempt: recycled
+    assert sched.in_flight() == {}
+    assert sched.admission.slot_balance() == {}
+    sched.shutdown()
+
+
+def test_run_deadline_preempts_running_task():
+    """run_deadline_s: a running task whose total deadline passes is
+    preempted at its next checkpoint, without any cancel() call."""
+    from repro.core import checkpoint
+
+    sim = SimExecutor(seed=0)
+    sched = build(sim, workers=1)
+
+    def endless(x):
+        for _ in range(100):
+            sim.sleep(0.01)
+            checkpoint()
+        return x.sum()
+
+    doomed = sched.submit(TaskSpec("t", endless, (jnp.ones(2),),
+                                   run_deadline_s=0.05))
+    fine = sched.submit(TaskSpec("t", lambda x: x.sum(), (jnp.ones(2),),
+                                 run_deadline_s=60.0))
+    sched.start()
+    sched.drain()
+    rec = sched.record(doomed)
+    assert rec.state is TaskState.PREEMPTED
+    assert "run deadline" in rec.error
+    assert sched.record(fine).state is TaskState.SUCCEEDED
+    assert sched.in_flight() == {}
+    assert sched.admission.slot_balance() == {}
+    sched.shutdown()
+
+
+def test_checkpoint_is_noop_outside_scheduled_tasks():
+    from repro.core import checkpoint, current_cancel_token
+
+    assert current_cancel_token() is None
+    checkpoint()                              # must not raise
+
+
+# ---------------------------------------------------------- work stealing
+
+
+def test_idle_worker_steals_from_backlogged_foreign_tenant():
+    """Affinity pins w1 to an idle tenant; with stealing it drains the
+    hot tenant's backlog instead of idling, and caps still hold."""
+    sim = SimExecutor(seed=0)
+    quotas = {"hot": TenantQuota(max_tasks_in_flight=2)}
+    sched = WatchedScheduler(
+        workers=2, executor=sim, quotas=quotas,
+        affinity={"w0": ["hot"], "w1": ["cold"]},
+    )
+
+    def slow(x):
+        sim.sleep(0.01)
+        return x.sum()
+
+    ids = [sched.submit(TaskSpec("hot", slow, (jnp.ones(2),)))
+           for _ in range(6)]
+    sched.start()
+    sched.drain()
+    assert sched.steal_count > 0
+    assert sched.telemetry.counter("scheduler.steal") == sched.steal_count
+    stats = sched.worker_stats()
+    assert stats["w1"]["tasks"] > 0           # the idle worker helped
+    assert " steal " in "".join(sched.trace())
+    check_drain_invariants(sched, ids, quotas=quotas, ctx="steal")
+    sched.shutdown()
+
+
+def test_stealing_disabled_leaves_foreign_backlog_alone():
+    sim = SimExecutor(seed=0)
+    sched = ServerlessScheduler(
+        workers=2, executor=sim,
+        quotas={"hot": TenantQuota(max_tasks_in_flight=2)},
+        affinity={"w0": ["hot"], "w1": ["cold"]}, steal=False,
+    )
+
+    def slow(x):
+        sim.sleep(0.01)
+        return x.sum()
+
+    ids = [sched.submit(TaskSpec("hot", slow, (jnp.ones(2),)))
+           for _ in range(6)]
+    sched.start()
+    sched.drain()
+    assert sched.steal_count == 0
+    stats = sched.worker_stats()
+    assert stats["w1"]["tasks"] == 0          # never crossed its affinity
+    assert all(sched.record(i).state is TaskState.SUCCEEDED for i in ids)
+    sched.shutdown()
+
+
+def test_steal_respects_victim_tenant_cap():
+    """hot's cap is 1: while w0 holds hot's only slot, w1 must never
+    steal a second hot task — the reservation is atomic with the cap."""
+    sim = SimExecutor(seed=3)
+    quotas = {"hot": TenantQuota(max_tasks_in_flight=1)}
+    sched = WatchedScheduler(
+        workers=2, executor=sim, quotas=quotas,
+        affinity={"w0": ["hot"], "w1": ["cold"]},
+    )
+
+    def slow(x):
+        sim.sleep(0.01)
+        return x.sum()
+
+    ids = [sched.submit(TaskSpec("hot", slow, (jnp.ones(2),)))
+           for _ in range(5)]
+    sched.start()
+    sched.drain()
+    assert sched.max_in_flight.get("hot", 0) <= 1
+    check_drain_invariants(sched, ids, quotas=quotas, ctx="steal-cap")
+    sched.shutdown()
+
+
+def test_steal_prefers_most_backlogged_tenant():
+    """Two foreign tenants queue 1 vs 4 tasks; the thief's first steal
+    must come from the deeper backlog."""
+    sim = SimExecutor(seed=0)
+    sched = ServerlessScheduler(
+        workers=1, executor=sim,
+        quotas={
+            "deep": TenantQuota(max_tasks_in_flight=4),
+            "shallow": TenantQuota(max_tasks_in_flight=4),
+        },
+        affinity={"w0": ["idle"]},            # all real work is foreign
+    )
+    fn = lambda x: x.sum()
+    sched.submit(TaskSpec("shallow", fn, (jnp.ones(2),)))
+    for _ in range(4):
+        sched.submit(TaskSpec("deep", fn, (jnp.ones(2),)))
+    sched.start()
+    sched.drain()
+    first_steal = next(ln for ln in sched.trace() if " steal " in ln)
+    assert "tenant=deep" in first_steal
+    sched.shutdown()
+
+
 # --------------------------------------------------------- fault injection
 
 
@@ -446,6 +610,72 @@ def test_death_during_checkout_releases_the_reserved_slot():
         assert sched.in_flight() == {}   # the reserved slot was released
         assert sched.pool.checked_out() == 0
         sched.shutdown()
+
+
+def test_preempt_during_checkout_releases_slot_and_recycles_sandbox():
+    """Regression (extends the kill-during-checkout case): cancel() lands
+    while the dispatched task is parked at the checkout yield points —
+    slot reserved, zero attempts run.  The task must land in PREEMPTED
+    with its slot released and the sandbox recycled, not discarded."""
+    sim = SimExecutor(seed=0)
+    sched = build(sim, workers=2,
+                  quotas={"t": TenantQuota(max_tasks_in_flight=1)})
+    t = sched.submit(TaskSpec("t", lambda x: x.sum(), (jnp.ones(2),)))
+    sched.start()
+    sim.run_until(
+        lambda: any(" dispatch " in ln for ln in sched.trace()),
+        max_steps=200,
+    )
+    assert sched.cancel(t)               # RUNNING -> cooperative preempt
+    sched.drain()
+    rec = sched.record(t)
+    assert rec.state is TaskState.PREEMPTED
+    assert rec.attempts == 0             # preempted before the first attempt
+    assert "cancelled by cancel()" in rec.error
+    assert sched.in_flight() == {}
+    assert sched.admission.slot_balance() == {}
+    assert sched.pool.checked_out() == 0
+    assert sched.pool.stats.discards == 0   # boundary preempt: clean sandbox
+    assert sched.preempt_count == 1
+    assert sched.telemetry.counter("scheduler.preempted") == 1
+    sched.shutdown()
+
+
+def test_kill_during_steal_requeues_once_and_releases_slot():
+    """Regression (extends the kill-during-checkout case): the stealing
+    worker dies while parked at checkout *after* its atomic steal
+    reservation.  The stolen task must requeue exactly once and finish on
+    the victim tenant's home worker with no slot or sandbox leak."""
+    sim = SimExecutor(seed=0)
+    sched = WatchedScheduler(
+        workers=2, executor=sim,
+        quotas={"hot": TenantQuota(max_tasks_in_flight=2)},
+        affinity={"w0": ["hot"], "w1": ["cold"]},
+    )
+
+    def slow(x):
+        sim.sleep(0.05)
+        return x.sum()
+
+    ids = [sched.submit(TaskSpec("hot", slow, (jnp.ones(2),)))
+           for _ in range(3)]
+    sched.start()
+    sim.run_until(
+        lambda: any(" steal " in ln for ln in sched.trace()),
+        max_steps=500,
+    )
+    steal_line = next(ln for ln in sched.trace() if " steal " in ln)
+    thief = steal_line.split("worker=")[1].strip()
+    assert thief == "w1"                 # only w1 has no home work
+    assert sim.kill(thief)
+    sched.drain()
+    stolen = int(steal_line.split("task=")[1].split(" ")[0])
+    rec = sched.record(stolen)
+    assert rec.state is TaskState.SUCCEEDED
+    assert rec.death_requeues == 1
+    assert rec.worker != thief
+    check_drain_invariants(sched, ids, ctx="kill-during-steal")
+    sched.shutdown()
 
 
 def test_factory_failure_fails_task_releases_slot_and_worker_survives():

@@ -283,3 +283,46 @@ def test_worker_killed_is_not_an_exception():
     """Task code catching Exception must not swallow injected deaths."""
     assert not issubclass(WorkerKilled, Exception)
     assert issubclass(WorkerKilled, BaseException)
+
+
+def test_sim_slow_stretches_one_workers_sleeps():
+    """The sick-node fault: a slowed worker's sleeps take factor-times
+    longer in virtual time; other workers are unaffected."""
+    sim = SimExecutor(seed=0)
+    wake = {}
+
+    def napper(name):
+        sim.sleep(0.1)
+        wake[name] = sim.now()
+
+    sim.spawn(napper, "a", name="a")
+    sim.spawn(napper, "b", name="b")
+    assert sim.slow("b", 10.0)
+    sim.run()
+    assert wake["a"] == 0.1
+    assert wake["b"] == 1.0             # 0.1 * factor 10
+
+
+def test_sim_slow_heals_and_rejects_bad_factors():
+    import pytest
+
+    sim = SimExecutor(seed=0)
+    log = []
+    heal = []
+
+    def napper():
+        sim.sleep(0.1)
+        log.append(sim.now())
+        if heal:
+            sim.slow("w", heal.pop())   # factor resets before the park
+        sim.sleep(0.1)
+        log.append(sim.now())
+
+    sim.spawn(napper, name="w")
+    sim.slow("w", 5.0)
+    heal.append(1.0)
+    sim.run()
+    assert log == [0.5, 0.6]            # slowed nap, then a healed one
+    with pytest.raises(ValueError):
+        sim.slow("w", 0.0)
+    assert not sim.slow("w", 2.0)       # already done -> False
