@@ -1,6 +1,6 @@
 PYTHON ?= python
 
-.PHONY: test lint bench bench-smoke bench-trend chaos ci dev-deps
+.PHONY: test lint bench bench-smoke bench-trend chaos serve-chaos ci dev-deps
 
 # tier-1 verification: the exact command CI and ROADMAP.md reference
 # (includes the scheduler chaos suite at its fixed default seed window)
@@ -15,6 +15,15 @@ chaos:
 	CHAOS_SEED_START=$$(( ($$(date +%s) / 86400 % 5000) * 200 )) \
 	CHAOS_SEED_COUNT=200 \
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_scheduler_chaos.py
+
+# serving-plane chaos sweep (batch kills + KV-arena poison) over a
+# rotating seed window; CI runs the fixed window seeds 0..59 inside
+# tier-1.  Replay one failure with
+# CHAOS_SERVE_SEED_START=<seed> CHAOS_SERVE_SEED_COUNT=1
+serve-chaos:
+	CHAOS_SERVE_SEED_START=$$(( ($$(date +%s) / 86400 % 5000) * 120 )) \
+	CHAOS_SERVE_SEED_COUNT=120 \
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_serving_chaos.py
 
 # same invocation as the CI lint job (config in ruff.toml)
 lint:
@@ -33,6 +42,8 @@ bench-smoke:
 		--json-out BENCH_pool.json
 	PYTHONPATH=src $(PYTHON) benchmarks/scheduler_bench.py \
 		--tasks 40 --workers 4 --json-out BENCH_scheduler.json
+	PYTHONPATH=src $(PYTHON) benchmarks/serve_bench.py \
+		--requests 12 --json-out BENCH_serve.json
 
 # the CI trend check, locally: diff BENCH_*.json against .bench-baseline/
 # (seeded on the first run) and fail on a >30% regression

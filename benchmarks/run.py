@@ -16,6 +16,7 @@ def main() -> None:
         roofline,
         scheduler_bench,
         sentry_overhead,
+        serve_bench,
         vma_bench,
     )
 
@@ -77,6 +78,17 @@ def main() -> None:
          "skewed tenant, target:>=2x"),
         ("scheduler_sim_deterministic", float(sb["sim_deterministic"]),
          "3 same-seed runs byte-identical"),
+    ]
+
+    print("=" * 72)
+    sv = serve_bench.main()
+    rows += [
+        ("serve_incremental_speedup_x", sv["incremental_speedup_x"],
+         "skewed admit/retire, target:>=2x"),
+        ("serve_prefill_reduction_x", sv["prefill_reduction_x"],
+         "prefill tokens avoided vs rebatching"),
+        ("serve_incremental_tokens_per_s", sv["incremental_tokens_per_s"],
+         "reduced-model CPU decode"),
     ]
 
     print("=" * 72)

@@ -33,11 +33,17 @@ from typing import Dict, List, Mapping, Optional, Tuple
 #: runners, and its gate exists to catch the order-of-magnitude jump of
 #: the warm path going cold (5-30x), so it runs at twice the tolerance.
 #: The speedup ratios are same-process relative measures and hold 30%.
+#: serve_bench's incremental_speedup_x mixes FLOP savings with the
+#: rebatching baseline's per-wave recompiles, so its run-to-run spread
+#: (~16-42x) is wider than any sane relative tolerance — the >=2x
+#: floor is asserted inside serve_bench itself instead.  The trend row
+#: tracks prefill_reduction_x, a pure work ratio that is stable.
 TRACKED = (
     ("BENCH_pool.json", "warm_checkout_p50_us", "lower", 2.0),
     ("BENCH_admission.json", "warm_speedup_x", "higher", 1.0),
     ("BENCH_scheduler.json", "speedup_x", "higher", 1.0),
     ("BENCH_scheduler.json", "steal_speedup_x", "higher", 1.0),
+    ("BENCH_serve.json", "prefill_reduction_x", "higher", 1.0),
 )
 
 

@@ -17,7 +17,7 @@ Fragment statistics from here feed ``benchmarks/vma_bench.py`` and the
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
@@ -134,14 +134,40 @@ class PagedKVAllocator:
         self.arena = DeviceArena(config, page_bytes=page_bytes)
         self.max_seq_pages = max_seq_pages
         self._tokens: Dict[str, int] = {}
+        self._poisoned: Set[str] = set()
+        # incremental page-ownership tracking: each newly faulted page is
+        # checked against the owner map once, at fault time, so the
+        # per-step validate() poll is O(1) instead of O(seqs x pages)
+        self._owner: Dict[int, str] = {}      # physical page -> sequence
+        self._seq_pages: Dict[str, List[int]] = {}
+        self._collisions: Set[str] = set()
 
     def add_sequence(self, seq_id: str) -> None:
         self.arena.create_region(seq_id, self.max_seq_pages * self.arena.page_bytes)
         self._tokens[seq_id] = 0
+        self._seq_pages[seq_id] = []
 
     def drop_sequence(self, seq_id: str) -> None:
         self.arena.destroy_region(seq_id)
         self._tokens.pop(seq_id)
+        self._poisoned.discard(seq_id)
+        self._collisions.discard(seq_id)
+        for page in self._seq_pages.pop(seq_id, ()):
+            if self._owner.get(page) == seq_id:
+                del self._owner[page]
+
+    def _track_new_pages(self, seq_id: str) -> None:
+        pages = self.arena.physical_pages(seq_id)
+        known = self._seq_pages[seq_id]
+        for page in (int(p) for p in pages[len(known):]):
+            other = self._owner.get(page)
+            if other is not None and other != seq_id:
+                # two owners of one backing page = arena corruption
+                self._collisions.add(seq_id)
+                self._collisions.add(other)
+            else:
+                self._owner[page] = seq_id
+            known.append(page)
 
     def append_tokens(self, seq_id: str, n: int = 1) -> None:
         have = self._tokens[seq_id]
@@ -149,6 +175,7 @@ class PagedKVAllocator:
         have_pages = -(-have // self.tokens_per_page) if have else 0
         if need_pages > have_pages:
             self.arena.grow(seq_id, (need_pages - have_pages) * self.arena.page_bytes)
+            self._track_new_pages(seq_id)
         self._tokens[seq_id] = have + n
 
     def sequence(self, seq_id: str) -> SequencePages:
@@ -173,3 +200,35 @@ class PagedKVAllocator:
 
     def total_runs(self) -> int:
         return sum(self.arena.fragmentation_report().values())
+
+    # ---------------------------------------------- poison / validate hook
+
+    def poison_sequence(self, seq_id: str) -> bool:
+        """Mark a live sequence's KV pages as corrupted (fault injection).
+
+        Models a DMA scribble / bad host page hitting one sequence's
+        cache.  The serving engine polls :meth:`validate` at step
+        boundaries and must evict (and re-prefill) poisoned sequences
+        rather than decode from them.  Returns False for unknown ids.
+        """
+        if seq_id not in self._tokens:
+            return False
+        self._poisoned.add(seq_id)
+        return True
+
+    def poisoned(self) -> List[str]:
+        """Sequences currently marked poisoned (sorted)."""
+        return sorted(self._poisoned)
+
+    def validate(self) -> List[str]:
+        """Sequences whose KV pages cannot be trusted (sorted).
+
+        Explicitly poisoned sequences, plus any pair of live sequences
+        whose physical pages collide — two owners of one backing page is
+        arena corruption regardless of how it happened.  Collisions are
+        detected incrementally as pages fault in, so polling this on
+        every decode step is O(result), not O(sequences x pages).
+        """
+        return sorted(
+            (self._poisoned | self._collisions) & set(self._tokens)
+        )

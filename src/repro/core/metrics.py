@@ -112,6 +112,7 @@ class MetricsRegistry:
         self._pools: List[Any] = []
         self._admissions: List[Any] = []
         self._schedulers: List[Any] = []
+        self._servings: List[Any] = []
         self._gauges: List[Tuple[str, str, Callable[[], float]]] = []
         self._lock = threading.Lock()
 
@@ -139,6 +140,15 @@ class MetricsRegistry:
         with self._lock:
             if scheduler not in self._schedulers:
                 self._schedulers.append(scheduler)
+        return self
+
+    def register_serving(self, engine: Any) -> "MetricsRegistry":
+        """Export a :class:`~repro.runtime.serve_loop.ServingEngine` as the
+        ``seepp_serving_*`` families (queue depth, active slots, admission
+        outcomes, token/prefill/decode counters, chaos counters)."""
+        with self._lock:
+            if engine not in self._servings:
+                self._servings.append(engine)
         return self
 
     def register_gauge(
@@ -193,6 +203,7 @@ class MetricsRegistry:
             pools = list(self._pools)
             admissions = list(self._admissions)
             schedulers = list(self._schedulers)
+            servings = list(self._servings)
             gauges = list(self._gauges)
 
         fams: List[_Family] = []
@@ -250,6 +261,10 @@ class MetricsRegistry:
         # --- scheduler ----------------------------------------------------
         if schedulers:
             fams.extend(self._scheduler_families(schedulers))
+
+        # --- serving engine -----------------------------------------------
+        if servings:
+            fams.extend(self._serving_families(servings))
 
         # --- ad-hoc gauges ------------------------------------------------
         for name, help_text, fn in gauges:
@@ -499,6 +514,72 @@ class MetricsRegistry:
         for attr, name, text in resilience:
             fam = _Family(self._n(name), "counter", text)
             fam.add(sum(getattr(s, attr, 0) for s in schedulers))
+            fams.append(fam)
+        return fams
+
+    def _serving_families(self, servings: List[Any]) -> List[_Family]:
+        """The ``seepp_serving_*`` families off ``serving_stats()``."""
+        per_tenant = [
+            ("queue_depth", "serving_queue_depth", "gauge",
+             "Requests queued for admission per tenant."),
+            ("active_slots", "serving_active_slots", "gauge",
+             "Decode slots held per tenant."),
+            ("admitted_total", "serving_admitted_total", "counter",
+             "Requests admitted into a decode slot per tenant."),
+            ("denied_total", "serving_denied_total", "counter",
+             "Requests denied at admission per tenant (zero-slot quota)."),
+            ("expired_total", "serving_expired_total", "counter",
+             "Requests whose admit deadline passed while queued."),
+            ("completed_total", "serving_completed_total", "counter",
+             "Requests completed (with or without error) per tenant."),
+            ("tokens_total", "serving_tokens_total", "counter",
+             "Tokens decoded per tenant."),
+        ]
+        scalars = [
+            ("decode_steps_total", "serving_decode_steps_total", "counter",
+             "Batched decode steps executed."),
+            ("batch_kill_total", "serving_batch_kill_total", "counter",
+             "Decode batches killed mid-flight (chaos)."),
+            ("arena_poison_total", "serving_arena_poison_total", "counter",
+             "KV-arena sequences poisoned (chaos)."),
+            ("evicted_total", "serving_evicted_total", "counter",
+             "Live sequences evicted back to the admit queue "
+             "(batch kills + arena poison)."),
+        ]
+        stats = [engine.serving_stats() for engine in servings]
+        fams: List[_Family] = []
+        for key, name, kind, text in per_tenant:
+            merged: Dict[str, float] = {}
+            for s in stats:
+                for tenant, n in s.get(key, {}).items():
+                    merged[tenant] = merged.get(tenant, 0) + n
+            fam = _Family(self._n(name), kind, text)
+            if merged:
+                for tenant in sorted(merged):
+                    fam.add(merged[tenant], {"tenant": tenant})
+            else:
+                fam.add(0)
+            fams.append(fam)
+        for key, name, kind, text in scalars:
+            fam = _Family(self._n(name), kind, text)
+            fam.add(sum(s.get(key, 0) for s in stats))
+            fams.append(fam)
+        # prefill split: mode="incremental" vs mode="full" is the whole
+        # re-prefill story — full tokens >> incremental tokens means the
+        # engine is paying the rebatching tax the tentpole removed
+        for key, name, text in (
+            ("prefill_sequences_total", "serving_prefill_sequences_total",
+             "Prefill passes by mode (incremental slot vs full rebatch)."),
+            ("prefill_tokens_total", "serving_prefill_tokens_total",
+             "Tokens pushed through prefill by mode."),
+        ):
+            fam = _Family(self._n(name), "counter", text)
+            merged = {}
+            for s in stats:
+                for mode, n in s.get(key, {}).items():
+                    merged[mode] = merged.get(mode, 0) + n
+            for mode in sorted(merged) or ("incremental",):
+                fam.add(merged.get(mode, 0), {"mode": mode})
             fams.append(fam)
         return fams
 

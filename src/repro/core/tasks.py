@@ -263,7 +263,7 @@ class ServerlessScheduler:
         refill_watermark: int = 0,
         workers: int = 0,
         executor: Optional[Executor] = None,
-        affinity: Optional[Dict[str, Iterable[str]]] = None,
+        affinity: Optional[Dict[str, Iterable[str]] | str] = None,
         steal: Optional[bool] = None,
     ) -> None:
         self.telemetry = resolve_sink(admission, telemetry)
@@ -296,13 +296,26 @@ class ServerlessScheduler:
         self._worker_tasks: Dict[str, int] = {}
         # work stealing: worker -> home tenants; workers absent from the
         # map serve every tenant (affinity=None keeps PR 3 behavior and
-        # byte-identical traces for affinity-free workloads)
+        # byte-identical traces for affinity-free workloads).
+        # affinity="auto" starts with an empty map (everyone serves
+        # everyone) and derives homes from observed per-tenant load on
+        # each rebalance_affinity() tick
+        self._auto_affinity = affinity == "auto"
+        if self._auto_affinity:
+            affinity = None
         self._affinity: Dict[str, frozenset] = {
             w: frozenset(ts) for w, ts in (affinity or {}).items()
         }
         self._steal_enabled = (
-            bool(self._affinity) if steal is None else bool(steal)
+            bool(self._affinity) or self._auto_affinity
+            if steal is None else bool(steal)
         )
+        # auto-rebalancing state: EWMA of per-tenant admission volume
+        # (hits+misses+denials deltas from stats_by_tenant) per tick
+        self._load_ewma: Dict[str, float] = {}
+        self._load_seen: Dict[str, int] = {}
+        self._rebalances = 0
+        self._rebalancer: Optional[Tuple[threading.Thread, threading.Event]] = None
         # node-fault plane: which worker runs which task, which workers
         # were reaped (condemned), and which (task, worker) dispatches
         # were revoked by a reaper so zombie completions are discarded
@@ -716,6 +729,7 @@ class ServerlessScheduler:
     def shutdown(self, timeout: float = 10.0) -> None:
         """Stop the workers and wait for them to exit."""
         self.stop_heartbeat_watchdog(timeout=timeout)
+        self.stop_affinity_rebalancer(timeout=timeout)
         with self._lock:
             self._stop = True
         self._exec.notify()
@@ -883,6 +897,105 @@ class ServerlessScheduler:
     def condemned_workers(self) -> List[str]:
         with self._lock:
             return sorted(self._condemned)
+
+    # -------------------------------------- auto-rebalancing affinity
+
+    def affinity_map(self) -> Dict[str, List[str]]:
+        """Current worker → home-tenant map (empty list = serves all)."""
+        with self._lock:
+            return {w: sorted(ts) for w, ts in self._affinity.items()}
+
+    def rebalance_affinity(self, alpha: float = 0.5) -> Dict[str, List[str]]:
+        """Derive affinity from observed per-tenant load (``affinity="auto"``).
+
+        One tick of the auto-rebalancer: per-tenant admission volume
+        (``stats_by_tenant()`` hits+misses+denials) since the last tick
+        is folded into an EWMA, and workers are re-homed in proportion to
+        each tenant's smoothed share — each worker takes the tenant with
+        the most unserved demand, debiting one worker's worth of quantum
+        per assignment.  Deterministic: ties break by tenant name, and
+        under a SimExecutor ticks fire at virtual times.  Stealing stays
+        on, so a mispredicted map degrades to a steal, never starvation.
+        No-op unless the scheduler was built with ``affinity="auto"``.
+        """
+        if not self._auto_affinity:
+            return self.affinity_map()
+        by_tenant = self.admission.stats_by_tenant()
+        with self._lock:
+            tenants = sorted(self._deficit)
+            workers = sorted(
+                w for w in self._worker_busy if w not in self._condemned
+            )
+            for tenant in tenants:
+                bucket = by_tenant.get(tenant, {})
+                total = sum(bucket.values())
+                delta = total - self._load_seen.get(tenant, 0)
+                self._load_seen[tenant] = total
+                self._load_ewma[tenant] = (
+                    alpha * delta
+                    + (1.0 - alpha) * self._load_ewma.get(tenant, 0.0)
+                )
+            demand = {
+                t: self._load_ewma.get(t, 0.0) for t in tenants
+            }
+            total_demand = sum(demand.values())
+            if not workers or not tenants or total_demand <= 0:
+                # no signal yet: stay un-homed (everyone serves everyone)
+                self._affinity = {}
+                return {}
+            quantum = total_demand / len(workers)
+            assign: Dict[str, frozenset] = {}
+            for worker in workers:
+                home = min(tenants, key=lambda t: (-demand[t], t))
+                assign[worker] = frozenset({home})
+                demand[home] -= quantum
+            self._affinity = assign
+            self._rebalances += 1
+            self._note(
+                "rebalance", 0,
+                ",".join(f"{w}:{next(iter(ts))}" for w, ts in
+                         sorted(assign.items())),
+                "",
+            )
+        self.telemetry.count("scheduler.rebalance")
+        return self.affinity_map()
+
+    @property
+    def rebalance_count(self) -> int:
+        return self._rebalances
+
+    def start_affinity_rebalancer(self, interval_s: float = 0.5) -> None:
+        """Run :meth:`rebalance_affinity` from a daemon thread (production).
+
+        Sim tests drive ticks deterministically via ``sim.call_at``
+        instead.  Requires ``affinity="auto"``.
+        """
+        if not self._auto_affinity:
+            raise RuntimeError('rebalancer needs affinity="auto"')
+        with self._lock:
+            if self._rebalancer is not None and self._rebalancer[0].is_alive():
+                return
+            stop = threading.Event()
+            thread = threading.Thread(
+                target=self._rebalance_loop,
+                args=(max(1e-3, float(interval_s)), stop),
+                name="scheduler-affinity-rebalancer",
+                daemon=True,
+            )
+            self._rebalancer = (thread, stop)
+        thread.start()
+
+    def _rebalance_loop(self, interval_s: float, stop: threading.Event) -> None:
+        while not stop.wait(interval_s):
+            self.rebalance_affinity()
+
+    def stop_affinity_rebalancer(self, timeout: float = 5.0) -> None:
+        with self._lock:
+            entry = self._rebalancer
+            self._rebalancer = None
+        if entry is not None:
+            entry[1].set()
+            entry[0].join(timeout=timeout)
 
     # ------------------------------------------------------------- execute
 

@@ -16,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_reduced, list_archs
+from repro.core.tasks import TenantQuota
 from repro.models import build_model
 from repro.runtime import Request, Server, ServerConfig
 
@@ -49,15 +50,37 @@ def main() -> None:
     ap.add_argument("--hold", type=float, default=0.0, metavar="SECONDS",
                     help="keep the process (and /metrics) alive after the "
                          "batch completes, e.g. to scrape it")
+    ap.add_argument("--tenant", default="serving", metavar="NAMES",
+                    help="comma-separated tenant names assigned to the "
+                         "requests round-robin (admission identity; "
+                         "default one 'serving' tenant)")
+    ap.add_argument("--quota", type=int, default=0, metavar="SLOTS",
+                    help="cap each tenant at this many concurrent decode "
+                         "slots (0 = uncapped)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SECONDS",
+                    help="admit deadline per request: a request still "
+                         "queued this long after arrival completes with "
+                         "an 'expired' error instead of serving")
+    ap.add_argument("--no-incremental", action="store_true",
+                    help="A/B: run the old rebatching baseline (every "
+                         "admit re-prefills the whole batch) instead of "
+                         "per-slot incremental prefill")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    tenants = [t.strip() for t in args.tenant.split(",") if t.strip()] \
+        or ["serving"]
+    quotas = (
+        {t: TenantQuota(max_tasks_in_flight=args.quota) for t in tenants}
+        if args.quota > 0 else None
+    )
     srv = Server(model, params, ServerConfig(
         max_batch=args.max_batch, max_seq=args.max_seq,
         mm_legacy=args.legacy_arena, pool_watermark=args.pool_watermark,
         workers=args.workers, heartbeat_timeout_s=args.heartbeat_timeout,
+        incremental=not args.no_incremental, quotas=quotas,
     ))
     if args.metrics_port is not None:
         endpoint = srv.serve_metrics(port=args.metrics_port)
@@ -68,13 +91,17 @@ def main() -> None:
             prompt=rng.integers(0, cfg.vocab_size,
                                 (int(rng.integers(4, 12)),)).astype(np.int32),
             max_new_tokens=args.new_tokens, request_id=i,
+            tenant=tenants[i % len(tenants)], deadline_s=args.deadline,
         )
         for i in range(args.requests)
     ]
     done = srv.run(reqs)
     for r in sorted(done, key=lambda r: r.request_id):
-        print(f"[serve] req {r.request_id}: {len(r.tokens)} tokens "
-              f"{r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''} "
+        status = f"ERROR: {r.error}" if r.error else (
+            f"{len(r.tokens)} tokens "
+            f"{r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}"
+        )
+        print(f"[serve] req {r.request_id} [{r.tenant}]: {status} "
               f"latency {r.latency_s*1e3:.0f}ms")
     print(f"[serve] arena ({'legacy' if args.legacy_arena else 'modern'}): "
           f"{json.dumps(srv.arena_report()['mm_stats'])}")

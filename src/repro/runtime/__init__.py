@@ -1,9 +1,10 @@
 from .elastic import ElasticController, plan_mesh
 from .fault import (FailureInjector, HeartbeatMonitor, StragglerDetector,
                     WorkerFailure)
-from .serve_loop import Request, Server, ServerConfig
+from .serve_loop import Request, Server, ServerConfig, ServingEngine
 from .train_loop import Trainer, TrainerConfig
 
 __all__ = ["ElasticController", "FailureInjector", "HeartbeatMonitor",
-           "Request", "Server", "ServerConfig", "StragglerDetector",
-           "Trainer", "TrainerConfig", "WorkerFailure", "plan_mesh"]
+           "Request", "Server", "ServerConfig", "ServingEngine",
+           "StragglerDetector", "Trainer", "TrainerConfig", "WorkerFailure",
+           "plan_mesh"]

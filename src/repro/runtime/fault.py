@@ -147,6 +147,14 @@ class FailureInjector:
     #: virtual time → {worker: slow factor} (node gets sick, stops
     #: beating fast enough — the heartbeat-timeout death path)
     slow_at_t: Dict[float, Dict[str, float]] = field(default_factory=dict)
+    #: virtual times at which the serving engine's decode batch dies
+    #: mid-flight (node loss under the batch); every live sequence is
+    #: evicted back to the admit queue with its tokens intact
+    kill_batch_at_t: List[float] = field(default_factory=list)
+    #: virtual time → live-slot index whose KV-arena pages get poisoned;
+    #: the engine's next step detects it via ``kv.validate()`` and
+    #: evicts/re-prefills the sequence instead of decoding garbage
+    poison_arena_at_t: Dict[float, int] = field(default_factory=dict)
 
     def check(self, step: int) -> None:
         victims = [w for w in self.fail_at.get(step, []) if w not in self.killed]
@@ -176,3 +184,20 @@ class FailureInjector:
                 for w, factor in pairs:
                     sim.slow(w, factor)
             sim.call_at(when, _slow)
+
+    def arm_serving(self, sim, engine) -> None:
+        """Schedule the serving-plane chaos plan onto a ``SimExecutor``.
+
+        ``kill_batch_at_t`` calls ``engine.kill_batch()`` (every live
+        decode slot evicted, requests requeued with tokens intact) and
+        ``poison_arena_at_t`` poisons the i-th live sequence's KV pages
+        (``engine.poison_live(i)``).  Timers fire during the engine's
+        between-step ``executor.sleep``, so the plan lands at identical
+        virtual times on every replay of a seed.
+        """
+        for when in sorted(self.kill_batch_at_t):
+            sim.call_at(when, engine.kill_batch)
+        for when in sorted(self.poison_arena_at_t):
+            def _poison(idx=self.poison_arena_at_t[when]) -> None:
+                engine.poison_live(idx)
+            sim.call_at(when, _poison)

@@ -1,20 +1,40 @@
-"""Serving loop: continuous batching over the SEE++ paged KV arena.
+"""Serving plane: event-driven continuous batching over the SEE++ substrate.
 
-Requests enter a queue; the engine admits up to ``max_batch`` sequences,
-prefills them, then decodes in lockstep, retiring finished sequences and
-admitting new ones into freed slots (continuous batching).  Every
-sequence's KV pages come from :class:`~repro.core.arena.PagedKVAllocator`
-— the paper's memory manager under the modern (direction-aligned)
-MMConfig; ``arena_report`` exposes the fragment counts the §IV.A fix
-controls.  Optional per-request post-processors (user code) run inside
-the Sandbox.
+The engine is :class:`ServingEngine` — ``submit(request)`` / ``step()`` /
+``drain()`` driven by the :mod:`repro.core.sim` Clock/Executor substrate
+(:class:`~repro.core.sim.ThreadExecutor` in production,
+:class:`~repro.core.sim.SimExecutor` for seeded deterministic tests).
+Every decode slot carries its own live state, so admitting or retiring a
+sequence **prefills exactly that sequence** and writes it into its slot —
+the O(active·steps) full-batch re-prefill of the old monolithic loop is
+gone (``ServerConfig.incremental=False`` keeps the rebatching baseline for
+the A/B in ``benchmarks/serve_bench.py``).
+
+Requests carry a tenant: admission routes through the shared
+:class:`~repro.core.admission.AdmissionController` slot ledger and
+per-tenant :class:`~repro.core.tasks.TenantQuota` slot caps, and the admit
+queue is ordered by (priority, deadline, arrival).  Every sequence's KV
+pages come from :class:`~repro.core.arena.PagedKVAllocator`; the engine
+polls ``kv.validate()`` each step, so a poisoned arena page evicts and
+re-prefills its sequence instead of decoding garbage.  Chaos plans
+(:class:`~repro.runtime.fault.FailureInjector` ``kill_batch_at_t`` /
+``poison_arena_at_t``) land at virtual times under sim, which is what the
+seed-swept ``tests/test_serving_chaos.py`` replay suite drives.
+
+:class:`Server` stays the production wrapper: it owns the postprocess
+sandbox pool / scheduler / metrics exactly as before and delegates the
+serving loop to the engine.
 """
 
 from __future__ import annotations
 
+import heapq
+import itertools
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,10 +48,11 @@ from repro.core.policy import SandboxViolation
 from repro.core.pool import SandboxPool
 from repro.core.sandbox import Sandbox
 from repro.core.sentry import BudgetExceeded
+from repro.core.sim import Executor, ThreadExecutor
 from repro.core.tasks import ServerlessScheduler, TaskSpec, TaskState, TenantQuota
 from repro.core.telemetry import TelemetrySink, resolve_sink
 
-__all__ = ["Request", "ServerConfig", "Server"]
+__all__ = ["Request", "ServerConfig", "Server", "ServingEngine"]
 
 
 @dataclass
@@ -40,11 +61,19 @@ class Request:
     max_new_tokens: int = 16
     request_id: int = 0
     postprocess: Optional[Callable] = None
-    # filled by the server:
+    tenant: str = "serving"              # admission identity
+    priority: int = 10                   # lower = admitted sooner
+    #: seconds after arrival by which the request must be *admitted*;
+    #: past it the request completes with an "expired" error instead
+    deadline_s: Optional[float] = None
+    # filled by the engine:
     tokens: List[int] = field(default_factory=list)
     done: bool = False
-    latency_s: float = 0.0
-    error: Optional[str] = None          # postprocess failure (workers > 0)
+    latency_s: float = 0.0               # from *arrival*, not server start
+    error: Optional[str] = None          # denial/expiry/postprocess failure
+    arrived_at: Optional[float] = None   # executor clock, stamped at submit
+    admitted_at: Optional[float] = None  # first admission; a chaos-evicted
+    # request that was admitted in time is never expired on re-admission
 
 
 @dataclass
@@ -62,15 +91,735 @@ class ServerConfig:
     #: ``repro.core.checkpoint()`` periodically — it heartbeats the
     #: worker (and honors preemption), so live progress is never reaped
     heartbeat_timeout_s: float = 0.0
+    #: per-slot incremental prefill (False = the old rebatching baseline:
+    #: every admit/retire re-prefills the whole batch; kept for the A/B
+    #: in benchmarks/serve_bench.py)
+    incremental: bool = True
+    #: virtual seconds one decode step occupies on the executor clock;
+    #: >0 makes the engine sleep between steps, which is what fires
+    #: SimExecutor timers (chaos plans) deterministically under test
+    step_time_s: float = 0.0
+    #: cap on the engine decision log (0 = unbounded); the default holds
+    #: every test/chaos workload in full while bounding always-on servers
+    trace_limit: int = 200_000
+    #: per-tenant serving quotas: ``max_tasks_in_flight`` caps a tenant's
+    #: concurrent decode slots (0 = denied outright); None = no caps.
+    #: Tenants absent from a provided dict get the scheduler's default
+    #: ``TenantQuota()`` (4 slots), matching the task plane's semantics
+    quotas: Optional[Dict[str, TenantQuota]] = None
+
+
+class ServingEngine:
+    """Incremental continuous-batching engine on the Clock/Executor substrate.
+
+    ``submit()`` may be called from any thread (and from sim timers);
+    ``step()``/``drain()`` run the decode plane.  All bookkeeping is
+    guarded by one lock; model math runs outside it.
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        cfg: ServerConfig,
+        *,
+        executor: Optional[Executor] = None,
+        kv: Optional[PagedKVAllocator] = None,
+        admission: Optional[AdmissionController] = None,
+        telemetry: Optional[TelemetrySink] = None,
+        pool: Optional[SandboxPool] = None,
+        scheduler: Optional[ServerlessScheduler] = None,
+        postprocess_tenant: str = "serving",
+    ) -> None:
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._exec = executor or ThreadExecutor()
+        self.telemetry = resolve_sink(admission, telemetry)
+        self.admission = admission or AdmissionController(sink=self.telemetry)
+        self.pool = pool
+        self.scheduler = scheduler
+        self._post_tenant = postprocess_tenant
+        self.kv = kv if kv is not None else self._build_kv(model, cfg)
+        self._lock = threading.RLock()
+
+        B = cfg.max_batch
+        self._slots: List[Optional[Request]] = [None] * B
+        #: per-tenant admit queues, each ordered by (priority,
+        #: deadline-or-inf, arrival seq); the sweep admits the global
+        #: minimum across unthrottled tenants, so a capped tenant's
+        #: backlog is never heap-churned on the decode hot path
+        self._queues: Dict[str, List[Tuple[int, float, int, Request]]] = {}
+        #: queued deadline-bearing requests by absolute deadline: expiry
+        #: fires on time even for entries buried behind higher-priority
+        #: work (heap entries go stale on admission and are skipped)
+        self._deadlines: List[Tuple[float, int, Request]] = []
+        self._live_ids: set = set()        # queued or slotted request ids
+        self._seq = itertools.count()
+        #: (task_id, request) pairs awaiting the concurrent postprocess join
+        self._post_tasks: Deque[Tuple[int, Request]] = deque()
+        #: every completed request; a long-lived server should harvest it
+        #: after each drain() and call reset_history() — counters and
+        #: gauges survive, only the per-request history is released
+        self.completed: List[Request] = []
+        #: engine decision log, bounded so an always-on server cannot
+        #: grow it without limit (far above any test workload's length)
+        self._trace: Deque[str] = deque(maxlen=cfg.trace_limit or None)
+
+        # decode state lives per-slot: one persistent batch-state whose
+        # slot i is overwritten (incremental mode) when request i admits
+        self._state = model.init_decode_state(B, cfg.max_seq)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        # jitted prefill: repeated same-shape admissions are compile-cache
+        # hits (the eager path re-traced the whole scan per call); the
+        # rebatching baseline still pays a retrace whenever its padded
+        # batch shape changes — that churn is part of what it costs
+        self._prefill = jax.jit(
+            lambda p, toks: model.prefill(p, toks, max_seq=cfg.max_seq)
+        )
+        self._batch_axes = self._find_batch_axes(model, cfg.max_seq)
+        self._write_slot = jax.jit(
+            lambda state, sub, i: jax.tree_util.tree_map(
+                lambda dst, src, ax: jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), i, ax
+                ),
+                state, sub, self._batch_axes,
+            ),
+            donate_argnums=(0,),
+        )
+
+        # counters (read by MetricsRegistry.register_serving at scrape)
+        self._admitted: Dict[str, int] = {}
+        self._denied: Dict[str, int] = {}
+        self._expired: Dict[str, int] = {}
+        self._completed_n: Dict[str, int] = {}
+        self._tokens_n: Dict[str, int] = {}
+        self._decode_steps = 0
+        self._prefills = {"incremental": 0, "full": 0}
+        self._prefill_tokens = {"incremental": 0, "full": 0}
+        self._prefills_by_request: Dict[int, int] = {}
+        self._batch_kills = 0
+        self._arena_poisons = 0
+        self._evictions = 0
+
+    # ------------------------------------------------------------- helpers
+
+    @staticmethod
+    def _build_kv(model, cfg: ServerConfig) -> PagedKVAllocator:
+        mm_cfg = (MMConfig.legacy if cfg.mm_legacy else MMConfig.modern)(
+            granule=4096
+        )
+        mcfg = getattr(model, "cfg", None)
+        token_bytes = (
+            2 * mcfg.num_kv_heads * mcfg.hd * 2 if mcfg is not None else 1
+        )  # K+V bf16
+        seq_pages = -(-cfg.max_seq // cfg.tokens_per_page)
+        return PagedKVAllocator(
+            mm_cfg, tokens_per_page=cfg.tokens_per_page,
+            token_bytes=max(token_bytes, 1),
+            max_seq_pages=seq_pages,
+            pool_pages=4 * cfg.max_batch * seq_pages,
+        )
+
+    def _find_batch_axes(self, model, max_seq: int):
+        """Per-leaf batch axis of the decode state (generic across models).
+
+        The axis whose extent tracks ``batch_size`` in
+        ``init_decode_state`` is the one a slot write must slice —
+        discovered by diffing abstract shapes at two batch sizes, so any
+        model family (dense KV cache, SSM state, RWKV recurrence) works
+        without per-family code.
+        """
+        two = jax.eval_shape(lambda: model.init_decode_state(2, max_seq))
+        one = jax.eval_shape(lambda: model.init_decode_state(1, max_seq))
+
+        def axis(a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            raise ValueError(
+                f"decode-state leaf has no batch axis: {a.shape}"
+            )
+
+        return jax.tree_util.tree_map(axis, two, one)
+
+    def _note(self, event: str, r: Optional[Request], detail: str = "") -> None:
+        rid = r.request_id if r is not None else "-"
+        tenant = r.tenant if r is not None else "-"
+        self._trace.append(
+            f"{self._exec.now():.6f} {event} req={rid} tenant={tenant}"
+            + (f" {detail}" if detail else "")
+        )
+
+    def trace(self) -> List[str]:
+        """Engine decisions in order; deterministic under SimExecutor."""
+        with self._lock:
+            return list(self._trace)
+
+    def trace_text(self) -> str:
+        return "\n".join(self.trace()) + "\n"
+
+    def quota(self, tenant: str) -> TenantQuota:
+        if self.cfg.quotas is None:
+            # no quota config = no caps: every tenant may fill the whole
+            # batch (TenantQuota's default of 4 in-flight is a *task*
+            # plane default and must not silently cap decode slots)
+            return TenantQuota(max_tasks_in_flight=self.cfg.max_batch)
+        return self.cfg.quotas.get(tenant, TenantQuota())
+
+    def _seq_id(self, r: Request) -> str:
+        return f"req{r.request_id}"
+
+    def _enqueue_locked(self, r: Request) -> None:
+        """Push onto the tenant's admit queue: (priority, deadline,
+        arrival) order within the tenant; the admit sweep takes the
+        global minimum across unthrottled tenants."""
+        deadline_at = (
+            r.arrived_at + r.deadline_s
+            if r.deadline_s is not None else float("inf")
+        )
+        seq = next(self._seq)
+        heapq.heappush(
+            self._queues.setdefault(r.tenant, []),
+            (r.priority, deadline_at, seq, r),
+        )
+        if r.deadline_s is not None and r.admitted_at is None:
+            heapq.heappush(self._deadlines, (deadline_at, seq, r))
+
+    def _deny_locked(self, r: Request, why: str) -> None:
+        r.error = f"admission denied: {why}"
+        self._denied[r.tenant] = self._denied.get(r.tenant, 0) + 1
+        self._note("deny", r)
+        self._finish_locked(r)
+        self.telemetry.emit(
+            "serving", "denied", tenant=r.tenant, detail=r.error,
+        )
+
+    # -------------------------------------------------------------- submit
+
+    def submit(self, r: Request) -> int:
+        """Queue a request for admission; returns its request id.
+
+        Stamps the arrival time (request latency is measured from here).
+        Denied on the spot — the request completes immediately with
+        ``error`` set — when the tenant's quota allows zero concurrent
+        slots, or when the request can never fit: one oversized request
+        must fail alone, not crash the shared decode plane mid-batch.
+        """
+        with self._lock:
+            if r.arrived_at is None:
+                r.arrived_at = self._exec.now()
+            if self.quota(r.tenant).max_tasks_in_flight <= 0:
+                self._deny_locked(r, f"tenant {r.tenant!r} has no slots")
+                return r.request_id
+            if len(r.prompt) == 0:
+                self._deny_locked(r, "empty prompt")
+                return r.request_id
+            if len(r.prompt) + r.max_new_tokens > self.cfg.max_seq:
+                self._deny_locked(
+                    r,
+                    f"prompt+max_new_tokens "
+                    f"({len(r.prompt)}+{r.max_new_tokens}) exceeds "
+                    f"max_seq={self.cfg.max_seq}",
+                )
+                return r.request_id
+            if r.request_id in self._live_ids:
+                # the id names the KV sequence — a collision would crash
+                # kv.add_sequence mid-batch and strand the slot
+                self._deny_locked(
+                    r, f"request_id {r.request_id} is already live"
+                )
+                return r.request_id
+            self._live_ids.add(r.request_id)
+            self._enqueue_locked(r)
+            self._note("submit", r)
+        self._exec.notify()
+        return r.request_id
+
+    # --------------------------------------------------------------- admit
+
+    def _active_by_tenant_locked(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self._slots:
+            if r is not None:
+                out[r.tenant] = out.get(r.tenant, 0) + 1
+        return out
+
+    def _expire_due_locked(self, now: float) -> None:
+        """Complete-with-error every queued request whose admit deadline
+        passed.  Runs off the dedicated deadline heap, so it fires on
+        time regardless of batch saturation or queue position.  Entries
+        for requests that were admitted in the meantime (a chaos-evicted
+        request keeps its satisfied deadline) are stale and skipped;
+        their tenant-queue entries are discarded by head cleaning.
+        """
+        while self._deadlines and self._deadlines[0][0] < now:
+            _, _, r = heapq.heappop(self._deadlines)
+            if r.done or r.admitted_at is not None:
+                continue                   # stale: served or re-queued
+            r.error = f"deadline {r.deadline_s}s passed before admission"
+            self._expired[r.tenant] = self._expired.get(r.tenant, 0) + 1
+            self._note("expire", r)
+            self._finish_locked(r)
+            self.telemetry.count("serving.expired")
+
+    def _clean_head_locked(
+        self, tenant: str
+    ) -> Optional[Tuple[int, float, int, Request]]:
+        """Skip terminal entries; return the tenant's live head, if any."""
+        heap = self._queues.get(tenant)
+        while heap:
+            _, _, _, r = heap[0]
+            if r.done:
+                heapq.heappop(heap)        # expired (or defensive discard)
+                continue
+            return heap[0]
+        return None
+
+    def _admit_locked(self) -> List[Tuple[int, Request]]:
+        """Fill free slots from the queues; returns [(slot, request)] admitted.
+
+        Each round admits the globally-best head — (priority, deadline,
+        arrival) order — among tenants below their slot cap.  Capped
+        tenants' backlogs are left untouched (no heap churn), and their
+        heads still expire on deadline.
+        """
+        admitted: List[Tuple[int, Request]] = []
+        active = self._active_by_tenant_locked()
+        now = self._exec.now()
+        # expire due requests every sweep, even with the batch full — a
+        # client must not wait out a saturated batch (or a blocked queue
+        # position) to learn its deadline already passed
+        self._expire_due_locked(now)
+        while None in self._slots:
+            best: Optional[Tuple[int, float, int, Request]] = None
+            for tenant in sorted(self._queues):
+                head = self._clean_head_locked(tenant)
+                if head is None:
+                    continue
+                cap = self.quota(tenant).max_tasks_in_flight
+                if active.get(tenant, 0) >= cap:
+                    continue               # throttled, not denied
+                if best is None or head < best:
+                    best = head
+            if best is None:
+                break
+            r = best[3]
+            heapq.heappop(self._queues[r.tenant])
+            slot = self._slots.index(None)
+            self._slots[slot] = r
+            if r.admitted_at is None:
+                r.admitted_at = now
+                # first admission only: a chaos-evicted request's
+                # re-admission gap is decode time, not queue wait, and
+                # would inflate the histogram during a kill storm
+                self.telemetry.observe(
+                    "serving.admit_wait_seconds", now - r.arrived_at,
+                    tenant=r.tenant,
+                )
+            active[r.tenant] = active.get(r.tenant, 0) + 1
+            seq_id = self._seq_id(r)
+            self.kv.add_sequence(seq_id)
+            self.kv.append_tokens(seq_id, len(r.prompt) + len(r.tokens))
+            self.admission.slot_acquired(r.tenant)
+            self._admitted[r.tenant] = self._admitted.get(r.tenant, 0) + 1
+            self._note("admit", r, f"slot={slot}")
+            admitted.append((slot, r))
+        return admitted
+
+    # ------------------------------------------------------------- prefill
+
+    def _sequence_tokens(self, r: Request) -> np.ndarray:
+        """The token stream the model has *consumed* for this request.
+
+        Decode feeds ``tokens[-1]`` (or ``prompt[-1]`` on the first
+        step), so after k generated tokens the consumed stream is
+        ``prompt + [prompt[-1]] + tokens[:k-1]`` — the rebuild a chaos
+        eviction prefills must replay exactly that stream, or the
+        resumed state (and every later token) silently diverges from an
+        uninterrupted run.
+        """
+        if r.tokens:
+            seq = list(r.prompt) + [int(r.prompt[-1])] + r.tokens[:-1]
+        else:
+            seq = list(r.prompt)
+        return np.asarray(seq, np.int32)
+
+    def _prefill_slot(self, slot: int, r: Request) -> None:
+        """Prefill exactly this request and write it into its slot.
+
+        Live slots are untouched: their decode state (and cost already
+        paid) survives the admission — the tentpole's perf win.
+        Ownership is re-checked under the lock: a watchdog-thread
+        ``kill_batch()`` landing between admission and here must not
+        burn a prefill (or count one) for an evicted request.  A stale
+        write racing the final check only touches a freed slot — a new
+        occupant can only be admitted by this (the stepping) thread.
+        """
+        with self._lock:
+            if self._slots[slot] is not r:
+                return                     # evicted before the prefill ran
+            seq = self._sequence_tokens(r)
+        sub, _ = self._prefill(self.params, jnp.asarray(seq[None, :]))
+        sub["pos"] = jnp.full_like(sub["pos"], len(seq))
+        with self._lock:
+            if self._slots[slot] is not r:
+                return                     # evicted mid-prefill: discard
+            self._prefills["incremental"] += 1
+            self._prefill_tokens["incremental"] += int(seq.size)
+            self._prefills_by_request[r.request_id] = (
+                self._prefills_by_request.get(r.request_id, 0) + 1
+            )
+            self._note("prefill", r, f"slot={slot} tokens={seq.size}")
+        self._state = self._write_slot(
+            self._state, sub, jnp.asarray(slot, jnp.int32)
+        )
+
+    def _prefill_full(self) -> None:
+        """Rebatching baseline: re-prefill every live slot (the old loop)."""
+        with self._lock:
+            live = [
+                (i, r) for i, r in enumerate(self._slots) if r is not None
+            ]
+            seqs = {i: self._sequence_tokens(r) for i, r in live}
+        if not live:
+            return
+        B = self.cfg.max_batch
+        S = max(max(s.size for s in seqs.values()), 1)
+        toks = np.zeros((B, S), np.int32)
+        for i, _ in live:
+            toks[i, : seqs[i].size] = seqs[i][:S]
+        state, _ = self._prefill(self.params, jnp.asarray(toks))
+        lens = np.zeros((B,), np.int32)
+        for i, _ in live:
+            lens[i] = seqs[i].size
+        state["pos"] = jnp.asarray(lens)
+        self._state = state
+        with self._lock:
+            self._prefills["full"] += 1
+            self._prefill_tokens["full"] += int(B * S)
+            for i, r in live:
+                if self._slots[i] is r:    # skip slots evicted mid-prefill
+                    self._prefills_by_request[r.request_id] = (
+                        self._prefills_by_request.get(r.request_id, 0) + 1
+                    )
+            self._note("prefill_full", None, f"live={len(live)} tokens={B*S}")
+
+    # ---------------------------------------------------------------- step
+
+    def step(self) -> int:
+        """One engine tick: validate arena, admit, decode once, retire.
+
+        Returns the number of requests retired this tick.  Safe to call
+        with nothing active (returns 0 after the admit sweep).
+        """
+        self._evict_poisoned()
+        with self._lock:
+            admitted = self._admit_locked()
+        if admitted:
+            if self.cfg.incremental:
+                for slot, r in admitted:
+                    self._prefill_slot(slot, r)
+            else:
+                self._prefill_full()
+            # sample arena occupancy while sequences are live (lazy
+            # host-VMA tracking only updates on poll)
+            self.kv.arena.mm.host_vma_count()
+        with self._lock:
+            live = [(i, r) for i, r in enumerate(self._slots) if r is not None]
+        if not live:
+            return 0
+
+        last = np.zeros((self.cfg.max_batch,), np.int32)
+        for i, r in live:
+            last[i] = r.tokens[-1] if r.tokens else int(r.prompt[-1])
+        self._state, logits = self._decode(
+            self.params, self._state, jnp.asarray(last)
+        )
+        next_ids = np.asarray(jnp.argmax(logits, axis=-1))
+
+        retiring: List[Request] = []
+        with self._lock:
+            self._decode_steps += 1
+            for i, r in live:
+                if self._slots[i] is not r:
+                    continue               # evicted mid-step by chaos
+                r.tokens.append(int(next_ids[i]))
+                self.kv.append_tokens(self._seq_id(r), 1)
+                self._tokens_n[r.tenant] = self._tokens_n.get(r.tenant, 0) + 1
+                if len(r.tokens) >= r.max_new_tokens:
+                    # release the KV pages and the slot *before* any user
+                    # post-code runs: a failing post-processor can never
+                    # leak them, and the slot is immediately reusable
+                    r.done = True
+                    self.kv.drop_sequence(self._seq_id(r))
+                    self.admission.slot_released(r.tenant)
+                    self._slots[i] = None
+                    self._note("retire", r, f"slot={i}")
+                    retiring.append(r)
+        for r in retiring:
+            # postprocess outside the engine lock: user code must never
+            # gate submit(), metrics scrapes or the chaos watchdogs
+            self._postprocess(r)
+            with self._lock:
+                self._finish_locked(r)
+        if retiring:
+            self._exec.notify()
+        return len(retiring)
+
+    def _postprocess(self, r: Request) -> None:
+        """Dispatch or run the user post-processor for a retired request.
+
+        A sandbox denial marks ``r.error`` (tenant isolation) instead of
+        taking down the batch.
+        """
+        if r.postprocess is None:
+            return
+        if self.scheduler is not None:
+            # concurrent plane: decode never blocks on user code;
+            # results are joined in drain()
+            self._post_tasks.append((
+                self.scheduler.submit(TaskSpec(
+                    self._post_tenant,
+                    r.postprocess,
+                    (jnp.asarray(r.tokens, jnp.int32),),
+                    name=f"post-req{r.request_id}",
+                )),
+                r,
+            ))
+        else:
+            self._postprocess_inline(r)
+
+    def _postprocess_inline(self, r: Request) -> None:
+        if self.pool is None:
+            out = r.postprocess(jnp.asarray(r.tokens, jnp.int32))
+            r.tokens = [int(t) for t in np.asarray(out)]
+            return
+        sb = self.pool.checkout(self._post_tenant)
+        discard = False
+        try:
+            out = sb.run(r.postprocess, jnp.asarray(r.tokens, jnp.int32))
+            r.tokens = [int(t) for t in np.asarray(out.value)]
+        except (SandboxViolation, BudgetExceeded) as e:
+            # the serial plane now isolates user post-code exactly like
+            # the concurrent plane: the request carries the error, the
+            # poisoned sandbox is discarded, the engine keeps serving
+            discard = True
+            r.error = f"postprocess denied: {e}"
+            self.telemetry.emit(
+                "serving", "postprocess_failed", tenant=r.tenant,
+                detail=r.error,
+            )
+        finally:
+            self.pool.checkin(sb, discard=discard)
+
+    def _finish_locked(self, r: Request) -> None:
+        r.done = True
+        self._live_ids.discard(r.request_id)
+        arrived = (
+            r.arrived_at if r.arrived_at is not None else self._exec.now()
+        )
+        r.latency_s = self._exec.now() - arrived
+        self._completed_n[r.tenant] = self._completed_n.get(r.tenant, 0) + 1
+        self.completed.append(r)
+        if r.admitted_at is not None:
+            # served-request telemetry only: denials and expiries have
+            # their own seepp_serving_* families, and their ~0s samples
+            # would flatten the latency histogram during a denial storm
+            self.telemetry.count("server.request")
+            self.telemetry.observe(
+                "server.request_seconds", r.latency_s, tenant=r.tenant,
+            )
+
+    # --------------------------------------------------------------- drain
+
+    def has_work(self) -> bool:
+        with self._lock:
+            return any(self._queues.values()) or any(
+                r is not None for r in self._slots
+            )
+
+    def drain(self, timeout: float = 300.0) -> List[Request]:
+        """Run steps until queue and slots are empty; join postprocessors.
+
+        Under a SimExecutor with ``step_time_s > 0`` each step advances
+        the virtual clock, firing scheduled chaos (kills, poison) at
+        deterministic times.
+        """
+        deadline = time.monotonic() + timeout
+        while self.has_work():
+            self.step()
+            if self.cfg.step_time_s > 0:
+                self._exec.sleep(self.cfg.step_time_s)
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"drain: work remaining after {timeout}s wall time"
+                )
+        self._join_post_tasks()
+        return self.completed
+
+    def _join_post_tasks(self) -> None:
+        if not self._post_tasks:
+            return
+        # join the concurrent postprocess plane: a denied/failed
+        # post-processor marks its own request and never takes down
+        # the batch (tenant isolation extends to user post-code)
+        self.scheduler.drain()
+        while self._post_tasks:
+            task_id, r = self._post_tasks.popleft()
+            rec = self.scheduler.record(task_id)
+            if rec.state is TaskState.SUCCEEDED:
+                r.tokens = [int(t) for t in np.asarray(rec.result.value)]
+            else:
+                r.error = f"postprocess {rec.state.value}: {rec.error}"
+                self.telemetry.emit(
+                    "serving", "postprocess_failed", tenant=r.tenant,
+                    detail=r.error,
+                )
+
+    # --------------------------------------------------------------- chaos
+
+    def _requeue_locked(self, slot: int, r: Request, why: str) -> None:
+        """Evict a live sequence back to the admit queue (chaos paths).
+
+        Generated tokens survive: re-admission prefills prompt+tokens, so
+        the request resumes where it left off — evictions can never lose
+        or double a completion.
+        """
+        self.kv.drop_sequence(self._seq_id(r))
+        self.admission.slot_released(r.tenant)
+        self._slots[slot] = None
+        self._evictions += 1
+        self._enqueue_locked(r)
+        self._note(f"evict:{why}", r, f"slot={slot}")
+        self.telemetry.count(f"serving.evict_{why}")
+
+    def kill_batch(self) -> int:
+        """Chaos: the decode batch dies mid-flight (node loss under it).
+
+        Every live slot's KV pages are dropped and its request requeued
+        with its tokens intact; returns the number of evicted sequences.
+        """
+        with self._lock:
+            live = [(i, r) for i, r in enumerate(self._slots) if r is not None]
+            for i, r in live:
+                self._requeue_locked(i, r, "kill")
+            self._batch_kills += 1
+            self._note("kill_batch", None, f"evicted={len(live)}")
+        self.telemetry.count("serving.batch_kill")
+        self._exec.notify()
+        return len(live)
+
+    def poison_live(self, index: int = 0) -> Optional[str]:
+        """Chaos: poison the ``index``-th live sequence's arena pages.
+
+        Deterministic given the engine state (live ids are sorted).  The
+        next :meth:`step` detects it via ``kv.validate()`` and evicts.
+        """
+        with self._lock:
+            live = sorted(
+                self._seq_id(r) for r in self._slots if r is not None
+            )
+            if not live:
+                return None
+            victim = live[index % len(live)]
+            self.kv.poison_sequence(victim)
+            self._arena_poisons += 1
+            self._trace.append(
+                f"{self._exec.now():.6f} poison seq={victim}"
+            )
+        self.telemetry.count("serving.arena_poison")
+        return victim
+
+    def _evict_poisoned(self) -> None:
+        # validate under the engine lock: every kv mutation (admit,
+        # retire, kill_batch from a watchdog thread) happens under it,
+        # so the snapshot can never race a concurrent drop_sequence
+        with self._lock:
+            bad = self.kv.validate()
+            if not bad:
+                return
+            for i, r in enumerate(self._slots):
+                if r is not None and self._seq_id(r) in bad:
+                    self._requeue_locked(i, r, "poison")
+        self._exec.notify()
+
+    # --------------------------------------------------------------- stats
+
+    def active_count(self) -> int:
+        with self._lock:
+            return sum(1 for r in self._slots if r is not None)
+
+    def _queue_depths_locked(self) -> Dict[str, int]:
+        # expired entries linger in the tenant heaps until head cleaning
+        # pops them; they are not waiting work and must not be reported
+        out: Dict[str, int] = {}
+        for tenant, heap in self._queues.items():
+            n = sum(1 for (_, _, _, r) in heap if not r.done)
+            if n:
+                out[tenant] = n
+        return out
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return sum(self._queue_depths_locked().values())
+
+    def serving_stats(self) -> Dict[str, Any]:
+        """Snapshot consumed by ``MetricsRegistry.register_serving``."""
+        with self._lock:
+            queue = self._queue_depths_locked()
+            return {
+                "queue_depth": queue,
+                "active_slots": self._active_by_tenant_locked(),
+                "admitted_total": dict(self._admitted),
+                "denied_total": dict(self._denied),
+                "expired_total": dict(self._expired),
+                "completed_total": dict(self._completed_n),
+                "tokens_total": dict(self._tokens_n),
+                "decode_steps_total": self._decode_steps,
+                "prefill_sequences_total": dict(self._prefills),
+                "prefill_tokens_total": dict(self._prefill_tokens),
+                "batch_kill_total": self._batch_kills,
+                "arena_poison_total": self._arena_poisons,
+                "evicted_total": self._evictions,
+            }
+
+    def prefill_counts(self) -> Dict[int, int]:
+        """Times each request was prefilled (regression probe for tests)."""
+        with self._lock:
+            return dict(self._prefills_by_request)
+
+    def reset_history(self) -> None:
+        """Release per-request history (long-lived servers, post-harvest).
+
+        Clears ``completed``, the decision trace and the per-request
+        prefill counts; aggregate counters and live state are untouched.
+        Only call between drains — the lists are the drain's output.
+        """
+        with self._lock:
+            self.completed.clear()
+            self._trace.clear()
+            self._prefills_by_request.clear()
+
+    def arena_report(self) -> Dict[str, Any]:
+        return {
+            "total_contiguous_runs": self.kv.total_runs(),
+            "host_vmas": self.kv.arena.mm.host_vma_count(),
+            "host_vma_high_water": self.kv.arena.mm.host_vma_high_water,
+            "mm_stats": self.kv.arena.mm.stats(),
+        }
 
 
 class Server:
+    """Production wrapper: pool + scheduler + metrics around the engine."""
+
     def __init__(self, model, params, cfg: ServerConfig,
                  sandbox: Optional[Sandbox] = None,
                  *,
                  pool: Optional[SandboxPool] = None,
                  admission: Optional[AdmissionController] = None,
-                 telemetry: Optional[TelemetrySink] = None):
+                 telemetry: Optional[TelemetrySink] = None,
+                 executor: Optional[Executor] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -117,147 +866,51 @@ class Server:
                 self.scheduler.start_heartbeat_watchdog(
                     interval_s=max(1e-3, cfg.heartbeat_timeout_s / 4),
                 )
+        self.engine = ServingEngine(
+            model, params, cfg,
+            executor=executor,
+            admission=self.admission,
+            telemetry=self.telemetry,
+            pool=self.pool,
+            scheduler=self.scheduler,
+            postprocess_tenant=self._postprocess_tenant,
+        )
         self.metrics = (
             MetricsRegistry()
             .register_sink(self.telemetry)
             .register_admission(self.admission)
             .register_pool(self.pool)
+            .register_serving(self.engine)
         )
         if self.scheduler is not None:
             self.metrics.register_scheduler(self.scheduler)
         self._metrics_server: Optional[MetricsHTTPServer] = None
-        mm_cfg = (MMConfig.legacy if cfg.mm_legacy else MMConfig.modern)(
-            granule=4096
-        )
-        token_bytes = (
-            2 * model.cfg.num_kv_heads * model.cfg.hd * 2
-        )  # K+V bf16
-        seq_pages = -(-cfg.max_seq // cfg.tokens_per_page)
-        self.kv = PagedKVAllocator(
-            mm_cfg, tokens_per_page=cfg.tokens_per_page,
-            token_bytes=max(token_bytes, 1),
-            max_seq_pages=seq_pages,
-            pool_pages=4 * cfg.max_batch * seq_pages,
-        )
         self.metrics.register_arena(self.kv)   # §IV.A occupancy gauges
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
-        self.completed: List[Request] = []
 
     # ------------------------------------------------------------- engine
 
+    @property
+    def kv(self) -> PagedKVAllocator:
+        return self.engine.kv
+
+    @property
+    def completed(self) -> List[Request]:
+        return self.engine.completed
+
+    def submit(self, r: Request) -> int:
+        return self.engine.submit(r)
+
+    def step(self) -> int:
+        return self.engine.step()
+
+    def drain(self, timeout: float = 300.0) -> List[Request]:
+        return self.engine.drain(timeout=timeout)
+
     def run(self, requests: List[Request]) -> List[Request]:
         """Process all requests to completion with continuous batching."""
-        queue = list(requests)
-        active: List[Request] = []
-        B = self.cfg.max_batch
-        state = None
-        t_start = time.perf_counter()
-        post_tasks: List[tuple] = []       # (task_id, request) when workers>0
-
-        while queue or active:
-            # admit
-            while queue and len(active) < B:
-                r = queue.pop(0)
-                self.kv.add_sequence(f"req{r.request_id}")
-                self.kv.append_tokens(f"req{r.request_id}", len(r.prompt))
-                active.append(r)
-                state = None                       # re-prefill batch
-
-            if state is None:
-                state = self._prefill_batch(active)
-                # sample arena occupancy while sequences are live (lazy
-                # host-VMA tracking only updates on poll)
-                self.kv.arena.mm.host_vma_count()
-
-            # one decode step for the whole batch
-            last = jnp.asarray(
-                [r.tokens[-1] if r.tokens else int(r.prompt[-1])
-                 for r in self._pad(active)], jnp.int32
-            )
-            state, logits = self._decode(self.params, state, last)
-            next_ids = np.asarray(jnp.argmax(logits, axis=-1))
-
-            retired = False
-            for i, r in enumerate(list(active)):
-                r.tokens.append(int(next_ids[i]))
-                self.kv.append_tokens(f"req{r.request_id}", 1)
-                if len(r.tokens) >= r.max_new_tokens:
-                    r.done = True
-                    r.latency_s = time.perf_counter() - t_start
-                    if r.postprocess is not None:
-                        if self.scheduler is not None:
-                            # concurrent plane: decode never blocks on user
-                            # code; results are joined after the batch
-                            post_tasks.append((
-                                self.scheduler.submit(TaskSpec(
-                                    self._postprocess_tenant,
-                                    r.postprocess,
-                                    (jnp.asarray(r.tokens, jnp.int32),),
-                                    name=f"post-req{r.request_id}",
-                                )),
-                                r,
-                            ))
-                        else:
-                            sb = self.pool.checkout(self._postprocess_tenant)
-                            poisoned = False
-                            try:
-                                out = sb.run(
-                                    r.postprocess,
-                                    jnp.asarray(r.tokens, jnp.int32),
-                                )
-                                r.tokens = [
-                                    int(t) for t in np.asarray(out.value)
-                                ]
-                            except (SandboxViolation, BudgetExceeded):
-                                poisoned = True
-                                raise
-                            finally:
-                                self.pool.checkin(sb, discard=poisoned)
-                    self.kv.drop_sequence(f"req{r.request_id}")
-                    active.remove(r)
-                    self.completed.append(r)
-                    retired = True
-                    self.telemetry.count("server.request")
-                    self.telemetry.observe(
-                        "server.request_seconds", r.latency_s,
-                        tenant=self._postprocess_tenant,
-                    )
-            if retired and (queue or active):
-                state = None                       # rebatch after retirement
-
-        if post_tasks:
-            # join the concurrent postprocess plane: a denied/failed
-            # post-processor marks its own request and never takes down
-            # the batch (tenant isolation extends to user post-code)
-            self.scheduler.drain()
-            for task_id, r in post_tasks:
-                rec = self.scheduler.record(task_id)
-                if rec.state is TaskState.SUCCEEDED:
-                    r.tokens = [int(t) for t in np.asarray(rec.result.value)]
-                else:
-                    r.error = f"postprocess {rec.state.value}: {rec.error}"
-                    self.telemetry.emit(
-                        "server", "postprocess_failed",
-                        tenant=self._postprocess_tenant,
-                        detail=r.error,
-                    )
-        return self.completed
-
-    def _pad(self, active: List[Request]) -> List[Request]:
-        pad = self.cfg.max_batch - len(active)
-        return active + [active[-1]] * pad if pad and active else active
-
-    def _prefill_batch(self, active: List[Request]):
-        B = self.cfg.max_batch
-        S = max(max((len(r.prompt) + len(r.tokens)) for r in active), 1)
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(self._pad(active)):
-            seq = list(r.prompt) + r.tokens
-            toks[i, :len(seq)] = seq[:S]
-        state, _ = self.model.prefill(
-            self.params, jnp.asarray(toks), max_seq=self.cfg.max_seq
-        )
-        return state
+        for r in requests:
+            self.engine.submit(r)
+        return self.engine.drain()
 
     # ------------------------------------------------------------ metrics
 
@@ -295,9 +948,4 @@ class Server:
         }
 
     def arena_report(self) -> Dict[str, Any]:
-        return {
-            "total_contiguous_runs": self.kv.total_runs(),
-            "host_vmas": self.kv.arena.mm.host_vma_count(),
-            "host_vma_high_water": self.kv.arena.mm.host_vma_high_water,
-            "mm_stats": self.kv.arena.mm.stats(),
-        }
+        return self.engine.arena_report()

@@ -24,6 +24,7 @@ __all__ = [
     "AuditedPool",
     "WatchedScheduler",
     "check_drain_invariants",
+    "check_serving_invariants",
 ]
 
 
@@ -144,3 +145,55 @@ def check_drain_invariants(sched, ids, *, quotas=None, ctx=""):
         if sched.record(i).death_requeues > 1
     }
     assert not over, f"requeue budget exceeded{tag}: {over}"
+
+
+def check_serving_invariants(engine, requests, *, ctx=""):
+    """Every global safety invariant a drained ServingEngine must hold.
+
+    * every submitted request completed exactly once (none lost, none
+      doubled — batch kills and poison evictions requeue, never drop),
+    * error-free requests decoded exactly ``max_new_tokens`` tokens,
+    * no decode slot or admit-queue entry survives the drain,
+    * no KV-page leak: zero live sequences, zero contiguous runs, and a
+      clean ``validate()`` (no poison marker or page collision remains),
+    * the admission-plane slot ledger balances (acquired == released).
+    """
+    tag = f" [{ctx}]" if ctx else ""
+
+    # -- completion accounting ------------------------------------------
+    lost = [r.request_id for r in requests if not r.done]
+    assert not lost, f"requests never completed{tag}: {lost}"
+    completed_ids = [r.request_id for r in engine.completed]
+    assert sorted(completed_ids) == sorted(set(completed_ids)), (
+        f"request completed twice{tag}: {sorted(completed_ids)}"
+    )
+    assert sorted(completed_ids) == sorted(r.request_id for r in requests), (
+        f"completed set != submitted set{tag}"
+    )
+    short = {
+        r.request_id: len(r.tokens) for r in requests
+        if r.error is None and len(r.tokens) != r.max_new_tokens
+    }
+    assert not short, f"wrong token counts without error{tag}: {short}"
+
+    # -- plane is empty --------------------------------------------------
+    assert engine.active_count() == 0, (
+        f"slots still held after drain{tag}: {engine.active_count()}"
+    )
+    assert engine.queue_depth() == 0, (
+        f"requests still queued after drain{tag}: {engine.queue_depth()}"
+    )
+
+    # -- KV-page accounting ---------------------------------------------
+    live = engine.kv.seq_lens()
+    assert live.size == 0, f"KV sequences leaked{tag}: {live}"
+    assert engine.kv.total_runs() == 0, (
+        f"KV pages leaked{tag}: {engine.kv.total_runs()} runs live"
+    )
+    assert engine.kv.validate() == [], (
+        f"arena still corrupt after drain{tag}: {engine.kv.validate()}"
+    )
+
+    # -- slot ledger -----------------------------------------------------
+    balance = engine.admission.slot_balance()
+    assert balance == {}, f"slot ledger out of balance{tag}: {balance}"

@@ -1,0 +1,124 @@
+"""Serving-plane test fixtures: a deterministic toy LM + engine factory.
+
+The chaos suite sweeps hundreds of engine instances; building a real
+reduced model per seed would burn minutes in jit tracing.  ``ToyLM`` is a
+tiny recurrent LM (decayed token-embedding sum) with the exact serving
+interface the engine consumes — ``cfg``, ``init_decode_state``,
+``prefill``, ``decode_step`` — whose math is a pure function of the token
+stream.  That recurrence is what makes the chaos invariants sharp: after
+a batch kill, re-prefilling ``prompt + generated`` reproduces the state a
+surviving slot would have had, so replayed seeds must be byte-identical
+end to end.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sim import SimExecutor
+from repro.runtime.serve_loop import Request, ServerConfig, ServingEngine
+
+__all__ = ["ToyLM", "make_engine", "make_requests"]
+
+
+@dataclass(frozen=True)
+class _ToyCfg:
+    vocab_size: int = 31
+    num_kv_heads: int = 1
+    hd: int = 4
+
+
+class ToyLM:
+    """Tiny recurrent LM over *integer* state.
+
+    ``h' = (5 h + emb[token]) & 0x7FFFFF; logits = h @ out`` — all int32,
+    so prefill (scan) and decode (step) produce bit-identical state no
+    matter how XLA fuses them.  A float recurrence here would let an FMA
+    flip a near-tie argmax between a re-prefilled sequence and one that
+    decoded straight through, which is exactly the noise a chaos replay
+    suite cannot afford.
+    """
+
+    MASK = 0x7FFFFF                        # 23-bit state: h @ out fits int32
+
+    def __init__(self, d: int = 8) -> None:
+        self.cfg = _ToyCfg()
+        self.d = d
+
+    def init(self):
+        v, d = self.cfg.vocab_size, self.d
+        # fixed deterministic weights — no RNG, no per-process variance
+        emb = (np.arange(v * d, dtype=np.int64).reshape(v, d)
+               * 2654435761) & 0x7FFF
+        out = (np.arange(d * v, dtype=np.int64).reshape(d, v) * 40503) & 0x7
+        return {
+            "emb": jnp.asarray(emb, jnp.int32),
+            "out": jnp.asarray(out, jnp.int32),
+        }
+
+    def init_decode_state(self, batch_size: int, max_seq: int, dtype=None):
+        return {
+            "h": jnp.zeros((batch_size, self.d), jnp.int32),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def _advance(self, params, h, tokens):
+        return (5 * h + params["emb"][tokens]) & self.MASK
+
+    def prefill(self, params, tokens, *, max_seq=None, patch_embeds=None):
+        B, S = tokens.shape
+
+        def body(h, toks):
+            return self._advance(params, h, toks), None
+
+        h, _ = jax.lax.scan(body, jnp.zeros((B, self.d), jnp.int32),
+                            jnp.swapaxes(tokens, 0, 1))
+        logits = h @ params["out"]
+        state = {"h": h, "pos": jnp.full((B,), S, jnp.int32)}
+        return state, logits
+
+    def decode_step(self, params, state, tokens):
+        h = self._advance(params, state["h"], tokens)
+        logits = h @ params["out"]
+        return {"h": h, "pos": state["pos"] + 1}, logits
+
+
+def make_engine(seed=None, *, max_batch=3, max_seq=48, step_time_s=0.01,
+                quotas=None, incremental=True, executor=None, **kwargs):
+    """A ServingEngine over ToyLM on a seeded SimExecutor (or ``executor``)."""
+    model = ToyLM()
+    params = model.init()
+    cfg = ServerConfig(
+        max_batch=max_batch, max_seq=max_seq, tokens_per_page=4,
+        step_time_s=step_time_s, quotas=quotas, incremental=incremental,
+    )
+    executor = executor or SimExecutor(seed=seed or 0)
+    engine = ServingEngine(
+        model, params, cfg, executor=executor, **kwargs
+    )
+    return engine, executor
+
+
+def make_requests(rng, n, *, tenants=("alice", "bob", "carol"),
+                  vocab=31, deadline_prob=0.15):
+    """n deterministic requests derived from ``rng`` (a random.Random)."""
+    reqs = []
+    for i in range(n):
+        prompt = np.asarray(
+            [rng.randrange(vocab) for _ in range(rng.randint(2, 6))],
+            np.int32,
+        )
+        reqs.append(Request(
+            prompt=prompt,
+            max_new_tokens=rng.randint(2, 6),
+            request_id=i,
+            tenant=rng.choice(tenants),
+            priority=rng.choice((1, 5, 10)),
+            deadline_s=(
+                round(rng.uniform(0.05, 0.3), 3)
+                if rng.random() < deadline_prob else None
+            ),
+        ))
+    return reqs

@@ -64,10 +64,12 @@ def test_run_flags_only_regressed_artifacts(tmp_path):
     regressions, checked, skipped = trend_check.run(str(old), str(new))
     assert len(regressions) == 1 and "BENCH_pool.json" in regressions[0]
     assert len(checked) == 1 and "BENCH_admission.json" in checked[0]
-    # both scheduler metrics ride on the one absent artifact
+    # both scheduler metrics and the serve metric ride on their one
+    # absent artifact each
     assert skipped == [
         "BENCH_scheduler.json: no current artifact",
         "BENCH_scheduler.json: no current artifact",
+        "BENCH_serve.json: no current artifact",
     ]
 
 
@@ -122,3 +124,19 @@ def test_pool_p50_noise_scale_doubles_tolerance(tmp_path):
     _write(new, "BENCH_pool.json", {"warm_checkout_p50_us": 50.0})  # 10x
     regressions, _, _ = trend_check.run(str(old), str(new))
     assert len(regressions) == 1
+
+
+def test_serve_prefill_reduction_metric_is_gated(tmp_path):
+    """The serving engine's prefill work ratio is the tracked serve gate
+    (the tokens/s speedup's floor is asserted inside serve_bench itself —
+    its absolute value swings with compile-time weather): the ratio
+    collapsing toward 1x (engine re-prefilling live slots again) fails
+    even when every other artifact is healthy."""
+    old, new = tmp_path / "old", tmp_path / "new"
+    _write(old, "BENCH_serve.json",
+           {"incremental_speedup_x": 40.0, "prefill_reduction_x": 3.0})
+    _write(new, "BENCH_serve.json",
+           {"incremental_speedup_x": 41.0, "prefill_reduction_x": 1.05})
+    regressions, checked, _ = trend_check.run(str(old), str(new))
+    assert len(regressions) == 1 and "prefill_reduction_x" in regressions[0]
+    assert checked == []

@@ -202,7 +202,9 @@ def test_chaos_seeds_replay_byte_identically():
             f"task histories diverged on replay [seed={seed}]"
         )
         replayed += 1
-    assert replayed >= 1
+    # a single-seed replay window (CHAOS_SEED_COUNT=1 on a seed not
+    # divisible by the stride) legitimately replays nothing
+    assert replayed >= 1 or CHAOS_SEED_COUNT < REPLAY_STRIDE
 
 
 # ---------------------------------------------- sim vs production drift

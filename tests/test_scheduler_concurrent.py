@@ -802,3 +802,102 @@ def test_serial_mode_unchanged_by_default():
     done = sched.run_pending()
     assert [r.task_id for r in done] == [b, a]
     assert sched.worker_count == 0
+
+
+# --------------------------------------------- auto-rebalancing affinity
+
+
+def test_auto_affinity_rebalances_toward_observed_load():
+    """affinity="auto" starts un-homed; after a skewed workload and a
+    rebalance tick, the derived map homes most workers on the hot tenant
+    (EWMA of per-tenant admission volume), stealing stays enabled, and a
+    second drain completes with every invariant intact."""
+    sim = SimExecutor(seed=6)
+    quotas = {
+        "hot": TenantQuota(max_tasks_in_flight=4),
+        "cold": TenantQuota(max_tasks_in_flight=4),
+    }
+    sched = WatchedScheduler(
+        workers=4, executor=sim, quotas=quotas, affinity="auto",
+    )
+    assert sched.affinity_map() == {}      # no signal yet: everyone roams
+
+    def hot_task(x):
+        sim.sleep(0.004)
+        return (x + 1).sum()
+
+    def cold_task(x):
+        sim.sleep(0.004)
+        return (x + 2).sum()
+
+    x = jnp.ones(2)
+    ids = [sched.submit(TaskSpec("hot", hot_task, (x,), name=f"h{i}"))
+           for i in range(12)]
+    ids += [sched.submit(TaskSpec("cold", cold_task, (x,), name="c0"))]
+    sched.start()
+    sched.drain(timeout=60)
+
+    derived = sched.rebalance_affinity()
+    assert sched.rebalance_count == 1
+    homes = [ts[0] for ts in derived.values()]
+    # 12:1 admission skew: at least 3 of 4 workers must home on "hot"
+    assert homes.count("hot") >= 3, derived
+    assert homes.count("cold") <= 1
+
+    # the rebalanced map still drains a mixed follow-up load correctly
+    ids += [sched.submit(TaskSpec("cold", cold_task, (x,), name=f"c{i}"))
+            for i in range(1, 7)]
+    sched.drain(timeout=60)
+    assert all(sched.record(i).state is TaskState.SUCCEEDED for i in ids)
+    check_drain_invariants(sched, ids, quotas=quotas, ctx="auto-affinity")
+    sched.shutdown()
+
+
+def test_auto_affinity_replays_byte_identically():
+    """The rebalance decision is deterministic: same seed, same workload,
+    same tick time => identical derived map and identical trace."""
+
+    def run():
+        sim = SimExecutor(seed=9)
+        sched = ServerlessScheduler(workers=3, executor=sim, affinity="auto")
+
+        def job(x):
+            sim.sleep(0.003)
+            return x.sum()
+
+        ids = [sched.submit(TaskSpec("a" if i % 3 else "b", job,
+                                     (jnp.ones(2),), name=f"t{i}"))
+               for i in range(9)]
+        sim.call_at(0.005, sched.rebalance_affinity)  # fires mid-drain
+        sched.start()
+        sched.drain(timeout=60)
+        trace = sched.trace_text()
+        derived = sched.affinity_map()
+        assert all(
+            sched.record(i).state is TaskState.SUCCEEDED for i in ids
+        )
+        sched.shutdown()
+        return trace, derived
+
+    first, second = run(), run()
+    assert first == second
+    assert any(" rebalance " in ln for ln in first[0].splitlines())
+
+
+def test_static_affinity_and_default_unchanged_by_auto_feature():
+    """The opt-in must not disturb the existing modes: affinity=None keeps
+    an empty map and no stealing; a static dict still pins workers."""
+    sched_none = ServerlessScheduler(workers=2, executor=SimExecutor(seed=0))
+    assert sched_none.affinity_map() == {}
+    assert sched_none._steal_enabled is False
+    assert sched_none.rebalance_affinity() == {}   # no-op without "auto"
+    assert sched_none.rebalance_count == 0
+
+    sched_static = ServerlessScheduler(
+        workers=2, executor=SimExecutor(seed=0),
+        affinity={"w0": ["alice"], "w1": ["bob"]},
+    )
+    assert sched_static.affinity_map() == {"w0": ["alice"], "w1": ["bob"]}
+    assert sched_static._steal_enabled is True
+    before = sched_static.affinity_map()
+    assert sched_static.rebalance_affinity() == before  # auto-only

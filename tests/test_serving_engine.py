@@ -1,0 +1,385 @@
+"""ServingEngine API semantics: submit/step/drain, tenant admission,
+deadline-ordered queueing, incremental prefill, and the serial-plane
+postprocess isolation fix.
+
+Runs on the deterministic ToyLM fixture (tests/helpers/serving.py) under
+a seeded SimExecutor, so every assertion about ordering and latency is
+exact, not statistical."""
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+from helpers.invariants import check_serving_invariants
+from helpers.serving import make_engine, make_requests
+
+from repro.core import SimExecutor, TenantQuota
+from repro.core.metrics import MetricsRegistry
+from repro.runtime import Request, ServingEngine
+
+
+def _req(rid, *, prompt=(1, 2, 3), new=4, **kw):
+    return Request(
+        prompt=np.asarray(prompt, np.int32), max_new_tokens=new,
+        request_id=rid, **kw,
+    )
+
+
+# ------------------------------------------------------- submit/step/drain
+
+
+def test_submit_step_drain_semantics():
+    engine, _ = make_engine(seed=0, max_batch=2)
+    for i in range(3):
+        engine.submit(_req(i, new=2))
+    assert engine.queue_depth() == 3
+    assert engine.active_count() == 0
+
+    # first step: admits up to max_batch, decodes one token each
+    retired = engine.step()
+    assert retired == 0
+    assert engine.active_count() == 2
+    assert engine.queue_depth() == 1
+
+    # second step: the two live requests hit max_new_tokens and retire
+    retired = engine.step()
+    assert retired == 2
+    assert engine.active_count() == 0
+
+    done = engine.drain()
+    assert len(done) == 3
+    assert all(r.done and len(r.tokens) == 2 for r in done)
+    check_serving_invariants(engine, done, ctx="submit-step-drain")
+
+
+def test_drain_is_reentrant_and_accumulates():
+    engine, _ = make_engine(seed=1, max_batch=2)
+    engine.submit(_req(0, new=2))
+    first = engine.drain()
+    assert len(first) == 1
+    engine.submit(_req(1, new=2))
+    second = engine.drain()
+    assert [r.request_id for r in second] == [0, 1]
+
+
+# --------------------------------------------------------- tenant admission
+
+
+def test_tenant_quota_denies_serving_request():
+    quotas = {
+        "paying": TenantQuota(max_tasks_in_flight=2),
+        "banned": TenantQuota(max_tasks_in_flight=0),
+    }
+    engine, _ = make_engine(seed=2, quotas=quotas)
+    ok = _req(0, tenant="paying")
+    bad = _req(1, tenant="banned")
+    engine.submit(ok)
+    engine.submit(bad)
+    # denial is immediate: no queue entry, no KV sequence, error set
+    assert bad.done and "denied" in bad.error
+    assert engine.queue_depth() == 1
+    engine.drain()
+    assert ok.error is None and len(ok.tokens) == 4
+    stats = engine.serving_stats()
+    assert stats["denied_total"] == {"banned": 1}
+    assert stats["admitted_total"] == {"paying": 1}
+    check_serving_invariants(engine, [ok, bad], ctx="quota-denial")
+
+
+def test_no_quota_config_means_no_slot_caps():
+    """Regression: with quotas=None a single tenant must fill the whole
+    batch — TenantQuota's task-plane default of 4 in-flight must not
+    silently cap decode slots at max_batch > 4."""
+    engine, _ = make_engine(seed=12, max_batch=6)
+    reqs = [_req(i, new=2) for i in range(6)]
+    for r in reqs:
+        engine.submit(r)
+    engine.step()
+    assert engine.active_count() == 6      # all slots filled in one sweep
+    engine.drain()
+    check_serving_invariants(engine, reqs, ctx="uncapped")
+
+
+def test_oversized_request_denied_at_submit_not_crash_mid_batch():
+    """Regression: a request that can never fit (prompt+max_new_tokens >
+    max_seq, or an empty prompt) is denied at submit with its own error
+    — it must not MemoryError out of step() mid-batch and strand every
+    other tenant's live sequence."""
+    engine, _ = make_engine(seed=13, max_batch=2, max_seq=16)
+    ok = _req(0, new=4)
+    huge = _req(1, prompt=(1, 2, 3, 4, 5), new=60)
+    empty = _req(2, prompt=())
+    engine.submit(ok)
+    engine.submit(huge)
+    engine.submit(empty)
+    assert huge.done and "exceeds max_seq" in huge.error
+    assert empty.done and "empty prompt" in empty.error
+    engine.drain()                         # must not raise
+    assert ok.error is None and len(ok.tokens) == 4
+    check_serving_invariants(engine, [ok, huge, empty], ctx="oversized")
+
+
+def test_duplicate_live_request_id_denied_at_submit():
+    """Regression: two live requests sharing a request_id would collide
+    on the KV sequence name and ValueError out of step() mid-admission
+    — the second submit is denied instead; the id is reusable once the
+    first completes."""
+    engine, _ = make_engine(seed=15, max_batch=2)
+    first = _req(0, new=2)
+    clash = _req(0, new=2)
+    engine.submit(first)
+    engine.submit(clash)
+    assert clash.done and "already live" in clash.error
+    engine.drain()                         # must not raise
+    assert first.error is None and len(first.tokens) == 2
+    reuse = _req(0, new=2)                 # id free again after completion
+    engine.submit(reuse)
+    engine.drain()
+    assert reuse.error is None and len(reuse.tokens) == 2
+
+
+def test_tenant_slot_cap_throttles_without_blocking_others():
+    quotas = {
+        "greedy": TenantQuota(max_tasks_in_flight=1),
+        "other": TenantQuota(max_tasks_in_flight=2),
+    }
+    engine, _ = make_engine(seed=3, max_batch=3, quotas=quotas)
+    reqs = [
+        _req(0, tenant="greedy", new=6),
+        _req(1, tenant="greedy", new=2),   # throttled behind req 0
+        _req(2, tenant="other", new=2),    # must not wait for greedy
+    ]
+    for r in reqs:
+        engine.submit(r)
+    engine.step()
+    active = {r.request_id for r in engine._slots if r is not None}
+    assert active == {0, 2}                # greedy capped at 1, other admitted
+    engine.drain()
+    check_serving_invariants(engine, reqs, ctx="slot-cap")
+    # the throttled request was admitted only after its tenant's slot freed
+    admits = [ln for ln in engine.trace() if " admit " in ln]
+    assert "req=1" in admits[-1]
+
+
+# ------------------------------------------------- deadline-ordered queueing
+
+
+def test_admit_queue_orders_by_priority_then_deadline():
+    engine, _ = make_engine(seed=4, max_batch=1)
+    hog = _req(0, new=3)
+    engine.submit(hog)
+    engine.step()                          # hog owns the only slot
+    late = _req(1, priority=5)
+    urgent = _req(2, priority=5, deadline_s=60.0)
+    background = _req(3, priority=9)
+    vip = _req(4, priority=1)
+    for r in (late, urgent, background, vip):
+        engine.submit(r)
+    engine.drain()
+    admits = [
+        int(ln.split("req=")[1].split(" ")[0])
+        for ln in engine.trace() if " admit " in ln
+    ]
+    # priority first; equal priority orders by deadline (urgent < late);
+    # arrival order breaks remaining ties
+    assert admits == [0, 4, 2, 1, 3]
+    check_serving_invariants(engine, [hog, late, urgent, background, vip],
+                             ctx="admit-order")
+
+
+def test_expired_deadline_completes_with_error_not_silence():
+    engine, sim = make_engine(seed=5, max_batch=1, step_time_s=0.01)
+    hog = _req(0, new=30, priority=1)      # admitted first despite deadlines
+    doomed = _req(1, deadline_s=0.05)      # expires while hog decodes
+    engine.submit(hog)
+    engine.submit(doomed)
+    engine.drain()
+    assert doomed.done and "deadline" in doomed.error
+    # the expiry lands at the first step past the deadline, not when the
+    # saturated batch finally frees a slot (~0.3s later)
+    assert doomed.latency_s < 0.1
+    assert hog.error is None
+    stats = engine.serving_stats()
+    assert stats["expired_total"] == {"serving": 1}
+    check_serving_invariants(engine, [hog, doomed], ctx="deadline-expiry")
+
+
+# ------------------------------------------------------- incremental prefill
+
+
+def test_deadline_expires_on_time_even_buried_behind_higher_priority():
+    """A deadline-bearing request queued *behind* a higher-priority entry
+    still expires the moment its deadline passes — expiry runs off the
+    dedicated deadline heap, not queue-head position."""
+    engine, sim = make_engine(seed=14, max_batch=1, step_time_s=0.01)
+    hog = _req(0, new=30, priority=1)      # owns the only slot
+    blocker = _req(1, priority=1)          # queue head ahead of doomed
+    doomed = _req(2, priority=5, deadline_s=0.05)
+    for r in (hog, blocker, doomed):
+        engine.submit(r)
+    engine.drain()
+    assert doomed.done and "deadline" in doomed.error
+    assert doomed.latency_s < 0.1          # not after hog+blocker finished
+    assert blocker.error is None
+    check_serving_invariants(engine, [hog, blocker, doomed],
+                             ctx="buried-deadline")
+
+
+def test_admit_does_not_reprefill_live_slots():
+    """The tentpole regression guard: a new admission prefills exactly its
+    own sequence; live slots keep their decode state."""
+    engine, _ = make_engine(seed=6, max_batch=2)
+    marathon = _req(0, new=12)
+    engine.submit(marathon)
+    engine.step()                          # marathon live in slot 0
+    churn = [_req(i, new=2) for i in range(1, 6)]
+    for r in churn:
+        engine.submit(r)
+    engine.drain()
+    counts = engine.prefill_counts()
+    # every request — including the long-lived one that watched 5 admits
+    # and 5 retirements — was prefilled exactly once
+    assert counts == {i: 1 for i in range(6)}
+    stats = engine.serving_stats()
+    assert stats["prefill_sequences_total"]["full"] == 0
+    assert stats["prefill_sequences_total"]["incremental"] == 6
+    check_serving_invariants(engine, [marathon] + churn, ctx="no-reprefill")
+
+
+def test_rebatch_baseline_reprefills_whole_batch():
+    """The A/B control: incremental=False pays the full-batch prefill on
+    every admission wave (what serve_bench quantifies)."""
+    engine, _ = make_engine(seed=7, max_batch=2, incremental=False)
+    # request 0 stays live across the churn waves, so each later
+    # admission wave re-prefills it (the O(active·steps) tax)
+    reqs = [_req(0, new=10)] + [_req(i, new=2) for i in range(1, 4)]
+    for r in reqs:
+        engine.submit(r)
+    engine.drain()
+    counts = engine.prefill_counts()
+    assert max(counts.values()) > 1        # somebody got re-prefilled
+    stats = engine.serving_stats()
+    assert stats["prefill_sequences_total"]["incremental"] == 0
+    assert stats["prefill_sequences_total"]["full"] >= 2
+    check_serving_invariants(engine, reqs, ctx="rebatch-baseline")
+
+
+def test_incremental_and_rebatch_modes_agree_on_tokens():
+    """Slot-prefill surgery must not change the math: both engine modes
+    emit identical token streams for the same workload.
+
+    Compared at max_batch=1 because that is the only regime where the
+    rebatching baseline is exact: with ragged batches it zero-pads the
+    shorter sequences, polluting recurrent state — a defect the
+    incremental engine (which always prefills one unpadded sequence)
+    does not share.
+    """
+
+    def run(incremental):
+        rng = random.Random(11)
+        engine, _ = make_engine(
+            seed=11, max_batch=1, incremental=incremental,
+        )
+        reqs = make_requests(rng, 6, deadline_prob=0.0)
+        for r in reqs:
+            engine.submit(r)
+        engine.drain()
+        return {r.request_id: tuple(r.tokens) for r in reqs}
+
+    assert run(True) == run(False)
+
+
+# ------------------------------------------------------ latency measurement
+
+
+def test_latency_measured_from_arrival_not_engine_start():
+    engine, sim = make_engine(seed=8, max_batch=1, step_time_s=0.01)
+    early = _req(0, new=20)
+    late = _req(1, new=2)
+    engine.submit(early)
+    sim.call_at(0.05, lambda: engine.submit(late))
+    engine.drain()
+    assert late.arrived_at == 0.05
+    # latency counts from *its* arrival: strictly less than the total
+    # elapsed virtual time (which is what measuring from start would give)
+    assert 0 < late.latency_s < sim.now() - 0.049
+    assert early.latency_s > late.latency_s  # early queued from t=0
+
+
+# ------------------------------------------- postprocess isolation (serial)
+
+
+def test_inline_postprocess_violation_marks_request_and_leaks_nothing():
+    """The serial plane matches the concurrent plane's isolation: a
+    sandbox-denied post-processor marks its own request's error; the KV
+    sequence is dropped, the engine keeps serving, nothing raises."""
+    from repro.core import SandboxPool
+
+    def evil(toks):
+        import jax
+
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(toks.shape, toks.dtype), toks
+        )
+
+    pool = SandboxPool()
+    engine, _ = make_engine(seed=9, max_batch=2, pool=pool)
+    bad = _req(0, new=2, postprocess=evil)
+    good = _req(1, new=2, postprocess=lambda t: jnp.sort(t))
+    engine.submit(bad)
+    engine.submit(good)
+    done = engine.drain()                  # must not raise
+    assert len(done) == 2
+    assert "postprocess denied" in bad.error
+    assert good.error is None
+    assert good.tokens == sorted(good.tokens)
+    assert pool.checked_out() == 0         # poisoned sandbox discarded
+    check_serving_invariants(engine, [bad, good], ctx="postprocess-isolation")
+
+
+# ----------------------------------------------------------------- metrics
+
+
+def test_serving_metric_families_exported():
+    quotas = {"vip": TenantQuota(max_tasks_in_flight=2),
+              "banned": TenantQuota(max_tasks_in_flight=0)}
+    engine, _ = make_engine(seed=10, quotas=quotas)
+    engine.submit(_req(0, tenant="vip", new=3))
+    engine.submit(_req(1, tenant="banned"))
+    engine.drain()
+    reg = MetricsRegistry().register_serving(engine)
+    text = reg.render()
+    for family in (
+        'seepp_serving_admitted_total{tenant="vip"} 1',
+        'seepp_serving_denied_total{tenant="banned"} 1',
+        'seepp_serving_completed_total{tenant="banned"} 1',
+        'seepp_serving_tokens_total{tenant="vip"} 3',
+        'seepp_serving_prefill_sequences_total{mode="incremental"} 1',
+        "seepp_serving_decode_steps_total 3",
+        "seepp_serving_batch_kill_total 0",
+        "seepp_serving_arena_poison_total 0",
+    ):
+        assert family in text, family
+    dump = reg.dump()
+    assert dump["seepp_serving_queue_depth"] == {"": 0}
+
+
+def test_engine_runs_on_thread_executor_too():
+    """Production path: same engine, real threads and wall clock."""
+    from repro.core import ThreadExecutor
+
+    engine, _ = make_engine(
+        seed=None, executor=ThreadExecutor(), step_time_s=0.0,
+    )
+    reqs = [_req(i, new=3) for i in range(5)]
+    for r in reqs:
+        engine.submit(r)
+    engine.drain()
+    assert all(len(r.tokens) == 3 and r.error is None for r in reqs)
+    assert all(r.latency_s >= 0 for r in reqs)
+    check_serving_invariants(engine, reqs, ctx="thread-executor")
+
+
+def test_engine_is_importable_from_runtime():
+    assert ServingEngine is not None
+    assert isinstance(SimExecutor(seed=0), SimExecutor)
