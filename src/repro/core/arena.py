@@ -151,10 +151,32 @@ class PagedKVAllocator:
         self.arena.destroy_region(seq_id)
         self._tokens.pop(seq_id)
         self._poisoned.discard(seq_id)
+        # a second claimant exists only for pages of a *collided*
+        # sequence (collision marking flags both parties), so the
+        # normal-case drop keeps its O(pages) fast path
+        scan_heirs = seq_id in self._collisions
         self._collisions.discard(seq_id)
-        for page in self._seq_pages.pop(seq_id, ()):
-            if self._owner.get(page) == seq_id:
+        dropped = self._seq_pages.pop(seq_id, ())
+        for page in dropped:
+            if self._owner.get(page) != seq_id:
+                continue
+            heir = None
+            if scan_heirs:
+                heir = next(
+                    (
+                        s
+                        for s, pages in self._seq_pages.items()
+                        if page in pages
+                    ),
+                    None,
+                )
+            if heir is None:
                 del self._owner[page]
+            else:
+                # a collided page outlived its recorded owner: hand the
+                # record to a surviving claimant so a third sequence
+                # faulting this page is still flagged as a collision
+                self._owner[page] = heir
 
     def _track_new_pages(self, seq_id: str) -> None:
         pages = self.arena.physical_pages(seq_id)
@@ -230,5 +252,6 @@ class PagedKVAllocator:
         every decode step is O(result), not O(sequences x pages).
         """
         return sorted(
-            (self._poisoned | self._collisions) & set(self._tokens)
+            s for s in self._poisoned | self._collisions
+            if s in self._tokens
         )

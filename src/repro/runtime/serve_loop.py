@@ -290,7 +290,11 @@ class ServingEngine:
         r.error = f"admission denied: {why}"
         self._denied[r.tenant] = self._denied.get(r.tenant, 0) + 1
         self._note("deny", r)
-        self._finish_locked(r)
+        # denials happen before _live_ids.add: this request never owned
+        # its id, so releasing it here would strip the guard entry of a
+        # LIVE request with the same id (the duplicate-id denial case)
+        # and let a later submit crash kv.add_sequence mid-batch
+        self._finish_locked(r, release_id=False)
         self.telemetry.emit(
             "serving", "denied", tenant=r.tenant, detail=r.error,
         )
@@ -592,20 +596,34 @@ class ServingEngine:
 
     def _postprocess_inline(self, r: Request) -> None:
         if self.pool is None:
-            out = r.postprocess(jnp.asarray(r.tokens, jnp.int32))
-            r.tokens = [int(t) for t in np.asarray(out)]
+            try:
+                out = r.postprocess(jnp.asarray(r.tokens, jnp.int32))
+                r.tokens = [int(t) for t in np.asarray(out)]
+            except Exception as e:
+                r.error = f"postprocess failed: {e}"
+                self.telemetry.emit(
+                    "serving", "postprocess_failed", tenant=r.tenant,
+                    detail=r.error,
+                )
             return
         sb = self.pool.checkout(self._post_tenant)
         discard = False
         try:
             out = sb.run(r.postprocess, jnp.asarray(r.tokens, jnp.int32))
             r.tokens = [int(t) for t in np.asarray(out.value)]
-        except (SandboxViolation, BudgetExceeded) as e:
-            # the serial plane now isolates user post-code exactly like
-            # the concurrent plane: the request carries the error, the
-            # poisoned sandbox is discarded, the engine keeps serving
+        except Exception as e:
+            # the serial plane isolates user post-code exactly like the
+            # concurrent plane: the request carries the error, the
+            # tainted sandbox is discarded, the engine keeps serving.
+            # Sandbox.run re-raises arbitrary user exceptions, so this
+            # must catch everything, not just SandboxViolation/Budget
             discard = True
-            r.error = f"postprocess denied: {e}"
+            kind = (
+                "denied"
+                if isinstance(e, (SandboxViolation, BudgetExceeded))
+                else "failed"
+            )
+            r.error = f"postprocess {kind}: {e}"
             self.telemetry.emit(
                 "serving", "postprocess_failed", tenant=r.tenant,
                 detail=r.error,
@@ -613,9 +631,10 @@ class ServingEngine:
         finally:
             self.pool.checkin(sb, discard=discard)
 
-    def _finish_locked(self, r: Request) -> None:
+    def _finish_locked(self, r: Request, *, release_id: bool = True) -> None:
         r.done = True
-        self._live_ids.discard(r.request_id)
+        if release_id:
+            self._live_ids.discard(r.request_id)
         arrived = (
             r.arrived_at if r.arrived_at is not None else self._exec.now()
         )

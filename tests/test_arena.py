@@ -86,3 +86,53 @@ def test_drop_sequence_recycles():
     used = kv.arena.mm.backing.allocated_bytes
     kv.drop_sequence("a")
     assert kv.arena.mm.backing.allocated_bytes < used
+
+
+def _fault_forged_page(kv, seq_id, page):
+    """Fault one page for ``seq_id`` whose *tracked* physical index is
+    forged to ``page`` — simulating a DMA scribble / corrupt page table
+    landing two sequences on one backing page (no in-repo allocator path
+    produces this; it is exactly the corruption validate() exists for)."""
+    real = kv.arena.physical_pages
+    kv.arena.physical_pages = lambda name: (
+        np.asarray([page], np.int32) if name == seq_id else real(name)
+    )
+    try:
+        kv.append_tokens(seq_id, kv.tokens_per_page)
+    finally:
+        kv.arena.physical_pages = real
+
+
+def test_collided_page_ownership_survives_owner_drop():
+    """Regression: dropping the *recorded owner* of a collided page used
+    to delete the ownership entry even though the other colliding
+    sequence still referenced the page — a third sequence faulting that
+    page then escaped collision detection entirely."""
+    kv = PagedKVAllocator(MMConfig.modern(granule=G), tokens_per_page=16,
+                          token_bytes=G // 16)
+    kv.add_sequence("a")
+    kv.append_tokens("a", 16)              # faults one real page: owner=a
+    page = int(kv.arena.physical_pages("a")[0])
+
+    kv.add_sequence("b")
+    _fault_forged_page(kv, "b", page)      # b collides with a on `page`
+    assert kv.validate() == ["a", "b"]
+
+    kv.drop_sequence("a")                  # recorded owner goes away
+    assert kv._owner[page] == "b"          # ownership transferred, not lost
+    assert kv.validate() == ["b"]
+
+    kv.add_sequence("c")
+    _fault_forged_page(kv, "c", page)      # third claimant must be caught
+    assert kv.validate() == ["b", "c"]
+
+
+def test_drop_uncollided_sequence_clears_ownership():
+    kv = PagedKVAllocator(MMConfig.modern(granule=G), tokens_per_page=16,
+                          token_bytes=G // 16)
+    kv.add_sequence("a")
+    kv.append_tokens("a", 16)
+    page = int(kv.arena.physical_pages("a")[0])
+    kv.drop_sequence("a")
+    assert page not in kv._owner
+    assert kv.validate() == []

@@ -138,6 +138,36 @@ def test_duplicate_live_request_id_denied_at_submit():
     assert reuse.error is None and len(reuse.tokens) == 2
 
 
+def test_denied_submit_never_strips_live_id_guard():
+    """Regression: _deny_locked used to route through _finish_locked,
+    which unconditionally discarded the request id from the live-id
+    guard set.  Since denials happen *before* the id is added, a denied
+    duplicate (or an empty-prompt submit reusing a live id) stripped the
+    LIVE request's guard entry — the next submit with that id was then
+    admitted and crashed kv.add_sequence mid-batch with
+    ValueError('region exists'), for every tenant at once."""
+    engine, _ = make_engine(seed=16, max_batch=2)
+    first = _req(0, new=6)
+    engine.submit(first)
+    engine.step()                          # id 0 is slotted and decoding
+    clash = _req(0, new=2)
+    engine.submit(clash)                   # denied; must not free id 0
+    assert clash.done and "already live" in clash.error
+    empty = _req(0, prompt=())
+    engine.submit(empty)                   # denied earlier in the chain;
+    assert empty.done and "empty prompt" in empty.error
+    again = _req(0, new=2)
+    engine.submit(again)                   # id 0 must STILL read as live
+    assert again.done and "already live" in again.error
+    engine.drain()                         # must not raise mid-batch
+    assert first.error is None and len(first.tokens) == 6
+    # all four completed exactly once (invariant helper not applicable:
+    # the ids collide by construction); plane fully drained, no KV leak
+    assert len(engine.completed) == 4
+    assert engine.active_count() == 0 and engine.queue_depth() == 0
+    assert engine.kv.seq_lens().size == 0 and engine.kv.total_runs() == 0
+
+
 def test_tenant_slot_cap_throttles_without_blocking_others():
     quotas = {
         "greedy": TenantQuota(max_tasks_in_flight=1),
@@ -335,6 +365,49 @@ def test_inline_postprocess_violation_marks_request_and_leaks_nothing():
     assert good.tokens == sorted(good.tokens)
     assert pool.checked_out() == 0         # poisoned sandbox discarded
     check_serving_invariants(engine, [bad, good], ctx="postprocess-isolation")
+
+
+def test_inline_postprocess_user_exception_marks_request_not_engine():
+    """Regression: Sandbox.run re-raises arbitrary user exceptions, and
+    the inline handler only caught SandboxViolation/BudgetExceeded — a
+    post-processor raising ValueError escaped step()/drain() and its
+    sandbox was checked in clean.  Any failure must mark the request and
+    discard the sandbox."""
+    from repro.core import SandboxPool
+
+    def broken(toks):
+        raise ValueError("user bug")
+
+    pool = SandboxPool()
+    engine, _ = make_engine(seed=17, max_batch=2, pool=pool)
+    bad = _req(0, new=2, postprocess=broken)
+    good = _req(1, new=2, postprocess=lambda t: jnp.sort(t))
+    engine.submit(bad)
+    engine.submit(good)
+    done = engine.drain()                  # must not raise
+    assert len(done) == 2
+    assert "postprocess failed" in bad.error and "user bug" in bad.error
+    assert good.error is None
+    assert pool.checked_out() == 0         # tainted sandbox discarded
+    check_serving_invariants(engine, [bad, good], ctx="postprocess-userexc")
+
+
+def test_inline_postprocess_without_pool_isolates_user_exception():
+    """The pool-less serial path gets the same isolation: a raising
+    post-processor marks its own request instead of crashing drain()."""
+    def broken(toks):
+        raise RuntimeError("boom")
+
+    engine, _ = make_engine(seed=18, max_batch=1)
+    bad = _req(0, new=2, postprocess=broken)
+    good = _req(1, new=2, postprocess=lambda t: jnp.sort(t))
+    engine.submit(bad)
+    engine.submit(good)
+    done = engine.drain()                  # must not raise
+    assert len(done) == 2
+    assert "postprocess failed" in bad.error and "boom" in bad.error
+    assert good.error is None
+    check_serving_invariants(engine, [bad, good], ctx="postprocess-no-pool")
 
 
 # ----------------------------------------------------------------- metrics
