@@ -89,6 +89,8 @@ def main() -> None:
          "prefill tokens avoided vs rebatching"),
         ("serve_incremental_tokens_per_s", sv["incremental_tokens_per_s"],
          "reduced-model CPU decode"),
+        ("serve_paged_speedup_x", sv["paged_speedup_x"],
+         "paged vs dense KV at the largest (slots, max_seq) cell"),
     ]
 
     print("=" * 72)

@@ -14,6 +14,15 @@ Target: **>= 2x** for the incremental engine.  Also reported: prefill
 tokens pushed by each mode (the work the tentpole deletes), and a
 3-run same-seed SimExecutor determinism check on the engine trace.
 
+The **paged sweep** then A/Bs ``kv_mode="paged"`` against ``"dense"``
+over growing (active slots x max_seq) cells with *short* live sequences
+— the serving regime paged KV exists for: the dense path drags a
+(B, max_seq) reservation through every decode step (attention over the
+full reservation plus an O(max_seq) cache scatter), while the paged
+path's cost follows the pages actually allocated.  The headline
+``paged_speedup_x`` is the largest cell's ratio, and the cell series
+must show the gap growing.
+
 ``--json-out`` writes ``BENCH_serve.json`` for the CI trend check.
 """
 
@@ -50,14 +59,16 @@ def _requests(n: int, prompt_len: int, new_tokens: int, long_every: int,
 
 
 def _build_engine(arch: str, *, max_batch: int, max_seq: int,
-                  incremental: bool, executor=None):
+                  incremental: bool, kv_mode: str = "dense",
+                  kv_pool_pages=None, executor=None):
     cfg = get_reduced(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServingEngine(
         model, params,
         ServerConfig(max_batch=max_batch, max_seq=max_seq,
-                     incremental=incremental),
+                     incremental=incremental, kv_mode=kv_mode,
+                     kv_pool_pages=kv_pool_pages),
         executor=executor,
     )
     return engine, cfg
@@ -100,6 +111,74 @@ def run_mode(arch: str, *, incremental: bool, requests: int, prompt_len: int,
         "tokens_per_s": tokens / wall,
         "prefill_tokens": float(sum(prefill_tokens.values())),
     }
+
+
+#: (active slots, max_seq) cells for the paged-vs-dense sweep — both
+#: axes grow together so the dense path's reservation tax compounds
+PAGED_SWEEP_CELLS = ((2, 1024), (3, 2048), (4, 4096))
+
+
+def _paged_cell(arch: str, *, kv_mode: str, slots: int, max_seq: int,
+                requests: int, prompt_len: int, new_tokens: int) -> float:
+    """Tokens/s for one (slots, max_seq) cell in one kv_mode.
+
+    The workload is deliberately *short-lived churn*: live sequences
+    never exceed a couple of KV pages, so every byte of the dense mode's
+    (B, max_seq) reservation — the padded prefill, the full-width
+    attention, the full-width cache scatter — is pure overhead that the
+    paged mode does not pay.  The page pool is sized to the live-token
+    working set (4x headroom), NOT to max_seq — sizing the pool to the
+    memory actually available is how paged KV deploys, and it is why the
+    paged columns stay flat while the dense columns degrade.
+    """
+    page = ServerConfig.tokens_per_page
+    pool = 4 * slots * (-(-(prompt_len + new_tokens + 1) // page) + 1)
+    engine, cfg = _build_engine(
+        arch, max_batch=slots, max_seq=max_seq, incremental=True,
+        kv_mode=kv_mode, kv_pool_pages=pool,
+    )
+    assert engine.kv_mode == kv_mode
+    # warmup: same request shape as the timed run, so every jit variant
+    # (prefill width, decode table bucket) compiles outside the window
+    for r in _requests(slots, prompt_len, new_tokens, 0, 0, cfg.vocab_size):
+        r.request_id += 10_000
+        engine.submit(r)
+    engine.drain()
+
+    reqs = _requests(requests, prompt_len, new_tokens, 0, 0, cfg.vocab_size)
+    t0 = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
+    engine.drain()
+    wall = time.perf_counter() - t0
+    assert all(r.error is None for r in reqs)
+    assert engine.kv.total_runs() == 0
+    assert engine.kv.pages_allocated == engine.kv.pages_freed
+    return sum(len(r.tokens) for r in reqs) / wall
+
+
+def run_paged_sweep(arch: str, *, prompt_len: int = 8,
+                    new_tokens: int = 6) -> List[Dict[str, float]]:
+    """A/B ``kv_mode`` over growing (slots, max_seq) cells.
+
+    Returns one row per cell with both throughputs and the ratio; the
+    caller asserts the ratio > 1 at the largest cell and that the gap
+    grows along the sweep.
+    """
+    rows = []
+    for slots, max_seq in PAGED_SWEEP_CELLS:
+        cell = dict(slots=slots, max_seq=max_seq, requests=3 * slots,
+                    prompt_len=prompt_len, new_tokens=new_tokens)
+        dense = _paged_cell(arch, kv_mode="dense", **cell)
+        paged = _paged_cell(arch, kv_mode="paged", **cell)
+        rows.append({
+            "slots": slots,
+            "max_seq": max_seq,
+            "dense_tokens_per_s": dense,
+            "paged_tokens_per_s": paged,
+            "speedup_x": paged / dense,
+        })
+    return rows
 
 
 def run_sim_determinism(arch: str, seed: int = 7) -> str:
@@ -151,6 +230,21 @@ def main(
     prefill_saved = (
         rebatch["prefill_tokens"] / max(incremental["prefill_tokens"], 1.0)
     )
+
+    sweep = run_paged_sweep(arch)
+    paged_speedup = sweep[-1]["speedup_x"]
+    # the tentpole's acceptance gate: paged must beat dense, and the gap
+    # must widen as the reservation (slots x max_seq) grows — if paging
+    # overhead ever swamps the reservation tax, this is where it shows
+    assert paged_speedup > 1.0, (
+        f"paged decode lost to dense at the largest cell: "
+        f"{paged_speedup:.2f}x"
+    )
+    assert sweep[-1]["speedup_x"] > sweep[0]["speedup_x"], (
+        "paged-vs-dense gap did not grow along the sweep: "
+        + ", ".join(f"{r['speedup_x']:.2f}x" for r in sweep)
+    )
+
     digest = run_sim_determinism(arch)
 
     print("# serve_bench")
@@ -163,6 +257,14 @@ def main(
           f"({incremental['prefill_tokens']:.0f} prefill tokens)")
     print(f"  speedup             : {speedup:.1f}x tokens/s, "
           f"{prefill_saved:.1f}x less prefill work")
+    print("  paged-vs-dense sweep (short-lived churn):")
+    for row in sweep:
+        print(f"    slots={row['slots']} max_seq={row['max_seq']:5d} : "
+              f"dense {row['dense_tokens_per_s']:8.1f} tok/s, "
+              f"paged {row['paged_tokens_per_s']:8.1f} tok/s "
+              f"-> {row['speedup_x']:.2f}x")
+    print(f"  paged speedup       : {paged_speedup:.2f}x at the largest "
+          f"cell (gap grows along the sweep)")
     print(f"  sim determinism     : 3 runs -> trace sha256 "
           f"{digest[:16]}... identical")
 
@@ -176,6 +278,8 @@ def main(
         "rebatch_prefill_tokens": rebatch["prefill_tokens"],
         "incremental_prefill_tokens": incremental["prefill_tokens"],
         "prefill_reduction_x": prefill_saved,
+        "paged_speedup_x": paged_speedup,
+        "paged_sweep": sweep,
         "sim_trace_sha256": digest,
     }
     if json_out:

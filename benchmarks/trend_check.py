@@ -38,12 +38,17 @@ from typing import Dict, List, Mapping, Optional, Tuple
 #: (~16-42x) is wider than any sane relative tolerance — the >=2x
 #: floor is asserted inside serve_bench itself instead.  The trend row
 #: tracks prefill_reduction_x, a pure work ratio that is stable.
+#: paged_speedup_x is a same-process wall-clock ratio but swings ~2x
+#: with machine load (2.7-4.4x observed), so it runs at twice the
+#: tolerance; its hard gates (>1x at the largest cell, gap growing
+#: along the sweep) are asserted inside serve_bench every run.
 TRACKED = (
     ("BENCH_pool.json", "warm_checkout_p50_us", "lower", 2.0),
     ("BENCH_admission.json", "warm_speedup_x", "higher", 1.0),
     ("BENCH_scheduler.json", "speedup_x", "higher", 1.0),
     ("BENCH_scheduler.json", "steal_speedup_x", "higher", 1.0),
     ("BENCH_serve.json", "prefill_reduction_x", "higher", 1.0),
+    ("BENCH_serve.json", "paged_speedup_x", "higher", 2.0),
 )
 
 

@@ -1,7 +1,12 @@
 """End-to-end serving driver (the paper-representative example):
 
-continuous batching over the SEE++ **paged KV arena**, with the paper's
-legacy-vs-modern allocator A/B and a sandboxed user post-processor.
+continuous batching over the SEE++ **paged KV arena** — the arena's page
+pool is the physical KV store, decode attention runs through the Pallas
+paged-attention kernel, and sampled token streams are reproducible by
+seed — with the paper's legacy-vs-modern allocator A/B, a sandboxed user
+post-processor, and a mid-flight batch kill to show that in paged mode
+recovery is a page-table edit (sequences resume off their surviving
+pages with zero re-prefill).
 
     PYTHONPATH=src python examples/serve_paged.py
 """
@@ -26,23 +31,51 @@ def main():
             [jnp.ones(1, bool), tokens[1:] != tokens[:-1]])
         return jnp.where(keep, tokens, -1)
 
-    for legacy in (True, False):
-        srv = Server(model, params,
-                     ServerConfig(max_batch=4, max_seq=96, mm_legacy=legacy))
-        reqs = [
-            Request(prompt=rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32),
+    def make_requests():
+        r = np.random.default_rng(7)
+        return [
+            Request(prompt=r.integers(0, cfg.vocab_size, (6,)).astype(np.int32),
                     max_new_tokens=8, request_id=i,
+                    temperature=0.8 if i % 2 else 0.0, top_k=8, seed=100 + i,
                     postprocess=dedupe if i == 0 else None)
             for i in range(6)
         ]
-        done = srv.run(reqs)
+
+    # -- legacy-vs-modern allocator A/B over the paged decode plane -----
+    for legacy in (True, False):
+        srv = Server(model, params,
+                     ServerConfig(max_batch=4, max_seq=96, mm_legacy=legacy))
+        done = srv.run(make_requests())
         stats = srv.arena_report()["mm_stats"]
         name = "legacy" if legacy else "modern"
-        print(f"[{name}] {len(done)} requests served; "
+        print(f"[{name}] {len(done)} requests served "
+              f"(kv_mode={srv.engine.kv_mode}); "
               f"host VMAs hw={stats['host_vma_high_water']} "
               f"faults={stats['faults']}")
+        srv.close()
+    baseline = {r.request_id: tuple(r.tokens)
+                for r in sorted(done, key=lambda r: r.request_id)}
     print("first request postprocessed (sandboxed):",
           sorted(done, key=lambda r: r.request_id)[0].tokens)
+
+    # -- eviction is a table edit: kill the batch mid-flight ------------
+    srv = Server(model, params, ServerConfig(max_batch=4, max_seq=96))
+    reqs = make_requests()
+    for r in reqs:
+        srv.submit(r)
+    srv.step()                              # everything admitted + decoding
+    srv.engine.kill_batch()                 # chaos: evict every live slot
+    srv.drain()
+    stats = srv.engine.serving_stats()
+    resumed = {r.request_id: tuple(r.tokens)
+               for r in sorted(reqs, key=lambda r: r.request_id)}
+    print(f"[kill] batch killed mid-flight: evicted={stats['evicted_total']} "
+          f"resumed={stats['resumed_total']} off surviving pages "
+          f"(pages allocated={stats['kv_pages_allocated_total']} "
+          f"freed={stats['kv_pages_freed_total']})")
+    print("[kill] seeded streams identical to the un-killed run:",
+          resumed == baseline)
+    srv.close()
 
 
 if __name__ == "__main__":

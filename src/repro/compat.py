@@ -5,6 +5,23 @@ releases (< 0.6) only ship ``jax.experimental.shard_map.shard_map`` with
 ``check_rep`` instead of ``check_vma`` and no ``axis_names`` parameter.
 Route every shard_map call through here so the rest of the codebase can
 use the modern signature unconditionally.
+
+Re-probed 2026-08 against the pinned toolchain (jax 0.4.37): all three
+shims are still load-bearing —
+
+* ``jax.shard_map`` does not exist (only the experimental module), so
+  the legacy branch of :func:`shard_map` is the one that runs;
+* ``jax.sharding.AbstractMesh`` only accepts the legacy single
+  shape-tuple signature, so :func:`abstract_mesh`'s ``TypeError``
+  fallback fires;
+* ``compiled.cost_analysis()`` returns a one-element **list** of dicts,
+  so :func:`cost_analysis` unwraps it.
+
+Each shim activates purely by feature detection (attribute presence /
+signature probe), never by version comparison — ``tests/test_compat.py``
+pins both branches of each one with monkeypatched fakes, so an upgrade
+that flips a branch shows up as a test delta, not a silent behavior
+change.
 """
 
 from __future__ import annotations

@@ -17,7 +17,7 @@ Fragment statistics from here feed ``benchmarks/vma_bench.py`` and the
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Set
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -141,11 +141,38 @@ class PagedKVAllocator:
         self._owner: Dict[int, str] = {}      # physical page -> sequence
         self._seq_pages: Dict[str, List[int]] = {}
         self._collisions: Set[str] = set()
+        # page ledger: every page fault / release crosses these counters,
+        # so allocated - freed == pages live right now (zero after drain)
+        self.pages_allocated = 0
+        self.pages_freed = 0
+        # opaque device-side page pool (e.g. {"k_pages": ..., "v_pages":
+        # ...}) bound by the engine when the arena is the physical
+        # backing store for decode; the allocator only hands it around
+        self._store: Any = None
+
+    # -- device store (the physical page tensors) --------------------------
+
+    def bind_store(self, store: Any) -> None:
+        """Attach the device page pool this allocator's tables index into."""
+        self._store = store
+
+    @property
+    def store(self) -> Any:
+        return self._store
+
+    def swap_store(self, store: Any) -> Any:
+        """Replace the device pool, returning the old one (donation-safe)."""
+        old, self._store = self._store, store
+        return old
 
     def add_sequence(self, seq_id: str) -> None:
         self.arena.create_region(seq_id, self.max_seq_pages * self.arena.page_bytes)
         self._tokens[seq_id] = 0
         self._seq_pages[seq_id] = []
+
+    def has_sequence(self, seq_id: str) -> bool:
+        """True while ``seq_id`` still owns pages (evicted-but-resident)."""
+        return seq_id in self._tokens
 
     def drop_sequence(self, seq_id: str) -> None:
         self.arena.destroy_region(seq_id)
@@ -157,6 +184,7 @@ class PagedKVAllocator:
         scan_heirs = seq_id in self._collisions
         self._collisions.discard(seq_id)
         dropped = self._seq_pages.pop(seq_id, ())
+        self.pages_freed += len(dropped)
         for page in dropped:
             if self._owner.get(page) != seq_id:
                 continue
@@ -190,6 +218,7 @@ class PagedKVAllocator:
             else:
                 self._owner[page] = seq_id
             known.append(page)
+            self.pages_allocated += 1
 
     def append_tokens(self, seq_id: str, n: int = 1) -> None:
         have = self._tokens[seq_id]
@@ -200,25 +229,81 @@ class PagedKVAllocator:
             self._track_new_pages(seq_id)
         self._tokens[seq_id] = have + n
 
+    def ensure_tokens(self, seq_id: str, n: int) -> None:
+        """Grow ``seq_id`` to at least ``n`` tokens (idempotent).
+
+        The paged decode path reserves the slot for this step's token
+        *before* launching the kernel; an eviction racing in between
+        re-admits the sequence at its request-derived length, so the
+        reservation must be replayable without double-counting.
+        """
+        have = self._tokens[seq_id]
+        if n > have:
+            self.append_tokens(seq_id, n - have)
+
+    def token_positions(
+        self, seq_id: str, start: int, count: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Physical ``(page_ids, offsets)`` of tokens [start, start+count).
+
+        The scatter targets for writing K/V rows into the device pool:
+        token ``i`` of the sequence lives at row ``offsets[i-start]`` of
+        physical page ``page_ids[i-start]``.  All addressed tokens must
+        already be allocated (``ensure_tokens``/``append_tokens`` first).
+        """
+        pages = self._seq_pages[seq_id]
+        idx = np.arange(start, start + count)
+        logical = idx // self.tokens_per_page
+        if count and logical[-1] >= len(pages):
+            raise IndexError(
+                f"{seq_id!r}: token {start + count - 1} beyond the "
+                f"{len(pages)} allocated pages"
+            )
+        page_ids = np.asarray([pages[i] for i in logical], np.int32)
+        offsets = np.asarray(idx % self.tokens_per_page, np.int32)
+        return page_ids, offsets
+
     def sequence(self, seq_id: str) -> SequencePages:
         return SequencePages(
             seq_id, self._tokens[seq_id], self.arena.physical_pages(seq_id)
         )
 
-    def page_table(self, max_pages: Optional[int] = None) -> np.ndarray:
-        seqs = sorted(self._tokens)
+    def page_table(
+        self,
+        max_pages: Optional[int] = None,
+        seq_ids: Optional[Sequence[Optional[str]]] = None,
+    ) -> np.ndarray:
+        """Dense int32 table of physical page ids, -1 padded.
+
+        Without ``seq_ids``: one row per live sequence in sorted order
+        (the diagnostics/report view).  With ``seq_ids``: one row per
+        entry in the given order — the decode view, where row i is slot
+        i's sequence and ``None`` entries (empty slots) render as all--1
+        rows the kernel masks out.
+        """
+        if seq_ids is None:
+            seq_ids = sorted(self._tokens)
         if max_pages is None:
             max_pages = max(
-                (len(self.arena.physical_pages(s)) for s in seqs), default=0
+                (len(self._seq_pages[s]) for s in seq_ids if s is not None),
+                default=0,
             )
-        table = np.full((len(seqs), max_pages), -1, dtype=np.int32)
-        for i, s in enumerate(seqs):
-            p = self.arena.physical_pages(s)
+        table = np.full((len(seq_ids), max_pages), -1, dtype=np.int32)
+        for i, s in enumerate(seq_ids):
+            if s is None:
+                continue
+            p = self._seq_pages[s]
             table[i, : len(p)] = p
         return table
 
-    def seq_lens(self) -> np.ndarray:
-        return np.asarray([self._tokens[s] for s in sorted(self._tokens)], np.int32)
+    def seq_lens(
+        self, seq_ids: Optional[Sequence[Optional[str]]] = None
+    ) -> np.ndarray:
+        if seq_ids is None:
+            seq_ids = sorted(self._tokens)
+        return np.asarray(
+            [0 if s is None else self._tokens[s] for s in seq_ids], np.int32
+        )
 
     def total_runs(self) -> int:
         return sum(self.arena.fragmentation_report().values())

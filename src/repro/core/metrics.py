@@ -545,6 +545,14 @@ class MetricsRegistry:
             ("evicted_total", "serving_evicted_total", "counter",
              "Live sequences evicted back to the admit queue "
              "(batch kills + arena poison)."),
+            ("resumed_total", "serving_resumed_total", "counter",
+             "Evicted sequences re-admitted without a prefill (paged "
+             "mode: the pages survived, resume is a page-table edit)."),
+            ("kv_pages_allocated_total", "serving_kv_pages_allocated_total",
+             "counter", "KV pages faulted in from the arena."),
+            ("kv_pages_freed_total", "serving_kv_pages_freed_total",
+             "counter",
+             "KV pages released (allocated - freed = pages live now)."),
         ]
         stats = [engine.serving_stats() for engine in servings]
         fams: List[_Family] = []
@@ -581,6 +589,31 @@ class MetricsRegistry:
             for mode in sorted(merged) or ("incremental",):
                 fam.add(merged.get(mode, 0), {"mode": mode})
             fams.append(fam)
+        # kv_mode info gauge: one sample per mode seen, value 1 — the
+        # paged-vs-dense A/B shows up as a label, not a magic number
+        fam = _Family(
+            self._n("serving_kv_mode"), "gauge",
+            "KV backing store in use (info gauge: 1 per active mode).",
+        )
+        modes = sorted({s.get("kv_mode", "dense") for s in stats}) or ["dense"]
+        for mode in modes:
+            fam.add(1, {"mode": mode})
+        fams.append(fam)
+        # sampler-family counters: every family always rendered, so a
+        # dashboard sees zero-valued greedy/topp series appear the
+        # moment the server starts, not when the first draw happens
+        fam = _Family(
+            self._n("serving_sampled_tokens_total"), "counter",
+            "Tokens drawn per sampler family "
+            "(greedy|temperature|topk|topp).",
+        )
+        for method in ("greedy", "temperature", "topk", "topp"):
+            fam.add(
+                sum(s.get("sampled_tokens_total", {}).get(method, 0)
+                    for s in stats),
+                {"method": method},
+            )
+        fams.append(fam)
         return fams
 
     # -------------------------------------------------------------- output

@@ -8,9 +8,15 @@ scalar-prefetched so the index map can issue one HBM→VMEM DMA per page,
 and *contiguity of the physical pages* (legacy vs modern allocator)
 decides whether those DMAs coalesce into long strides.
 
-Grid ``(B, K·G, max_pages)`` with per-page online softmax in VMEM scratch.
-Invalid pages (table entry < 0, or beyond the sequence length) are masked;
-their DMA reads page 0 (clamped index) and discards the result.
+Grid ``(B, max_pages)``: each step fetches one physical page and serves
+**every** query head of that sequence from it — the earlier
+``(B, K·G, max_pages)`` layout re-fetched the same page once per query
+head, multiplying both the DMA traffic on TPU and the grid-iteration
+overhead in interpret mode (the serving engine decodes through this
+kernel in interpret mode on CPU CI, so grid size is wall-clock there).
+Per-page online softmax lives in VMEM scratch shaped ``(K, G[, hd])``.
+Invalid pages (table entry < 0, or beyond the sequence length) are
+masked; their DMA reads page 0 (clamped index) and discards the result.
 """
 
 from __future__ import annotations
@@ -30,18 +36,19 @@ NEG_INF = -2.0e38
 def _kernel(
     table_ref,                 # (B, max_pages) int32 prefetched
     lens_ref,                  # (B,) int32 prefetched
-    q_ref,                     # (1, 1, hd)
-    k_ref,                     # (1, page, hd)  — one page of one kv head
+    q_ref,                     # (1, KG, hd)  — every head of one sequence
+    k_ref,                     # (1, page, K, hd)  — one physical page
     v_ref,
-    o_ref,                     # (1, 1, hd)
-    m_ref, l_ref, acc_ref,     # VMEM scratch
+    o_ref,                     # (1, KG, hd)
+    m_ref, l_ref, acc_ref,     # VMEM scratch: (K, G), (K, G), (K, G, hd)
     *,
     scale: float,
     page_size: int,
     max_pages: int,
+    num_kv: int,
 ):
     b = pl.program_id(0)
-    p = pl.program_id(2)
+    p = pl.program_id(1)
 
     @pl.when(p == 0)
     def _init():
@@ -55,29 +62,38 @@ def _kernel(
 
     @pl.when(valid_page)
     def _step():
-        q = q_ref[0, 0].astype(jnp.float32) * scale          # (hd,)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (page, hd)
-        s = jnp.sum(k * q[None, :], axis=1)                   # (page,)
+        kg, hd = q_ref.shape[1], q_ref.shape[2]
+        g = kg // num_kv
+        q = q_ref[0].astype(jnp.float32).reshape(num_kv, g, hd) * scale
+        k = k_ref[0].astype(jnp.float32)                      # (page, K, hd)
+        # s[k, g, p'] = q[k, g, :] · k[p', k, :] — batched over kv heads
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32,
+        )                                                     # (K, G, page)
         pos = p * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (page_size,), 0
         )
-        s = jnp.where(pos < seq_len, s, NEG_INF)
-        m_prev = m_ref[0]
-        m_new = jnp.maximum(m_prev, jnp.max(s))
-        pexp = jnp.exp(s - m_new)
+        s = jnp.where((pos < seq_len)[None, None, :], s, NEG_INF)
+        m_prev = m_ref[...]                                   # (K, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])                  # (K, G, page)
         corr = jnp.exp(m_prev - m_new)
-        l_ref[0] = corr * l_ref[0] + jnp.sum(pexp)
-        val = v_ref[0, :, 0, :].astype(jnp.float32)           # (page, hd)
-        acc_ref[...] = acc_ref[...] * corr + jnp.sum(
-            pexp[:, None] * val, axis=0, keepdims=True
-        )
-        m_ref[0] = m_new
+        l_ref[...] = corr * l_ref[...] + jnp.sum(pexp, axis=-1)
+        val = v_ref[0].astype(jnp.float32)                    # (page, K, hd)
+        pv = jax.lax.dot_general(
+            pexp, val, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32,
+        )                                                     # (K, G, hd)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
 
     @pl.when(p == max_pages - 1)
     def _finish():
-        o_ref[0, 0, :] = (
-            acc_ref[0] / jnp.maximum(l_ref[0], 1e-30)
-        ).astype(o_ref.dtype)
+        kg, hd = o_ref.shape[1], o_ref.shape[2]
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        ).reshape(kg, hd).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -95,29 +111,29 @@ def paged_attention_pallas(
 ) -> jnp.ndarray:
     B, KG, hd = q.shape
     num_pages, page_size, K, _ = k_pages.shape
-    G = KG // K
     max_pages = page_table.shape[1]
 
     kernel = functools.partial(
         _kernel, scale=scale, page_size=page_size, max_pages=max_pages,
+        num_kv=K,
     )
 
-    def _page_index(b, h, p, table, lens):
-        return (jnp.maximum(table[b, p], 0), 0, h // G, 0)
+    def _page_index(b, p, table, lens):
+        return (jnp.maximum(table[b, p], 0), 0, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, KG, max_pages),
+        grid=(B, max_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, hd), lambda b, h, p, t, l: (b, h, 0)),
-            pl.BlockSpec((1, page_size, 1, hd), _page_index),
-            pl.BlockSpec((1, page_size, 1, hd), _page_index),
+            pl.BlockSpec((1, KG, hd), lambda b, p, t, l: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, K, hd), _page_index),
+            pl.BlockSpec((1, page_size, K, hd), _page_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, p, t, l: (b, h, 0)),
+        out_specs=pl.BlockSpec((1, KG, hd), lambda b, p, t, l: (b, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((K, KG // K), jnp.float32),
+            pltpu.VMEM((K, KG // K), jnp.float32),
+            pltpu.VMEM((K, KG // K, hd), jnp.float32),
         ],
     )
     out = pl.pallas_call(

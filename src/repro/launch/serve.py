@@ -65,6 +65,25 @@ def main() -> None:
                     help="A/B: run the old rebatching baseline (every "
                          "admit re-prefills the whole batch) instead of "
                          "per-slot incremental prefill")
+    ap.add_argument("--kv-mode", default="auto",
+                    choices=("auto", "paged", "dense"),
+                    help="KV backing store: 'paged' routes decode through "
+                         "the Pallas paged-attention kernel over the "
+                         "arena's page pool; 'dense' keeps the per-slot "
+                         "(batch, max_seq) reservation; 'auto' picks "
+                         "paged when the model supports it")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the top K tokens (0 = no cap; "
+                         "needs --temperature > 0)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off; needs "
+                         "--temperature > 0)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed; request i draws with seed "
+                         "base+i, so the token streams are reproducible "
+                         "run to run (and across chaos evictions)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -81,7 +100,9 @@ def main() -> None:
         mm_legacy=args.legacy_arena, pool_watermark=args.pool_watermark,
         workers=args.workers, heartbeat_timeout_s=args.heartbeat_timeout,
         incremental=not args.no_incremental, quotas=quotas,
+        kv_mode=args.kv_mode,
     ))
+    print(f"[serve] kv_mode: {srv.engine.kv_mode}")
     if args.metrics_port is not None:
         endpoint = srv.serve_metrics(port=args.metrics_port)
         print(f"[serve] metrics: {endpoint.url}")
@@ -92,6 +113,8 @@ def main() -> None:
                                 (int(rng.integers(4, 12)),)).astype(np.int32),
             max_new_tokens=args.new_tokens, request_id=i,
             tenant=tenants[i % len(tenants)], deadline_s=args.deadline,
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed + i,
         )
         for i in range(args.requests)
     ]
@@ -105,6 +128,11 @@ def main() -> None:
               f"latency {r.latency_s*1e3:.0f}ms")
     print(f"[serve] arena ({'legacy' if args.legacy_arena else 'modern'}): "
           f"{json.dumps(srv.arena_report()['mm_stats'])}")
+    stats = srv.engine.serving_stats()
+    print(f"[serve] kv pages: allocated={stats['kv_pages_allocated_total']} "
+          f"freed={stats['kv_pages_freed_total']} "
+          f"resumed={stats['resumed_total']} "
+          f"sampled={json.dumps(stats['sampled_tokens_total'])}")
     if args.metrics_port is not None:
         pool = {k: v for k, v in srv.dump_metrics().items()
                 if k.startswith("seepp_pool")}

@@ -325,3 +325,131 @@ class TransformerLM:
         logits = self._unembed(params, h)
         new_state = {"cache_k": cache_k, "cache_v": cache_v, "pos": pos + 1}
         return new_state, logits
+
+    # ----------------------------------------------- serving (paged cache)
+    #
+    # Contract for ServerConfig.kv_mode="paged" — the KV cache lives in
+    # the arena's page pool instead of a dense (B, max_seq) reservation:
+    #   supports_paged_decode                   → bool attribute
+    #   init_paged_state(num_pages, page_size)  → device pool pytree
+    #   paged_prefill(params, tokens)           → (kv_rows, last_logits)
+    #   paged_write_prefill(pool, rows, page_ids, offsets) → pool'
+    #   paged_decode_step(params, pool, tokens, page_table, pos)
+    #                                           → (pool', logits)
+
+    @property
+    def supports_paged_decode(self) -> bool:
+        # the paged kernel has no logit-softcap or sliding-window support
+        return (not self.cfg.attn_logit_softcap) and all(
+            w == 0 for w in self.windows
+        )
+
+    def init_paged_state(self, num_pages: int, page_size: int,
+                         dtype=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+        return {
+            "k_pages": jnp.zeros((L, num_pages, page_size, K, hd), dtype),
+            "v_pages": jnp.zeros((L, num_pages, page_size, K, hd), dtype),
+        }
+
+    def paged_prefill(self, params, tokens):
+        """Prompt K/V rows (for page scatter) + logits at the last token.
+
+        ``prefill`` with ``max_seq == S`` pads nothing, so its cache
+        stacks are exactly the per-token rows the pages need.
+        """
+        state, logits = self.prefill(params, tokens, max_seq=tokens.shape[1])
+        return {"k": state["cache_k"], "v": state["cache_v"]}, logits
+
+    def paged_write_prefill(self, pool, rows, page_ids, offsets):
+        """Scatter one sequence's prefill rows into its allocated pages.
+
+        ``rows`` is ``paged_prefill``'s output for a batch of one;
+        token i lands at ``(page_ids[i], offsets[i])`` of every layer.
+        """
+        k = rows["k"][:, 0]                                   # (L, S, K, hd)
+        v = rows["v"][:, 0]
+        return {
+            "k_pages": pool["k_pages"].at[:, page_ids, offsets].set(
+                k.astype(pool["k_pages"].dtype)),
+            "v_pages": pool["v_pages"].at[:, page_ids, offsets].set(
+                v.astype(pool["v_pages"].dtype)),
+        }
+
+    def paged_decode_step(self, params, pool, tokens, page_table, pos):
+        """One decode step against the arena-backed page pool.
+
+        ``page_table``: (B, max_pages) int32, row i = slot i's physical
+        pages, -1 padded (empty slots are all--1 rows).  ``pos``: (B,)
+        int32 — the row index this step's K/V is written to; attention
+        covers ``pos + 1`` tokens.  Dead slots write nowhere: their page
+        id resolves to ``num_pages`` and the OOB scatter is dropped.
+        """
+        from ..kernels.paged_attention.ops import paged_attention
+
+        cfg = self.cfg
+        B = tokens.shape[0]
+        num_pages, page_size = pool["k_pages"].shape[1:3]
+        scale = cfg.query_scale or (1.0 / math.sqrt(cfg.hd))
+        h = take_embedding(params["embed"], tokens)
+        if cfg.embed_scale:
+            h = (h.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(h.dtype)
+        b_idx = jnp.arange(B)
+        logical = pos // page_size
+        write_page = page_table[b_idx, jnp.minimum(logical, page_table.shape[1] - 1)]
+        # dead / overflowing slots scatter out of bounds → dropped
+        write_page = jnp.where(
+            (write_page >= 0) & (logical < page_table.shape[1]),
+            write_page, num_pages,
+        )
+        offset = pos % page_size
+        lens = pos + 1
+
+        def body(carry, xs):
+            h, kp_stack, vp_stack, lyr = carry
+            p, base = xs
+            a = rms_norm(h, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norms)
+            q = jnp.einsum("bd,dhk->bhk", a, p["attn"]["wq"])
+            k = jnp.einsum("bd,dhk->bhk", a, p["attn"]["wk"])
+            v = jnp.einsum("bd,dhk->bhk", a, p["attn"]["wv"])
+            if cfg.qkv_bias:
+                q, k, v = q + p["attn"]["bq"], k + p["attn"]["bk"], v + p["attn"]["bv"]
+            if cfg.qk_norm:
+                q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+            q = rope(q[:, None], pos[:, None], base)[:, 0] if base is not None else q
+            k = rope(k[:, None], pos[:, None], base)[:, 0] if base is not None else k
+            kp = jax.lax.dynamic_index_in_dim(kp_stack, lyr, 0, keepdims=False)
+            vp = jax.lax.dynamic_index_in_dim(vp_stack, lyr, 0, keepdims=False)
+            kp = kp.at[write_page, offset].set(k.astype(kp.dtype))
+            vp = vp.at[write_page, offset].set(v.astype(vp.dtype))
+            kp_stack = jax.lax.dynamic_update_slice_in_dim(
+                kp_stack, kp[None], lyr, 0)
+            vp_stack = jax.lax.dynamic_update_slice_in_dim(
+                vp_stack, vp[None], lyr, 0)
+            o = paged_attention(q, kp, vp, page_table, lens, scale=scale)
+            o = o.reshape(B, -1).astype(h.dtype) @ p["attn"]["wo"]
+            if cfg.post_norms:
+                o = rms_norm(o, p["ln1_post"], cfg.norm_eps, plus_one=True)
+            h = h + o
+            m = rms_norm(h, p["ln2"], cfg.norm_eps, plus_one=cfg.post_norms)
+            if cfg.is_moe:
+                m, _ = moe_block(m[:, None], p["moe"], cfg, lossless=True)
+                m = m[:, 0]
+            else:
+                m = gated_mlp(m, p["mlp"]["wu"], p["mlp"].get("wg"), p["mlp"]["wd"],
+                              cfg.activation)
+            if cfg.post_norms:
+                m = rms_norm(m, p["ln2_post"], cfg.norm_eps, plus_one=True)
+            return (h + m, kp_stack, vp_stack, lyr + 1), None
+
+        (h, k_pages, v_pages, _), _ = jax.lax.scan(
+            body,
+            (h, pool["k_pages"], pool["v_pages"], jnp.asarray(0, jnp.int32)),
+            (params["layers"], jnp.asarray(self.rope_bases)),
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps, plus_one=cfg.post_norms)
+        logits = self._unembed(params, h)
+        return {"k_pages": k_pages, "v_pages": v_pages}, logits

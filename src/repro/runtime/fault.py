@@ -149,11 +149,17 @@ class FailureInjector:
     slow_at_t: Dict[float, Dict[str, float]] = field(default_factory=dict)
     #: virtual times at which the serving engine's decode batch dies
     #: mid-flight (node loss under the batch); every live sequence is
-    #: evicted back to the admit queue with its tokens intact
+    #: evicted back to the admit queue with its tokens intact.  In paged
+    #: kv_mode the kill evicts the *slot only* — the sequence's KV pages
+    #: survive, and re-admission resumes off them with a page-table edit
+    #: (zero re-prefill); dense mode re-prefills prompt+tokens
     kill_batch_at_t: List[float] = field(default_factory=list)
     #: virtual time → live-slot index whose KV-arena pages get poisoned;
     #: the engine's next step detects it via ``kv.validate()`` and
-    #: evicts/re-prefills the sequence instead of decoding garbage
+    #: evicts the sequence instead of decoding garbage.  Unlike a batch
+    #: kill, poison ALWAYS drops the pages and re-prefills on
+    #: re-admission, in either kv_mode — the pages are corrupt by
+    #: definition, so resuming off them would serve poisoned KV
     poison_arena_at_t: Dict[float, int] = field(default_factory=dict)
 
     def check(self, step: int) -> None:
@@ -189,11 +195,13 @@ class FailureInjector:
         """Schedule the serving-plane chaos plan onto a ``SimExecutor``.
 
         ``kill_batch_at_t`` calls ``engine.kill_batch()`` (every live
-        decode slot evicted, requests requeued with tokens intact) and
-        ``poison_arena_at_t`` poisons the i-th live sequence's KV pages
-        (``engine.poison_live(i)``).  Timers fire during the engine's
-        between-step ``executor.sleep``, so the plan lands at identical
-        virtual times on every replay of a seed.
+        decode slot evicted, requests requeued with tokens intact; in
+        paged kv_mode their pages survive and re-admission is a
+        page-table edit) and ``poison_arena_at_t`` poisons the i-th live
+        sequence's KV pages (``engine.poison_live(i)``; pages always
+        dropped and the victim re-prefilled).  Timers fire during the
+        engine's between-step ``executor.sleep``, so the plan lands at
+        identical virtual times on every replay of a seed.
         """
         for when in sorted(self.kill_batch_at_t):
             sim.call_at(when, engine.kill_batch)

@@ -16,7 +16,23 @@ per-tenant :class:`~repro.core.tasks.TenantQuota` slot caps, and the admit
 queue is ordered by (priority, deadline, arrival).  Every sequence's KV
 pages come from :class:`~repro.core.arena.PagedKVAllocator`; the engine
 polls ``kv.validate()`` each step, so a poisoned arena page evicts and
-re-prefills its sequence instead of decoding garbage.  Chaos plans
+re-prefills its sequence instead of decoding garbage.
+
+With ``ServerConfig.kv_mode="paged"`` (the ``"auto"`` default, for models
+that support it) the arena is the *physical* backing store: prefill
+scatters K/V rows into the sequence's allocated pages, each decode step
+appends one row at ``(page_table[slot, pos // page_size], pos %
+page_size)``, and attention runs through the Pallas paged-attention
+kernel reading ``kv.page_table()`` directly.  A batch kill then evicts
+the *slot*, not the pages — re-admission is a page-table edit (no
+re-prefill, no state copy) — while a poisoned sequence still drops its
+pages and re-prefills, because they are corrupt by definition.
+``kv_mode="dense"`` keeps the per-slot dense reservation for A/B.
+
+Token selection is a seeded sampler (:mod:`repro.runtime.sampling`):
+temperature / top-k / top-p knobs ride on each :class:`Request` and every
+draw is keyed by ``(request.seed, token index)``, so chaos replay — and
+evict-and-resume — reproduces token streams byte-for-byte.  Chaos plans
 (:class:`~repro.runtime.fault.FailureInjector` ``kill_batch_at_t`` /
 ``poison_arena_at_t``) land at virtual times under sim, which is what the
 seed-swept ``tests/test_serving_chaos.py`` replay suite drives.
@@ -51,6 +67,7 @@ from repro.core.sentry import BudgetExceeded
 from repro.core.sim import Executor, ThreadExecutor
 from repro.core.tasks import ServerlessScheduler, TaskSpec, TaskState, TenantQuota
 from repro.core.telemetry import TelemetrySink, resolve_sink
+from repro.runtime.sampling import sample_token
 
 __all__ = ["Request", "ServerConfig", "Server", "ServingEngine"]
 
@@ -66,6 +83,14 @@ class Request:
     #: seconds after arrival by which the request must be *admitted*;
     #: past it the request completes with an "expired" error instead
     deadline_s: Optional[float] = None
+    #: sampling knobs: ``temperature <= 0`` is greedy (argmax); otherwise
+    #: top_k > 0 / top_p < 1 truncate the distribution.  ``seed`` keys
+    #: the draw together with the token index, so the stream is replay-
+    #: deterministic even across evict-and-resume
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
     # filled by the engine:
     tokens: List[int] = field(default_factory=list)
     done: bool = False
@@ -107,6 +132,20 @@ class ServerConfig:
     #: Tenants absent from a provided dict get the scheduler's default
     #: ``TenantQuota()`` (4 slots), matching the task plane's semantics
     quotas: Optional[Dict[str, TenantQuota]] = None
+    #: where the KV cache physically lives.  "paged": the arena's page
+    #: pool backs decode and attention runs through the paged-attention
+    #: kernel (requires ``incremental`` and a model exposing the paged
+    #: interface — see ``models/transformer.py``).  "dense": the per-slot
+    #: (B, max_seq) reservation.  "auto": paged when the model supports
+    #: it, dense otherwise
+    kv_mode: str = "auto"
+    #: size of the KV page pool in pages.  None = a generous default
+    #: (4x the pages of a full (max_batch, max_seq) reservation, ample
+    #: headroom for evicted-but-resident sequences).  Deployments size
+    #: this to the expected *live-token* working set instead — that the
+    #: pool need not scale with max_seq is the point of paged KV, and
+    #: benchmarks/serve_bench.py's sweep sets it accordingly
+    kv_pool_pages: Optional[int] = None
 
 
 class ServingEngine:
@@ -166,26 +205,49 @@ class ServingEngine:
         #: grow it without limit (far above any test workload's length)
         self._trace: Deque[str] = deque(maxlen=cfg.trace_limit or None)
 
-        # decode state lives per-slot: one persistent batch-state whose
-        # slot i is overwritten (incremental mode) when request i admits
-        self._state = model.init_decode_state(B, cfg.max_seq)
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.kv_mode = self._resolve_kv_mode(model, cfg)
+        if self.kv_mode == "paged":
+            # the arena *is* the backing store: physical page tensors are
+            # bound to the allocator and every decode/prefill mutates
+            # them in place (donation), addressed by kv's page tables.
+            # No dense (B, max_seq) reservation exists in this mode.
+            if self.kv.pool_pages is None:
+                raise ValueError(
+                    "kv_mode='paged' needs a PagedKVAllocator with a "
+                    "bounded pool (pool_pages) to size the device pages"
+                )
+            self.kv.bind_store(model.init_paged_state(
+                self.kv.pool_pages, self.kv.tokens_per_page
+            ))
+            self._state = None
+            self._decode_paged = jax.jit(
+                model.paged_decode_step, donate_argnums=(1,)
+            )
+            self._prefill_rows = jax.jit(model.paged_prefill)
+            self._scatter_rows = jax.jit(
+                model.paged_write_prefill, donate_argnums=(0,)
+            )
+        else:
+            # decode state lives per-slot: one persistent batch-state
+            # whose slot i is overwritten (incremental mode) on admission
+            self._state = model.init_decode_state(B, cfg.max_seq)
+            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+            self._batch_axes = self._find_batch_axes(model, cfg.max_seq)
+            self._write_slot = jax.jit(
+                lambda state, sub, i: jax.tree_util.tree_map(
+                    lambda dst, src, ax: jax.lax.dynamic_update_slice_in_dim(
+                        dst, src.astype(dst.dtype), i, ax
+                    ),
+                    state, sub, self._batch_axes,
+                ),
+                donate_argnums=(0,),
+            )
         # jitted prefill: repeated same-shape admissions are compile-cache
         # hits (the eager path re-traced the whole scan per call); the
         # rebatching baseline still pays a retrace whenever its padded
         # batch shape changes — that churn is part of what it costs
         self._prefill = jax.jit(
             lambda p, toks: model.prefill(p, toks, max_seq=cfg.max_seq)
-        )
-        self._batch_axes = self._find_batch_axes(model, cfg.max_seq)
-        self._write_slot = jax.jit(
-            lambda state, sub, i: jax.tree_util.tree_map(
-                lambda dst, src, ax: jax.lax.dynamic_update_slice_in_dim(
-                    dst, src.astype(dst.dtype), i, ax
-                ),
-                state, sub, self._batch_axes,
-            ),
-            donate_argnums=(0,),
         )
 
         # counters (read by MetricsRegistry.register_serving at scrape)
@@ -201,8 +263,32 @@ class ServingEngine:
         self._batch_kills = 0
         self._arena_poisons = 0
         self._evictions = 0
+        self._resumes = 0
+        self._sampled = {"greedy": 0, "temperature": 0, "topk": 0, "topp": 0}
 
     # ------------------------------------------------------------- helpers
+
+    @staticmethod
+    def _resolve_kv_mode(model, cfg: ServerConfig) -> str:
+        supports = bool(getattr(model, "supports_paged_decode", False))
+        if cfg.kv_mode == "auto":
+            return "paged" if (supports and cfg.incremental) else "dense"
+        if cfg.kv_mode == "paged":
+            if not supports:
+                raise ValueError(
+                    f"kv_mode='paged' but {type(model).__name__} does not "
+                    "support paged decode (no paged interface, or it uses "
+                    "logit softcap / sliding windows)"
+                )
+            if not cfg.incremental:
+                raise ValueError(
+                    "kv_mode='paged' requires incremental=True (the "
+                    "rebatching baseline re-prefills dense batches)"
+                )
+            return "paged"
+        if cfg.kv_mode == "dense":
+            return "dense"
+        raise ValueError(f"unknown kv_mode {cfg.kv_mode!r}")
 
     @staticmethod
     def _build_kv(model, cfg: ServerConfig) -> PagedKVAllocator:
@@ -218,7 +304,7 @@ class ServingEngine:
             mm_cfg, tokens_per_page=cfg.tokens_per_page,
             token_bytes=max(token_bytes, 1),
             max_seq_pages=seq_pages,
-            pool_pages=4 * cfg.max_batch * seq_pages,
+            pool_pages=cfg.kv_pool_pages or 4 * cfg.max_batch * seq_pages,
         )
 
     def _find_batch_axes(self, model, max_seq: int):
@@ -380,15 +466,21 @@ class ServingEngine:
             return heap[0]
         return None
 
-    def _admit_locked(self) -> List[Tuple[int, Request]]:
-        """Fill free slots from the queues; returns [(slot, request)] admitted.
+    def _admit_locked(self) -> List[Tuple[int, Request, bool]]:
+        """Fill free slots from the queues; returns [(slot, request,
+        needs_prefill)] admitted.
 
         Each round admits the globally-best head — (priority, deadline,
         arrival) order — among tenants below their slot cap.  Capped
         tenants' backlogs are left untouched (no heap churn), and their
         heads still expire on deadline.
+
+        In paged mode a batch-killed request's pages survive eviction, so
+        its re-admission is a *resume*: the sequence is still resident in
+        the arena and needs no prefill — decode continues off the
+        existing pages (the eviction-is-a-table-edit property).
         """
-        admitted: List[Tuple[int, Request]] = []
+        admitted: List[Tuple[int, Request, bool]] = []
         active = self._active_by_tenant_locked()
         now = self._exec.now()
         # expire due requests every sweep, even with the batch full — a
@@ -423,12 +515,18 @@ class ServingEngine:
                 )
             active[r.tenant] = active.get(r.tenant, 0) + 1
             seq_id = self._seq_id(r)
-            self.kv.add_sequence(seq_id)
-            self.kv.append_tokens(seq_id, len(r.prompt) + len(r.tokens))
+            resume = self.kv_mode == "paged" and self.kv.has_sequence(seq_id)
+            if resume:
+                # pages survived the eviction: re-entry is a table edit
+                self.kv.ensure_tokens(seq_id, len(r.prompt) + len(r.tokens))
+                self._resumes += 1
+            else:
+                self.kv.add_sequence(seq_id)
+                self.kv.append_tokens(seq_id, len(r.prompt) + len(r.tokens))
             self.admission.slot_acquired(r.tenant)
             self._admitted[r.tenant] = self._admitted.get(r.tenant, 0) + 1
-            self._note("admit", r, f"slot={slot}")
-            admitted.append((slot, r))
+            self._note("admit", r, f"slot={slot}" + (" resume" if resume else ""))
+            admitted.append((slot, r, not resume))
         return admitted
 
     # ------------------------------------------------------------- prefill
@@ -479,6 +577,36 @@ class ServingEngine:
             self._state, sub, jnp.asarray(slot, jnp.int32)
         )
 
+    def _prefill_slot_paged(self, slot: int, r: Request) -> None:
+        """Prefill this request's K/V rows straight into its arena pages.
+
+        The scatter targets come from ``kv.token_positions`` under the
+        lock (page allocation happened at admission); the model math runs
+        outside it.  Same ownership re-checks as the dense path — a
+        chaos eviction mid-prefill discards the work.
+        """
+        with self._lock:
+            if self._slots[slot] is not r:
+                return                     # evicted before the prefill ran
+            seq = self._sequence_tokens(r)
+            page_ids, offsets = self.kv.token_positions(
+                self._seq_id(r), 0, seq.size
+            )
+        rows, _ = self._prefill_rows(self.params, jnp.asarray(seq[None, :]))
+        with self._lock:
+            if self._slots[slot] is not r:
+                return                     # evicted mid-prefill: discard
+            self._prefills["incremental"] += 1
+            self._prefill_tokens["incremental"] += int(seq.size)
+            self._prefills_by_request[r.request_id] = (
+                self._prefills_by_request.get(r.request_id, 0) + 1
+            )
+            self._note("prefill", r, f"slot={slot} tokens={seq.size}")
+            self.kv.swap_store(self._scatter_rows(
+                self.kv.store, rows,
+                jnp.asarray(page_ids), jnp.asarray(offsets),
+            ))
+
     def _prefill_full(self) -> None:
         """Rebatching baseline: re-prefill every live slot (the old loop)."""
         with self._lock:
@@ -522,25 +650,61 @@ class ServingEngine:
             admitted = self._admit_locked()
         if admitted:
             if self.cfg.incremental:
-                for slot, r in admitted:
-                    self._prefill_slot(slot, r)
+                prefill = (
+                    self._prefill_slot_paged if self.kv_mode == "paged"
+                    else self._prefill_slot
+                )
+                for slot, r, need in admitted:
+                    if need:
+                        prefill(slot, r)
             else:
                 self._prefill_full()
             # sample arena occupancy while sequences are live (lazy
             # host-VMA tracking only updates on poll)
             self.kv.arena.mm.host_vma_count()
+        paged = self.kv_mode == "paged"
         with self._lock:
             live = [(i, r) for i, r in enumerate(self._slots) if r is not None]
+            if live and paged:
+                # reserve this step's token row per live slot (idempotent
+                # — a mid-step eviction + resume replays the same count),
+                # then snapshot the slot-ordered page table.  Its width is
+                # bucketed to the next power of two of the widest live
+                # sequence, so jit compiles O(log max_pages) variants and
+                # the kernel grid tracks *live* tokens, not max_seq.
+                pos = np.zeros((self.cfg.max_batch,), np.int32)
+                for i, r in live:
+                    pos[i] = len(r.prompt) + len(r.tokens)
+                    self.kv.ensure_tokens(self._seq_id(r), int(pos[i]) + 1)
+                seq_ids = [
+                    self._seq_id(r) if r is not None else None
+                    for r in self._slots
+                ]
+                table = self.kv.page_table(seq_ids=seq_ids)
+                w = max(table.shape[1], 1)
+                bucket = 1 << (w - 1).bit_length()
+                if bucket > table.shape[1]:
+                    table = np.pad(
+                        table, ((0, 0), (0, bucket - table.shape[1])),
+                        constant_values=-1,
+                    )
         if not live:
             return 0
 
         last = np.zeros((self.cfg.max_batch,), np.int32)
         for i, r in live:
             last[i] = r.tokens[-1] if r.tokens else int(r.prompt[-1])
-        self._state, logits = self._decode(
-            self.params, self._state, jnp.asarray(last)
-        )
-        next_ids = np.asarray(jnp.argmax(logits, axis=-1))
+        if paged:
+            store, logits = self._decode_paged(
+                self.params, self.kv.store, jnp.asarray(last),
+                jnp.asarray(table), jnp.asarray(pos),
+            )
+            self.kv.swap_store(store)
+        else:
+            self._state, logits = self._decode(
+                self.params, self._state, jnp.asarray(last)
+            )
+        logits_np = np.asarray(logits)
 
         retiring: List[Request] = []
         with self._lock:
@@ -548,8 +712,20 @@ class ServingEngine:
             for i, r in live:
                 if self._slots[i] is not r:
                     continue               # evicted mid-step by chaos
-                r.tokens.append(int(next_ids[i]))
-                self.kv.append_tokens(self._seq_id(r), 1)
+                tok, method = sample_token(
+                    logits_np[i],
+                    temperature=r.temperature, top_k=r.top_k,
+                    top_p=r.top_p, seed=r.seed, index=len(r.tokens),
+                )
+                self._sampled[method] += 1
+                r.tokens.append(tok)
+                if paged:
+                    # the row was reserved pre-step; make the count stick
+                    self.kv.ensure_tokens(
+                        self._seq_id(r), len(r.prompt) + len(r.tokens)
+                    )
+                else:
+                    self.kv.append_tokens(self._seq_id(r), 1)
                 self._tokens_n[r.tenant] = self._tokens_n.get(r.tenant, 0) + 1
                 if len(r.tokens) >= r.max_new_tokens:
                     # release the KV pages and the slot *before* any user
@@ -698,14 +874,19 @@ class ServingEngine:
 
     # --------------------------------------------------------------- chaos
 
-    def _requeue_locked(self, slot: int, r: Request, why: str) -> None:
+    def _requeue_locked(self, slot: int, r: Request, why: str,
+                        *, drop_pages: bool = True) -> None:
         """Evict a live sequence back to the admit queue (chaos paths).
 
-        Generated tokens survive: re-admission prefills prompt+tokens, so
-        the request resumes where it left off — evictions can never lose
-        or double a completion.
+        Generated tokens survive, so the request resumes where it left
+        off — evictions can never lose or double a completion.  With
+        ``drop_pages=False`` (paged-mode batch kill) the sequence stays
+        resident in the arena and re-admission is a pure page-table edit;
+        otherwise the pages are released and re-admission prefills
+        prompt+tokens from scratch.
         """
-        self.kv.drop_sequence(self._seq_id(r))
+        if drop_pages:
+            self.kv.drop_sequence(self._seq_id(r))
         self.admission.slot_released(r.tenant)
         self._slots[slot] = None
         self._evictions += 1
@@ -716,13 +897,19 @@ class ServingEngine:
     def kill_batch(self) -> int:
         """Chaos: the decode batch dies mid-flight (node loss under it).
 
-        Every live slot's KV pages are dropped and its request requeued
-        with its tokens intact; returns the number of evicted sequences.
+        Every live slot's request is requeued with its tokens intact;
+        returns the number of evicted sequences.  Dense mode drops the
+        KV pages (the state dies with the batch); paged mode keeps them
+        — the pages live in the arena, not the batch, so recovery is a
+        page-table edit and the re-admitted sequence decodes on without
+        a prefill.
         """
         with self._lock:
             live = [(i, r) for i, r in enumerate(self._slots) if r is not None]
             for i, r in live:
-                self._requeue_locked(i, r, "kill")
+                self._requeue_locked(
+                    i, r, "kill", drop_pages=self.kv_mode != "paged"
+                )
             self._batch_kills += 1
             self._note("kill_batch", None, f"evicted={len(live)}")
         self.telemetry.count("serving.batch_kill")
@@ -758,9 +945,26 @@ class ServingEngine:
             bad = self.kv.validate()
             if not bad:
                 return
+            slotted = {
+                self._seq_id(r) for r in self._slots if r is not None
+            }
             for i, r in enumerate(self._slots):
                 if r is not None and self._seq_id(r) in bad:
+                    # poisoned pages are corrupt by definition: always
+                    # dropped (even in paged mode), so re-admission
+                    # re-prefills from the request's token history
                     self._requeue_locked(i, r, "poison")
+            for seq_id in bad:
+                if seq_id not in slotted and self.kv.has_sequence(seq_id):
+                    # paged mode: an evicted-but-resident sequence (pages
+                    # kept across a batch kill) got poisoned while
+                    # queued — release the pages now so its re-admission
+                    # falls back to a clean prefill instead of resuming
+                    # off corrupt rows
+                    self.kv.drop_sequence(seq_id)
+                    self._trace.append(
+                        f"{self._exec.now():.6f} drop_resident seq={seq_id}"
+                    )
         self._exec.notify()
 
     # --------------------------------------------------------------- stats
@@ -801,6 +1005,11 @@ class ServingEngine:
                 "batch_kill_total": self._batch_kills,
                 "arena_poison_total": self._arena_poisons,
                 "evicted_total": self._evictions,
+                "kv_mode": self.kv_mode,
+                "resumed_total": self._resumes,
+                "sampled_tokens_total": dict(self._sampled),
+                "kv_pages_allocated_total": self.kv.pages_allocated,
+                "kv_pages_freed_total": self.kv.pages_freed,
             }
 
     def prefill_counts(self) -> Dict[int, int]:

@@ -25,6 +25,7 @@ __all__ = [
     "WatchedScheduler",
     "check_drain_invariants",
     "check_serving_invariants",
+    "check_serving_replay",
 ]
 
 
@@ -193,7 +194,40 @@ def check_serving_invariants(engine, requests, *, ctx=""):
     assert engine.kv.validate() == [], (
         f"arena still corrupt after drain{tag}: {engine.kv.validate()}"
     )
+    # page ledger: every faulted page was released — in paged mode a
+    # leak here is real device memory the pool can never hand out again
+    assert engine.kv.pages_allocated == engine.kv.pages_freed, (
+        f"KV page ledger out of balance{tag}: "
+        f"allocated={engine.kv.pages_allocated} "
+        f"freed={engine.kv.pages_freed}"
+    )
 
     # -- slot ledger -----------------------------------------------------
     balance = engine.admission.slot_balance()
     assert balance == {}, f"slot ledger out of balance{tag}: {balance}"
+
+
+def check_serving_replay(first, second, *, ctx=""):
+    """Two ``chaos_run``-style results must be byte-identical.
+
+    ``first``/``second`` are ``(trace, results, ...)`` tuples where
+    ``results`` is per-request ``(request_id, tokens, error, latency)``.
+    The token streams are compared per request — a sampled stream that
+    diverges across evict-and-resume fails here by request id, not as an
+    opaque trace diff.
+    """
+    tag = f" [{ctx}]" if ctx else ""
+    for (rid, toks_a, err_a, _), (rid_b, toks_b, err_b, _) in zip(
+        first[1], second[1]
+    ):
+        assert rid == rid_b, f"result order diverged on replay{tag}"
+        assert toks_a == toks_b, (
+            f"token stream diverged on replay{tag}: req={rid} "
+            f"{toks_a} vs {toks_b}"
+        )
+        assert err_a == err_b, (
+            f"error diverged on replay{tag}: req={rid} "
+            f"{err_a!r} vs {err_b!r}"
+        )
+    assert first[0] == second[0], f"engine trace diverged on replay{tag}"
+    assert first[1] == second[1], f"request results diverged on replay{tag}"

@@ -84,15 +84,68 @@ class ToyLM:
         logits = h @ params["out"]
         return {"h": h, "pos": state["pos"] + 1}, logits
 
+    # -------------------------------------------- paged-decode interface
+    #
+    # The "KV cache" of a recurrent LM is its hidden state, so the page
+    # pool stores one h-row per consumed token: row i of a sequence is
+    # the state *after* token i.  Decode reads row pos-1, advances, and
+    # writes row pos — integer math, so paged and dense decode agree
+    # bit-for-bit, which turns every dense-vs-paged comparison in the
+    # suite into an exact parity test.
+
+    supports_paged_decode = True
+
+    def init_paged_state(self, num_pages: int, page_size: int, dtype=None):
+        return {
+            "h_pages": jnp.zeros((num_pages, page_size, self.d), jnp.int32),
+        }
+
+    def paged_prefill(self, params, tokens):
+        B, S = tokens.shape
+
+        def body(h, toks):
+            h = self._advance(params, h, toks)
+            return h, h
+
+        h, hs = jax.lax.scan(body, jnp.zeros((B, self.d), jnp.int32),
+                             jnp.swapaxes(tokens, 0, 1))
+        logits = h @ params["out"]
+        return {"h": jnp.swapaxes(hs, 0, 1)}, logits          # (B, S, d)
+
+    def paged_write_prefill(self, pool, rows, page_ids, offsets):
+        return {
+            "h_pages": pool["h_pages"].at[page_ids, offsets].set(rows["h"][0]),
+        }
+
+    def paged_decode_step(self, params, pool, tokens, page_table, pos):
+        num_pages, page = pool["h_pages"].shape[:2]
+        width = page_table.shape[1]
+        b = jnp.arange(tokens.shape[0])
+        prev = jnp.maximum(pos - 1, 0)
+        prev_page = jnp.maximum(
+            page_table[b, jnp.minimum(prev // page, width - 1)], 0)
+        h = self._advance(params, pool["h_pages"][prev_page, prev % page],
+                          tokens)
+        logical = pos // page
+        write_page = page_table[b, jnp.minimum(logical, width - 1)]
+        # dead slots (all--1 rows) scatter out of bounds → dropped
+        write_page = jnp.where(
+            (write_page >= 0) & (logical < width), write_page, num_pages)
+        pages = pool["h_pages"].at[write_page, pos % page].set(h)
+        logits = h @ params["out"]
+        return {"h_pages": pages}, logits
+
 
 def make_engine(seed=None, *, max_batch=3, max_seq=48, step_time_s=0.01,
-                quotas=None, incremental=True, executor=None, **kwargs):
+                quotas=None, incremental=True, executor=None,
+                kv_mode="auto", **kwargs):
     """A ServingEngine over ToyLM on a seeded SimExecutor (or ``executor``)."""
     model = ToyLM()
     params = model.init()
     cfg = ServerConfig(
         max_batch=max_batch, max_seq=max_seq, tokens_per_page=4,
         step_time_s=step_time_s, quotas=quotas, incremental=incremental,
+        kv_mode=kv_mode,
     )
     executor = executor or SimExecutor(seed=seed or 0)
     engine = ServingEngine(
@@ -102,14 +155,21 @@ def make_engine(seed=None, *, max_batch=3, max_seq=48, step_time_s=0.01,
 
 
 def make_requests(rng, n, *, tenants=("alice", "bob", "carol"),
-                  vocab=31, deadline_prob=0.15):
-    """n deterministic requests derived from ``rng`` (a random.Random)."""
+                  vocab=31, deadline_prob=0.15, sample_prob=0.0):
+    """n deterministic requests derived from ``rng`` (a random.Random).
+
+    With ``sample_prob`` > 0 a fraction of requests carry non-greedy
+    sampling knobs (temperature scaled to ToyLM's ~1e8 logit range) and
+    a per-request seed, so replay determinism is exercised across every
+    sampler family, not just argmax.
+    """
     reqs = []
     for i in range(n):
         prompt = np.asarray(
             [rng.randrange(vocab) for _ in range(rng.randint(2, 6))],
             np.int32,
         )
+        sampled = rng.random() < sample_prob
         reqs.append(Request(
             prompt=prompt,
             max_new_tokens=rng.randint(2, 6),
@@ -120,5 +180,9 @@ def make_requests(rng, n, *, tenants=("alice", "bob", "carol"),
                 round(rng.uniform(0.05, 0.3), 3)
                 if rng.random() < deadline_prob else None
             ),
+            temperature=rng.choice((1e8, 3e8, 6e8)) if sampled else 0.0,
+            top_k=rng.choice((0, 4, 8)) if sampled else 0,
+            top_p=rng.choice((1.0, 1.0, 0.85)) if sampled else 1.0,
+            seed=rng.randrange(1 << 31),
         ))
     return reqs

@@ -67,6 +67,99 @@ def test_paged_attention_sweep(B, K, G, hd, page, P, MP, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+def _paged_brute_force(q, kp, vp, table, lens, scale):
+    """Token-at-a-time numpy oracle for paged attention (no paging math
+    shared with ref.py: tokens are gathered one by one through the
+    table, so a page-indexing bug in ref.py cannot cancel out here)."""
+    q, kp, vp = (np.asarray(a, np.float64) for a in (q, kp, vp))
+    B, KG, hd = q.shape
+    _, page, K, _ = kp.shape
+    G = KG // K
+    out = np.zeros((B, KG, hd))
+    for b in range(B):
+        n = int(lens[b])
+        if n == 0:
+            continue
+        ks = np.stack([kp[table[b, t // page], t % page] for t in range(n)])
+        vs = np.stack([vp[table[b, t // page], t % page] for t in range(n)])
+        for h in range(KG):
+            s = ks[:, h // G] @ (q[b, h] * scale)
+            w = np.exp(s - s.max())
+            w /= w.sum()
+            out[b, h] = w @ vs[:, h // G]
+    return out
+
+
+def _paged_case(B, K, G, hd, page, P, lens):
+    """Random q/pages + a permuted -1-padded table covering ``lens``."""
+    lens = np.asarray(lens, np.int32)
+    q = jnp.asarray(RNG.standard_normal((B, K * G, hd)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((P, page, K, hd)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((P, page, K, hd)), jnp.float32)
+    MP = max(-(-int(n) // page) for n in lens)
+    table = np.full((B, MP), -1, np.int32)
+    pool = list(RNG.permutation(P))
+    for b in range(B):
+        for i in range(-(-int(lens[b]) // page)):
+            table[b, i] = pool.pop()
+    return q, kp, vp, table, lens
+
+
+def test_paged_attention_ref_matches_brute_force():
+    """ref.py itself against an independent token-at-a-time oracle —
+    ragged lens, page_size not dividing seq_len, -1-padded rows."""
+    q, kp, vp, table, lens = _paged_case(
+        4, 2, 3, 32, page=8, P=32, lens=[1, 7, 24, 37])
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(table),
+                              jnp.asarray(lens), scale=32 ** -0.5)
+    brute = _paged_brute_force(q, kp, vp, table, lens, 32 ** -0.5)
+    np.testing.assert_allclose(np.asarray(ref, np.float32), brute,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_paged_attention_page_not_dividing_seq_len():
+    """Kernel vs ref vs brute force when sequences end mid-page (the
+    tail page is partially valid) and when they end exactly on a page
+    boundary."""
+    q, kp, vp, table, lens = _paged_case(
+        4, 1, 4, 16, page=16, P=16, lens=[1, 17, 48, 33])
+    out = paged_attention(q, kp, vp, table, lens, scale=0.25,
+                          interpret=True)
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(table),
+                              jnp.asarray(lens), scale=0.25)
+    brute = _paged_brute_force(q, kp, vp, table, lens, 0.25)
+    np.testing.assert_allclose(np.asarray(out, np.float32), brute,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ref, np.float32), brute,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_paged_attention_dead_rows_and_padded_tables():
+    """An all--1 row (a dead decode slot, len 0) must come out exactly
+    zero — not NaN — and live rows must be unaffected by how much -1
+    padding trails their pages (the serving engine pads table width to
+    power-of-two buckets)."""
+    q, kp, vp, table, lens = _paged_case(
+        3, 2, 2, 16, page=8, P=16, lens=[11, 5, 16])
+    lens = lens.copy()
+    lens[1] = 0
+    table[1, :] = -1                       # dead slot: no pages at all
+    wide = np.pad(table, ((0, 0), (0, 5)), constant_values=-1)
+    out = paged_attention(q, kp, vp, wide, lens, scale=0.25,
+                          interpret=True)
+    out = np.asarray(out, np.float32)
+    assert np.all(np.isfinite(out))
+    assert np.all(out[1] == 0.0)
+    brute = _paged_brute_force(q, kp, vp, table, lens, 0.25)
+    np.testing.assert_allclose(out[[0, 2]], brute[[0, 2]],
+                               rtol=1e-4, atol=1e-4)
+    narrow = paged_attention(q, kp, vp, table, lens, scale=0.25,
+                             interpret=True)
+    np.testing.assert_allclose(out[[0, 2]],
+                               np.asarray(narrow, np.float32)[[0, 2]],
+                               rtol=0, atol=0)
+
+
 @pytest.mark.parametrize("B,T,H,hd", [(1, 32, 1, 8), (2, 128, 3, 16)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_wkv6_sweep(B, T, H, hd, dtype):

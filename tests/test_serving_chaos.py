@@ -28,11 +28,14 @@ import os
 import random
 from collections import Counter
 
-from helpers.invariants import check_serving_invariants
+import pytest
+from helpers.invariants import check_serving_invariants, check_serving_replay
 from helpers.serving import make_engine, make_requests
 
 from repro.core import TenantQuota
 from repro.runtime.fault import FailureInjector
+
+KV_MODES = ("paged", "dense")
 
 CHAOS_SERVE_SEED_START = int(os.environ.get("CHAOS_SERVE_SEED_START", "0"))
 CHAOS_SERVE_SEED_COUNT = int(os.environ.get("CHAOS_SERVE_SEED_COUNT", "60"))
@@ -47,18 +50,21 @@ QUOTAS = {
 }
 
 
-def chaos_run(seed):
+def chaos_run(seed, kv_mode="paged"):
     """One seeded serving-chaos scenario; returns (trace, results, counters).
 
-    Everything — workload shape, fault plan, deadlines — derives from
-    ``seed``, so two calls with the same seed must produce byte-identical
-    traces and token streams.
+    Everything — workload shape, fault plan, deadlines, per-request
+    sampling knobs — derives from ``seed``, so two calls with the same
+    seed must produce byte-identical traces and token streams, in either
+    ``kv_mode`` (half the requests sample with temperature/top-k/top-p,
+    so replay determinism covers the seeded sampler, not just argmax).
     """
     rng = random.Random(seed * 9127 + 5)
     engine, sim = make_engine(
         seed=seed, max_batch=3, max_seq=48, step_time_s=0.01, quotas=QUOTAS,
+        kv_mode=kv_mode,
     )
-    reqs = make_requests(rng, 10, deadline_prob=0.15)
+    reqs = make_requests(rng, 10, deadline_prob=0.15, sample_prob=0.5)
 
     # -- fault plan (batch kills + arena poison at virtual times) -------
     injector = FailureInjector()
@@ -85,6 +91,11 @@ def chaos_run(seed):
         "batch_kills": stats["batch_kill_total"],
         "poisons": stats["arena_poison_total"],
         "evictions": stats["evicted_total"],
+        "resumes": stats["resumed_total"],
+        "sampled": sum(
+            n for m, n in stats["sampled_tokens_total"].items()
+            if m != "greedy"
+        ),
         "expired": sum(stats["expired_total"].values()),
         "completed": sum(stats["completed_total"].values()),
         "clean": sum(1 for r in reqs if r.error is None),
@@ -95,20 +106,22 @@ def chaos_run(seed):
 # ------------------------------------------------------------ the sweep
 
 
-def test_serving_chaos_sweep_holds_all_invariants():
+@pytest.mark.parametrize("kv_mode", KV_MODES)
+def test_serving_chaos_sweep_holds_all_invariants(kv_mode):
     """The headline property: every seed in the window drains with zero
-    KV-page/slot leaks and complete, un-doubled request accounting — and
-    the sweep as a whole actually exercised the chaos paths."""
+    KV-page/slot leaks and complete, un-doubled request accounting — in
+    both KV modes — and the sweep as a whole actually exercised the
+    chaos paths."""
     totals = Counter()
     for seed in SEEDS:
         try:
-            _, _, counters = chaos_run(seed)
+            _, _, counters = chaos_run(seed, kv_mode)
         except AssertionError:
             raise
         except BaseException as e:     # SimDeadlock, timeout, ...
             raise AssertionError(
-                f"serving chaos scenario crashed [seed={seed}]: "
-                f"{type(e).__name__}: {e}"
+                f"serving chaos scenario crashed [seed={seed} "
+                f"kv_mode={kv_mode}]: {type(e).__name__}: {e}"
             ) from e
         totals.update(counters)
 
@@ -120,23 +133,30 @@ def test_serving_chaos_sweep_holds_all_invariants():
         assert totals["evictions"] > 0, totals
         assert totals["expired"] > 0, totals
         assert totals["clean"] > 0, totals
+        assert totals["sampled"] > 0, totals
+        if kv_mode == "paged":
+            # batch kills must have exercised the resume path (pages
+            # kept, no re-prefill); dense mode by construction cannot
+            assert totals["resumes"] > 0, totals
+        else:
+            assert totals["resumes"] == 0, totals
 
 
-def test_serving_chaos_seeds_replay_byte_identically():
-    """Any serving schedule — kills, poison, evictions and all — is a pure
-    function of its seed: re-running a seed reproduces the engine trace
-    and every request's token stream byte for byte."""
+@pytest.mark.parametrize("kv_mode", KV_MODES)
+def test_serving_chaos_seeds_replay_byte_identically(kv_mode):
+    """Any serving schedule — kills, poison, evictions, sampled tokens
+    and all — is a pure function of its seed: re-running a seed
+    reproduces the engine trace and every request's token stream byte
+    for byte (in paged mode that includes resuming sampled sequences
+    off their surviving pages)."""
     replayed = 0
     for seed in SEEDS:
         if seed % REPLAY_STRIDE:
             continue
-        first = chaos_run(seed)
-        second = chaos_run(seed)
-        assert first[0] == second[0], (
-            f"engine trace diverged on replay [seed={seed}]"
-        )
-        assert first[1] == second[1], (
-            f"request results diverged on replay [seed={seed}]"
+        first = chaos_run(seed, kv_mode)
+        second = chaos_run(seed, kv_mode)
+        check_serving_replay(
+            first, second, ctx=f"seed={seed} kv_mode={kv_mode}"
         )
         replayed += 1
     # a single-seed replay window (CHAOS_SERVE_SEED_COUNT=1 on a seed not
@@ -147,17 +167,21 @@ def test_serving_chaos_seeds_replay_byte_identically():
 # -------------------------------------------------- deterministic cases
 
 
-def test_batch_kill_mid_flight_loses_no_tokens():
+@pytest.mark.parametrize("kv_mode", KV_MODES)
+def test_batch_kill_mid_flight_loses_no_tokens(kv_mode):
     """A decode batch killed mid-flight evicts every live sequence; each
     request is re-admitted with its generated prefix intact and finishes
-    with exactly max_new_tokens — and the re-prefill reproduces the same
-    stream the un-killed run produces (recurrent state is rebuilt, not
-    guessed)."""
+    with exactly max_new_tokens — producing the same stream the un-killed
+    run produces.  Dense mode re-prefills to rebuild the state; paged
+    mode must NOT prefill again (the pages survived — recovery is a
+    page-table edit), which is the eviction-is-free regression gate."""
 
     def run(kill):
-        engine, sim = make_engine(seed=3, max_batch=2, step_time_s=0.01)
+        engine, sim = make_engine(
+            seed=3, max_batch=2, step_time_s=0.01, kv_mode=kv_mode,
+        )
         rng = random.Random(3)
-        reqs = make_requests(rng, 4, deadline_prob=0.0)
+        reqs = make_requests(rng, 4, deadline_prob=0.0, sample_prob=0.5)
         for r in reqs:
             r.max_new_tokens = 8
         if kill:
@@ -165,15 +189,32 @@ def test_batch_kill_mid_flight_loses_no_tokens():
         for r in reqs:
             engine.submit(r)
         engine.drain(timeout=60)
-        check_serving_invariants(engine, reqs, ctx=f"kill={kill}")
+        check_serving_invariants(engine, reqs, ctx=f"{kv_mode} kill={kill}")
         return engine, {r.request_id: tuple(r.tokens) for r in reqs}
 
     killed_engine, killed_tokens = run(kill=True)
-    _, clean_tokens = run(kill=False)
-    assert killed_engine.serving_stats()["batch_kill_total"] == 1
-    assert killed_engine.serving_stats()["evicted_total"] >= 1
+    clean_engine, clean_tokens = run(kill=False)
+    stats = killed_engine.serving_stats()
+    assert stats["batch_kill_total"] == 1
+    assert stats["evicted_total"] >= 1
     assert any(" evict:kill " in ln for ln in killed_engine.trace())
     assert killed_tokens == clean_tokens
+    clean_prefills = clean_engine.serving_stats()[
+        "prefill_sequences_total"]["incremental"]
+    if kv_mode == "paged":
+        # no dense state copy, no re-prefill: exactly the clean run's
+        # prefill count, every evicted sequence resumed off its pages
+        assert stats["resumed_total"] == stats["evicted_total"]
+        assert stats["prefill_sequences_total"]["incremental"] == (
+            clean_prefills
+        )
+        assert any(" admit " in ln and " resume" in ln
+                   for ln in killed_engine.trace())
+    else:
+        assert stats["resumed_total"] == 0
+        assert stats["prefill_sequences_total"]["incremental"] > (
+            clean_prefills
+        )
 
 
 def test_arena_poison_evicts_and_re_prefills_only_the_victim():

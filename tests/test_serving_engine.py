@@ -456,3 +456,215 @@ def test_engine_runs_on_thread_executor_too():
 def test_engine_is_importable_from_runtime():
     assert ServingEngine is not None
     assert isinstance(SimExecutor(seed=0), SimExecutor)
+
+
+# ------------------------------------------------- paged decode (tentpole)
+
+
+def test_paged_and_dense_token_parity():
+    """ToyLM's integer state makes this exact: routing decode through the
+    arena-backed page pool must reproduce the dense path's token streams
+    bit for bit, across a multi-slot churning workload."""
+
+    def run(kv_mode):
+        rng = random.Random(21)
+        engine, _ = make_engine(seed=21, max_batch=3, kv_mode=kv_mode)
+        reqs = make_requests(rng, 8, deadline_prob=0.0)
+        for r in reqs:
+            engine.submit(r)
+        engine.drain()
+        check_serving_invariants(engine, reqs, ctx=f"parity-{kv_mode}")
+        return {r.request_id: tuple(r.tokens) for r in reqs}
+
+    assert run("paged") == run("dense")
+
+
+def test_kv_mode_resolution_and_validation():
+    """auto → paged for a paged-capable model under incremental; dense
+    otherwise; explicit 'paged' validates its prerequisites loudly."""
+    engine, _ = make_engine(seed=1)
+    assert engine.kv_mode == "paged"       # ToyLM supports paged decode
+    engine, _ = make_engine(seed=1, incremental=False)
+    assert engine.kv_mode == "dense"       # rebatching baseline is dense
+    engine, _ = make_engine(seed=1, kv_mode="dense")
+    assert engine.kv_mode == "dense"
+
+    import pytest
+
+    with pytest.raises(ValueError, match="incremental"):
+        make_engine(seed=1, kv_mode="paged", incremental=False)
+    with pytest.raises(ValueError, match="kv_mode"):
+        make_engine(seed=1, kv_mode="sparse")
+
+
+def test_unsupported_model_falls_back_to_dense():
+    """A model without the paged interface serves dense under auto and
+    refuses an explicit kv_mode='paged'."""
+    from helpers.serving import ToyLM
+
+    from repro.core.sim import SimExecutor as _Sim
+    from repro.runtime.serve_loop import ServerConfig, ServingEngine
+
+    class DenseOnlyLM(ToyLM):
+        supports_paged_decode = False
+
+    model = DenseOnlyLM()
+    engine = ServingEngine(
+        model, model.init(),
+        ServerConfig(max_batch=2, max_seq=32, tokens_per_page=4),
+        executor=_Sim(seed=0),
+    )
+    assert engine.kv_mode == "dense"
+    r = _req(0, new=3)
+    engine.submit(r)
+    engine.drain()
+    assert len(r.tokens) == 3
+
+    import pytest
+
+    with pytest.raises(ValueError, match="does not support paged"):
+        ServingEngine(
+            model, model.init(),
+            ServerConfig(max_batch=2, max_seq=32, tokens_per_page=4,
+                         kv_mode="paged"),
+            executor=_Sim(seed=0),
+        )
+
+
+def test_page_ledger_balances_and_tracks_real_pages():
+    """Every page the workload faulted is released by drain — the ledger
+    the paged mode's zero-leak acceptance gate reads."""
+    rng = random.Random(31)
+    engine, _ = make_engine(seed=31, max_batch=3)
+    reqs = make_requests(rng, 6, deadline_prob=0.0)
+    for r in reqs:
+        engine.submit(r)
+    engine.drain()
+    stats = engine.serving_stats()
+    assert stats["kv_pages_allocated_total"] > 0
+    assert stats["kv_pages_allocated_total"] == stats["kv_pages_freed_total"]
+    check_serving_invariants(engine, reqs, ctx="ledger")
+
+
+# ------------------------------------------------------- seeded sampling
+
+
+def test_sampler_determinism_across_three_runs():
+    """Same seeds => byte-identical sampled streams, run after run."""
+
+    def run():
+        rng = random.Random(41)
+        engine, _ = make_engine(seed=41, max_batch=2)
+        reqs = make_requests(rng, 5, deadline_prob=0.0, sample_prob=1.0)
+        for r in reqs:
+            engine.submit(r)
+        engine.drain()
+        return {r.request_id: tuple(r.tokens) for r in reqs}
+
+    first = run()
+    assert first == run() == run()
+
+
+def test_request_seed_actually_steers_sampling():
+    """Two identical requests differing only in seed must diverge (the
+    sampler is not secretly greedy), and per-request seeds must not
+    interfere with each other's streams."""
+
+    def run(seed_a):
+        engine, _ = make_engine(seed=5, max_batch=2)
+        reqs = [
+            _req(0, prompt=(3, 1, 4), new=8, temperature=3e8, seed=seed_a),
+            _req(1, prompt=(3, 1, 4), new=8, temperature=3e8, seed=99),
+        ]
+        for r in reqs:
+            engine.submit(r)
+        engine.drain()
+        return tuple(reqs[0].tokens), tuple(reqs[1].tokens)
+
+    a0, b0 = run(seed_a=7)
+    a1, b1 = run(seed_a=1234)
+    assert b0 == b1                        # bystander stream untouched
+    assert a0 != a1                        # seed steers the stream
+
+
+def test_sample_token_families_unit():
+    from repro.runtime.sampling import sample_token, sampler_method
+
+    logits = np.asarray([0.0, 5.0, 4.9, 1.0, -2.0])
+    assert sampler_method(0.0, 0, 1.0) == "greedy"
+    assert sampler_method(1.0, 3, 0.9) == "topk"   # top_k wins the label
+    assert sampler_method(1.0, 0, 0.9) == "topp"
+    assert sampler_method(1.0, 0, 1.0) == "temperature"
+
+    tok, method = sample_token(logits)
+    assert (tok, method) == (int(np.argmax(logits)), "greedy")
+
+    # top-k=2 can only ever emit the two largest logits
+    seen = {
+        sample_token(logits, temperature=1.0, top_k=2, seed=s, index=0)[0]
+        for s in range(64)
+    }
+    assert seen <= {1, 2} and len(seen) == 2
+
+    # top-p tight enough to keep only the head of the distribution
+    seen = {
+        sample_token(logits, temperature=0.25, top_p=0.5, seed=s, index=0)[0]
+        for s in range(64)
+    }
+    assert seen == {1}
+
+    # keyed draws: same (seed, index) repeats, different index moves
+    draw = lambda i: sample_token(
+        logits, temperature=1.0, seed=123, index=i)[0]
+    assert draw(0) == draw(0)
+    assert any(draw(i) != draw(0) for i in range(1, 32))
+
+
+def test_paged_and_sampler_metric_families_exported():
+    quotas = {"vip": TenantQuota(max_tasks_in_flight=2)}
+    engine, _ = make_engine(seed=51, quotas=quotas)
+    engine.submit(_req(0, tenant="vip", new=3))
+    engine.submit(_req(1, tenant="vip", new=2, temperature=3e8, seed=4))
+    engine.drain()
+    reg = MetricsRegistry().register_serving(engine)
+    text = reg.render()
+    for family in (
+        'seepp_serving_kv_mode{mode="paged"} 1',
+        'seepp_serving_sampled_tokens_total{method="greedy"} 3',
+        'seepp_serving_sampled_tokens_total{method="temperature"} 2',
+        'seepp_serving_sampled_tokens_total{method="topk"} 0',
+        'seepp_serving_sampled_tokens_total{method="topp"} 0',
+        "seepp_serving_resumed_total 0",
+    ):
+        assert family in text, family
+    dump = reg.dump()
+    allocated = dump["seepp_serving_kv_pages_allocated_total"][""]
+    assert allocated > 0
+    assert dump["seepp_serving_kv_pages_freed_total"][""] == allocated
+
+
+def test_transformer_paged_serving_smoke():
+    """The real model path: a reduced transformer serves through the
+    Pallas paged-attention kernel (interpret mode on CPU) end to end."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.runtime import Server, ServerConfig
+
+    cfg = get_reduced("qwen2.5-32b")
+    model = build_model(cfg)
+    assert model.supports_paged_decode
+    params = model.init(jax.random.PRNGKey(0))
+    srv = Server(model, params, ServerConfig(max_batch=2, max_seq=32))
+    assert srv.engine.kv_mode == "paged"   # auto resolves to paged
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32),
+                max_new_tokens=3, request_id=i)
+        for i in range(3)
+    ]
+    done = srv.run(reqs)
+    assert all(len(r.tokens) == 3 and r.error is None for r in done)
+    check_serving_invariants(srv.engine, reqs, ctx="transformer-paged")
+    assert "seepp_serving_kv_mode" in srv.metrics.render()
