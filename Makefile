@@ -11,10 +11,14 @@ test:
 # day), exploring interleavings CI's fixed window never visits; a
 # failure prints its replay seed — rerun it alone with
 # CHAOS_SEED_START=<seed> CHAOS_SEED_COUNT=1
+#
+# PYTEST_FLAGS passes extra pytest args through (the nightly workflow
+# adds --junitxml=... for its artifacts)
 chaos:
 	CHAOS_SEED_START=$$(( ($$(date +%s) / 86400 % 5000) * 200 )) \
 	CHAOS_SEED_COUNT=200 \
-	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_scheduler_chaos.py
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_FLAGS) \
+		tests/test_scheduler_chaos.py
 
 # serving-plane chaos sweep (batch kills + KV-arena poison) over a
 # rotating seed window; CI runs the fixed window seeds 0..59 inside
@@ -23,7 +27,8 @@ chaos:
 serve-chaos:
 	CHAOS_SERVE_SEED_START=$$(( ($$(date +%s) / 86400 % 5000) * 120 )) \
 	CHAOS_SERVE_SEED_COUNT=120 \
-	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_serving_chaos.py
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_FLAGS) \
+		tests/test_serving_chaos.py
 
 # same invocation as the CI lint job (config in ruff.toml)
 lint:
@@ -44,6 +49,8 @@ bench-smoke:
 		--tasks 40 --workers 4 --json-out BENCH_scheduler.json
 	PYTHONPATH=src $(PYTHON) benchmarks/serve_bench.py \
 		--requests 12 --json-out BENCH_serve.json
+	PYTHONPATH=src $(PYTHON) benchmarks/prefix_bench.py \
+		--requests 8 --json-out BENCH_prefix.json
 
 # the CI trend check, locally: diff BENCH_*.json against .bench-baseline/
 # (seeded on the first run) and fail on a >30% regression
@@ -52,8 +59,10 @@ bench-trend: bench-smoke
 		--old-dir .bench-baseline --new-dir . \
 		--tolerance 0.30 --update-baseline
 
-# everything the CI pipeline runs, locally
-ci: lint test bench-smoke
+# everything the CI pipeline runs, locally — including the trend gate
+# (bench-trend wraps bench-smoke, so a green `make ci` predicts a green
+# pipeline instead of silently skipping the regression check)
+ci: lint test bench-trend
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -1,0 +1,211 @@
+"""Cross-tenant prefix sharing: prefill tokens/request vs prompt overlap.
+
+Overlapping prompts (a shared system prompt, a few-shot header) are the
+serving plane's analogue of SEE++'s redundant per-tenant sandbox setup:
+without sharing, every request re-prefills the identical header.  This
+bench drives the same paged :class:`ServingEngine` over a workload whose
+prompts overlap by a swept ratio — shared vs unshared
+(``ServerConfig.prefix_sharing``) — and reports prefill tokens/request
+for each, after warming the prefix cache with one request per header
+(``prefix_cache_seqs``, the warm-cache deployment shape).
+
+Two hard gates run on every invocation:
+
+* at >= 75% overlap the shared run prefills **>= 2x fewer** tokens per
+  request than the unshared run (the tentpole's acceptance floor), and
+* every request's token stream is **byte-identical** across the two
+  runs — the suffix prefill attends through the donor's resident K/V
+  rows and must reproduce the full prefill bit-for-bit (bf16 rounds the
+  same both ways), or sharing is silently serving different tokens.
+
+``--json-out`` writes ``BENCH_prefix.json``; the CI trend check tracks
+``prefix_prefill_tokens_saved_x``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.runtime import Request, ServingEngine
+from repro.runtime.serve_loop import ServerConfig
+
+OVERLAPS = (0.0, 0.5, 0.75)
+
+
+def _requests(n: int, prompt_len: int, overlap: float, new_tokens: int,
+              vocab: int, tail_seed: int = 11) -> List[Request]:
+    """n requests whose prompts open with a common ``overlap`` fraction.
+
+    The header is fixed across requests (two tenants alternate, like two
+    products sharing one system prompt); the tail is per-request random.
+    Deterministic: same args, same workload.  ``tail_seed`` keys the
+    tails only — the warm request uses its own so it never duplicates a
+    measured prompt outright (a full-prompt match would fake a hit even
+    at overlap 0).
+    """
+    header = np.random.default_rng(7).integers(
+        0, vocab, (int(prompt_len * overlap),)
+    )
+    rng = np.random.default_rng(tail_seed)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, vocab, (prompt_len - header.size,))
+        reqs.append(Request(
+            prompt=np.concatenate([header, tail]).astype(np.int32),
+            max_new_tokens=new_tokens,
+            request_id=i,
+            tenant=("alice", "bob")[i % 2],
+        ))
+    return reqs
+
+
+def _run(arch: str, *, sharing: bool, requests: int, prompt_len: int,
+         overlap: float, new_tokens: int, max_batch: int,
+         max_seq: int) -> Dict[str, object]:
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(
+        model, params,
+        ServerConfig(max_batch=max_batch, max_seq=max_seq,
+                     kv_mode="paged", prefix_sharing=sharing,
+                     prefix_cache_seqs=2),
+    )
+    assert engine.kv_mode == "paged"
+
+    # warm phase: one request carries the header through prefill and is
+    # parked as a prefix donor — plus it compiles the jit variants
+    # outside the timed window.  The unshared run warms identically so
+    # the prefill-token subtraction is apples to apples
+    warm = _requests(1, prompt_len, overlap, new_tokens, cfg.vocab_size,
+                     tail_seed=12)
+    warm[0].request_id = 10_000
+    engine.submit(warm[0])
+    engine.drain()
+    warm_tokens = engine.serving_stats()["prefill_tokens_total"]["incremental"]
+
+    reqs = _requests(requests, prompt_len, overlap, new_tokens,
+                     cfg.vocab_size)
+    t0 = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
+    engine.drain()
+    wall = time.perf_counter() - t0
+
+    assert all(r.error is None for r in reqs)
+    engine.flush_prefix_cache()
+    assert engine.kv.live_pages() == 0
+    assert engine.kv.pages_allocated == engine.kv.pages_freed
+    stats = engine.serving_stats()
+    return {
+        "streams": {r.request_id: tuple(r.tokens) for r in reqs},
+        "prefill_tokens": stats["prefill_tokens_total"]["incremental"]
+        - warm_tokens,
+        "prefix_hits": stats["prefix_hits_total"],
+        "cow_copies": stats["prefix_cow_copies_total"],
+        "tokens_saved": stats["prefix_prefill_tokens_saved_total"],
+        "wall_s": wall,
+    }
+
+
+def run_overlap_sweep(arch: str, *, requests: int, prompt_len: int,
+                      new_tokens: int, max_batch: int,
+                      max_seq: int) -> List[Dict[str, float]]:
+    rows = []
+    for overlap in OVERLAPS:
+        common = dict(requests=requests, prompt_len=prompt_len,
+                      overlap=overlap, new_tokens=new_tokens,
+                      max_batch=max_batch, max_seq=max_seq)
+        shared = _run(arch, sharing=True, **common)
+        unshared = _run(arch, sharing=False, **common)
+        assert shared["streams"] == unshared["streams"], (
+            f"token streams diverged at overlap={overlap}: sharing must "
+            "be invisible to the decoded output"
+        )
+        rows.append({
+            "overlap": overlap,
+            "shared_prefill_tokens_per_req":
+                shared["prefill_tokens"] / requests,
+            "unshared_prefill_tokens_per_req":
+                unshared["prefill_tokens"] / requests,
+            "reduction_x":
+                unshared["prefill_tokens"]
+                / max(shared["prefill_tokens"], 1),
+            "prefix_hits": shared["prefix_hits"],
+            "cow_copies": shared["cow_copies"],
+            "tokens_saved": shared["tokens_saved"],
+        })
+    return rows
+
+
+def main(
+    arch: str = "qwen2.5-32b",
+    requests: int = 8,
+    prompt_len: int = 32,
+    new_tokens: int = 4,
+    max_batch: int = 2,
+    max_seq: int = 64,
+    json_out: Optional[str] = None,
+) -> Dict[str, object]:
+    rows = run_overlap_sweep(
+        arch, requests=requests, prompt_len=prompt_len,
+        new_tokens=new_tokens, max_batch=max_batch, max_seq=max_seq,
+    )
+    headline = rows[-1]["reduction_x"]     # the >=75%-overlap cell
+    # acceptance floor (hard assert, like serve_bench's speedup gates):
+    # a broken radix lookup or an over-eager COW collapses this toward
+    # 1x long before the trend check would notice a relative drift
+    assert headline >= 2.0, (
+        f"prefix sharing saved only {headline:.2f}x prefill tokens at "
+        f"{OVERLAPS[-1]:.0%} overlap"
+    )
+    assert rows[-1]["prefix_hits"] == requests, rows[-1]
+    assert rows[0]["prefix_hits"] == 0, rows[0]
+
+    print("# prefix_bench")
+    print(f"  arch={arch} requests={requests} prompt={prompt_len} "
+          f"new={new_tokens} batch={max_batch}")
+    for row in rows:
+        print(f"  overlap={row['overlap']:4.0%} : "
+              f"unshared {row['unshared_prefill_tokens_per_req']:6.1f} "
+              f"tok/req, shared {row['shared_prefill_tokens_per_req']:6.1f} "
+              f"tok/req -> {row['reduction_x']:.2f}x "
+              f"(hits={row['prefix_hits']} cow={row['cow_copies']})")
+    print(f"  prefill reduction   : {headline:.2f}x at "
+          f"{OVERLAPS[-1]:.0%} overlap, streams byte-identical")
+
+    result = {
+        "arch": arch,
+        "requests": requests,
+        "prompt_len": prompt_len,
+        "overlap_sweep": rows,
+        "prefix_prefill_tokens_saved_x": headline,
+    }
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump(result, fh, indent=2, sort_keys=True)
+        print(f"  wrote {json_out}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2.5-32b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--json-out", default=None)
+    a = ap.parse_args()
+    main(arch=a.arch, requests=a.requests, prompt_len=a.prompt_len,
+         new_tokens=a.new_tokens, max_batch=a.max_batch, max_seq=a.max_seq,
+         json_out=a.json_out)

@@ -12,6 +12,7 @@ def main() -> None:
         admission_bench,
         loader_bench,
         pool_bench,
+        prefix_bench,
         query_latency,
         roofline,
         scheduler_bench,
@@ -92,6 +93,14 @@ def main() -> None:
         ("serve_paged_speedup_x", sv["paged_speedup_x"],
          "paged vs dense KV at the largest (slots, max_seq) cell"),
     ]
+
+    print("=" * 72)
+    pfx = prefix_bench.main()
+    rows.append(
+        ("serve_prefix_tokens_saved_x",
+         pfx["prefix_prefill_tokens_saved_x"],
+         "shared vs unshared prefill at 75% prompt overlap, target:>=2x")
+    )
 
     print("=" * 72)
     try:

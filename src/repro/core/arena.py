@@ -24,7 +24,7 @@ import numpy as np
 from .mm import MemoryManager, MMConfig
 from .vma import AddrRange
 
-__all__ = ["DeviceArena", "PagedKVAllocator", "SequencePages"]
+__all__ = ["DeviceArena", "PagedKVAllocator", "PrefixIndex", "SequencePages"]
 
 
 class DeviceArena:
@@ -50,6 +50,20 @@ class DeviceArena:
         ar = self._regions.pop(name)
         self._lengths.pop(name)
         self.mm.munmap(ar)
+
+    def rename_region(self, old: str, new: str) -> None:
+        """Re-key a region without touching its mappings.
+
+        Used to retire a dropped sequence's region under a unique zombie
+        name while other sequences still map pages it faulted — request
+        ids recycle, so the original name must be free for re-use.
+        """
+        if new in self._regions:
+            raise ValueError(f"region {new!r} exists")
+        if old not in self._regions:
+            raise KeyError(old)
+        self._regions[new] = self._regions.pop(old)
+        self._lengths[new] = self._lengths.pop(old)
 
     def grow(self, name: str, nbytes: int) -> None:
         """Touch (fault in) the next ``nbytes`` of the region."""
@@ -98,6 +112,138 @@ class SequencePages:
     pages: np.ndarray  # physical page indices, int32
 
 
+def _common_len(a: Sequence[int], b: Sequence[int]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class _PrefixNode:
+    __slots__ = ("children", "seqs", "tails")
+
+    def __init__(self) -> None:
+        # edge label -> child; every edge is exactly one page worth of
+        # tokens, so a tree path is a page-aligned token prefix
+        self.children: Dict[Tuple[int, ...], "_PrefixNode"] = {}
+        # sequences whose registered stream passes through this node
+        self.seqs: Set[str] = set()
+        # per-sequence sub-page remainder past this node's path
+        self.tails: Dict[str, Tuple[int, ...]] = {}
+
+
+class PrefixIndex:
+    """Page-granular radix index over registered prompt token streams.
+
+    Each edge spans exactly ``tokens_per_page`` tokens, so walking the
+    tree yields the longest *page-aligned* prefix of a new prompt that
+    some registered sequence already holds; a final token-level scan of
+    the deepest node's edges and tails extends the match into a partial
+    page.  Lookup takes an ``eligible`` predicate so the allocator can
+    exclude poisoned/collided donors without the index knowing why.
+    """
+
+    def __init__(self, tokens_per_page: int) -> None:
+        self.tokens_per_page = tokens_per_page
+        self._root = _PrefixNode()
+        self._paths: Dict[str, Tuple[Tuple[int, ...], ...]] = {}
+
+    def __contains__(self, seq_id: str) -> bool:
+        return seq_id in self._paths
+
+    def insert(self, seq_id: str, tokens: Sequence[int]) -> None:
+        toks = tuple(int(t) for t in tokens)
+        if seq_id in self._paths:
+            self.remove(seq_id)
+        page = self.tokens_per_page
+        full = len(toks) - len(toks) % page
+        chunks = tuple(toks[i:i + page] for i in range(0, full, page))
+        node = self._root
+        for chunk in chunks:
+            node = node.children.setdefault(chunk, _PrefixNode())
+            node.seqs.add(seq_id)
+        tail = toks[full:]
+        if tail:
+            node.tails[seq_id] = tail
+        self._paths[seq_id] = chunks
+
+    def remove(self, seq_id: str) -> None:
+        chunks = self._paths.pop(seq_id, None)
+        if chunks is None:
+            return
+        node = self._root
+        path = [node]
+        for chunk in chunks:
+            node = node.children[chunk]
+            node.seqs.discard(seq_id)
+            path.append(node)
+        node.tails.pop(seq_id, None)
+        for i in range(len(path) - 1, 0, -1):
+            n = path[i]
+            if n.seqs or n.tails or n.children:
+                break
+            del path[i - 1].children[chunks[i - 1]]
+
+    def rename(self, old: str, new: str) -> None:
+        chunks = self._paths.pop(old, None)
+        if chunks is None:
+            return
+        node = self._root
+        for chunk in chunks:
+            node = node.children[chunk]
+            node.seqs.discard(old)
+            node.seqs.add(new)
+        if old in node.tails:
+            node.tails[new] = node.tails.pop(old)
+        self._paths[new] = chunks
+
+    def lookup(
+        self, tokens: Sequence[int], eligible
+    ) -> Tuple[Optional[str], int]:
+        """``(donor, matched_tokens)`` for the longest eligible prefix.
+
+        The donor's registered stream covers *all* matched tokens, not
+        just the last page — sequences are recorded on every node along
+        their path.  Returns ``(None, 0)`` when nothing matches.
+        """
+        toks = tuple(int(t) for t in tokens)
+        page = self.tokens_per_page
+        node, donor, matched = self._root, None, 0
+        rest = toks
+        while len(rest) >= page:
+            child = node.children.get(rest[:page])
+            if child is None:
+                break
+            cands = sorted(s for s in child.seqs if eligible(s))
+            if not cands:
+                break
+            node, donor, matched = child, cands[0], matched + page
+            rest = rest[page:]
+        # token-level extension into the deepest partially-matching edge
+        # or tail: sorted iteration keeps the donor choice deterministic
+        best_ext, best_donor = 0, None
+        for chunk in sorted(node.children):
+            ext = _common_len(chunk, rest)
+            if ext <= best_ext:
+                continue
+            cands = sorted(
+                s for s in node.children[chunk].seqs if eligible(s)
+            )
+            if cands:
+                best_ext, best_donor = ext, cands[0]
+        for s in sorted(node.tails):
+            if not eligible(s):
+                continue
+            ext = _common_len(node.tails[s], rest)
+            if ext > best_ext:
+                best_ext, best_donor = ext, s
+        if best_ext:
+            return best_donor, matched + best_ext
+        return donor, matched
+
+
 class PagedKVAllocator:
     """Paged KV-cache allocator for the serving path.
 
@@ -136,15 +282,29 @@ class PagedKVAllocator:
         self._tokens: Dict[str, int] = {}
         self._poisoned: Set[str] = set()
         # incremental page-ownership tracking: each newly faulted page is
-        # checked against the owner map once, at fault time, so the
+        # checked against the mapper table once, at fault time, so the
         # per-step validate() poll is O(1) instead of O(seqs x pages)
-        self._owner: Dict[int, str] = {}      # physical page -> sequence
-        self._seq_pages: Dict[str, List[int]] = {}
+        self._owner: Dict[int, str] = {}      # canonical owner record
+        self._mappers: Dict[int, Set[str]] = {}   # page -> mapping seqs
+        self._seq_pages: Dict[str, List[int]] = {}  # logical -> physical
+        self._own_pages: Dict[str, List[int]] = {}  # faulted from own region
+        self._page_home: Dict[int, str] = {}  # page -> backing region name
         self._collisions: Set[str] = set()
+        self._collided: Set[int] = set()      # pages with >1 backing claim
+        # regions of dropped sequences kept alive because other sequences
+        # still map pages they faulted; destroyed when the last page dies
+        self._zombies: Dict[str, Set[int]] = {}
+        self._zombie_seq = 0
         # page ledger: every page fault / release crosses these counters,
-        # so allocated - freed == pages live right now (zero after drain)
+        # so allocated - freed == pages live right now (zero after drain).
+        # share_prefix adds mappers without faulting, so it moves neither
+        # counter; a page is freed when its last mapper unmaps.
         self.pages_allocated = 0
         self.pages_freed = 0
+        # cross-tenant prefix sharing: prompt radix index + counters
+        self.prefix = PrefixIndex(tokens_per_page)
+        self.shared_pages_total = 0
+        self.cow_copies_total = 0
         # opaque device-side page pool (e.g. {"k_pages": ..., "v_pages":
         # ...}) bound by the engine when the arena is the physical
         # backing store for decode; the allocator only hands it around
@@ -169,61 +329,92 @@ class PagedKVAllocator:
         self.arena.create_region(seq_id, self.max_seq_pages * self.arena.page_bytes)
         self._tokens[seq_id] = 0
         self._seq_pages[seq_id] = []
+        self._own_pages[seq_id] = []
 
     def has_sequence(self, seq_id: str) -> bool:
         """True while ``seq_id`` still owns pages (evicted-but-resident)."""
         return seq_id in self._tokens
 
+    def _unmap_page(self, seq_id: str, page: int) -> None:
+        """Drop one mapping claim; free the page when the last one dies."""
+        mappers = self._mappers.get(page)
+        if mappers is None or seq_id not in mappers:
+            return
+        mappers.discard(seq_id)
+        collided = page in self._collided
+        if collided:
+            # each collider did its own physical fault (that is what
+            # made it a collision), so the ledger frees one per claim
+            self.pages_freed += 1
+        if mappers:
+            if self._owner.get(page) == seq_id:
+                # a multi-mapped page outlived its recorded owner: hand
+                # the record to a surviving claimant so a third sequence
+                # faulting this page is still flagged as a collision
+                self._owner[page] = sorted(mappers)[0]
+            return
+        del self._mappers[page]
+        self._owner.pop(page, None)
+        self._collided.discard(page)
+        if not collided:
+            self.pages_freed += 1
+        home = self._page_home.pop(page, None)
+        zpages = self._zombies.get(home)
+        if zpages is not None:
+            zpages.discard(page)
+            if not zpages:
+                del self._zombies[home]
+                self.arena.destroy_region(home)
+
     def drop_sequence(self, seq_id: str) -> None:
-        self.arena.destroy_region(seq_id)
         self._tokens.pop(seq_id)
         self._poisoned.discard(seq_id)
-        # a second claimant exists only for pages of a *collided*
-        # sequence (collision marking flags both parties), so the
-        # normal-case drop keeps its O(pages) fast path
-        scan_heirs = seq_id in self._collisions
         self._collisions.discard(seq_id)
-        dropped = self._seq_pages.pop(seq_id, ())
-        self.pages_freed += len(dropped)
-        for page in dropped:
-            if self._owner.get(page) != seq_id:
-                continue
-            heir = None
-            if scan_heirs:
-                heir = next(
-                    (
-                        s
-                        for s, pages in self._seq_pages.items()
-                        if page in pages
-                    ),
-                    None,
-                )
-            if heir is None:
-                del self._owner[page]
-            else:
-                # a collided page outlived its recorded owner: hand the
-                # record to a surviving claimant so a third sequence
-                # faulting this page is still flagged as a collision
-                self._owner[page] = heir
+        self.prefix.remove(seq_id)
+        for page in self._seq_pages.pop(seq_id, ()):
+            self._unmap_page(seq_id, page)
+        own = self._own_pages.pop(seq_id, [])
+        still_mapped = {p for p in own if self._mappers.get(p)}
+        if still_mapped:
+            # pages another sequence still maps outlive the region that
+            # faulted them: retire the region under a unique zombie name
+            # (request ids recycle) and destroy it with its last page
+            zname = f"{seq_id}~z{self._zombie_seq}"
+            self._zombie_seq += 1
+            self.arena.rename_region(seq_id, zname)
+            self._zombies[zname] = still_mapped
+            for p in still_mapped:
+                self._page_home[p] = zname
+        else:
+            self.arena.destroy_region(seq_id)
 
-    def _track_new_pages(self, seq_id: str) -> None:
+    def _track_new_pages(self, seq_id: str, *, map_logical: bool = True) -> None:
         pages = self.arena.physical_pages(seq_id)
-        known = self._seq_pages[seq_id]
+        known = self._own_pages[seq_id]
         for page in (int(p) for p in pages[len(known):]):
-            other = self._owner.get(page)
-            if other is not None and other != seq_id:
-                # two owners of one backing page = arena corruption
+            mappers = self._mappers.get(page)
+            if mappers and mappers != {seq_id}:
+                # a fresh fault landing on a page some live sequence
+                # already maps = arena corruption, even when the page is
+                # legitimately multi-mapped via share_prefix — sharing
+                # adds mappers, it never re-faults backing storage
                 self._collisions.add(seq_id)
-                self._collisions.add(other)
+                self._collisions.update(mappers)
+                self._collided.add(page)
+                mappers.add(seq_id)
             else:
-                self._owner[page] = seq_id
+                self._mappers.setdefault(page, set()).add(seq_id)
+                self._owner.setdefault(page, seq_id)
+            self._page_home.setdefault(page, seq_id)
             known.append(page)
+            if map_logical:
+                self._seq_pages[seq_id].append(page)
             self.pages_allocated += 1
 
     def append_tokens(self, seq_id: str, n: int = 1) -> None:
         have = self._tokens[seq_id]
         need_pages = -(-(have + n) // self.tokens_per_page)
-        have_pages = -(-have // self.tokens_per_page) if have else 0
+        have_pages = len(self._seq_pages[seq_id])
         if need_pages > have_pages:
             self.arena.grow(seq_id, (need_pages - have_pages) * self.arena.page_bytes)
             self._track_new_pages(seq_id)
@@ -240,6 +431,130 @@ class PagedKVAllocator:
         have = self._tokens[seq_id]
         if n > have:
             self.append_tokens(seq_id, n - have)
+
+    # ------------------------------------------- cross-tenant page sharing
+
+    def share_prefix(self, seq_id: str, donor_id: str, n_tokens: int) -> int:
+        """Map ``donor_id``'s first pages read-only into fresh ``seq_id``.
+
+        The sharer's first ``n_tokens`` positions resolve to the donor's
+        physical pages (including a trailing partial page when the match
+        is not page-aligned); per-page mapper sets act as refcounts.  No
+        backing storage is faulted, so the page ledger does not move.
+        Returns the number of pages shared.
+        """
+        if self._tokens[seq_id] != 0 or self._seq_pages[seq_id]:
+            raise ValueError(
+                f"{seq_id!r}: share_prefix needs a fresh sequence"
+            )
+        if donor_id not in self._tokens:
+            raise KeyError(donor_id)
+        if n_tokens <= 0 or n_tokens > self._tokens[donor_id]:
+            raise ValueError(
+                f"shared prefix of {n_tokens} tokens exceeds donor "
+                f"{donor_id!r} ({self._tokens[donor_id]} tokens)"
+            )
+        n_pages = -(-n_tokens // self.tokens_per_page)
+        donor_pages = self._seq_pages[donor_id][:n_pages]
+        if len(donor_pages) < n_pages:
+            raise ValueError(f"donor {donor_id!r} pages not resident")
+        for page in donor_pages:
+            self._mappers[page].add(seq_id)
+        self._seq_pages[seq_id] = list(donor_pages)
+        self._tokens[seq_id] = n_tokens
+        self.shared_pages_total += n_pages
+        return n_pages
+
+    def page_writable(self, seq_id: str, logical: int) -> bool:
+        """True when ``seq_id`` is the sole mapper of its logical page.
+
+        Any write to a page with other mappers must :meth:`cow_page`
+        first — the other sequences read those rows as their prefix.
+        """
+        page = self._seq_pages[seq_id][logical]
+        return len(self._mappers.get(page, ())) <= 1
+
+    def cow_page(self, seq_id: str, logical: int) -> Tuple[int, int]:
+        """Copy-on-write: remap a shared logical page onto a fresh fault.
+
+        Faults one page from ``seq_id``'s own region, points the logical
+        slot at it, and drops the claim on the shared source (which the
+        remaining mappers keep).  Returns ``(src, dst)`` physical pages;
+        the caller copies the device rows src -> dst before writing.
+        """
+        src = self._seq_pages[seq_id][logical]
+        if len(self._mappers.get(src, ())) <= 1:
+            raise ValueError(f"page {src} is not shared; nothing to copy")
+        self.arena.grow(seq_id, self.arena.page_bytes)
+        before = len(self._own_pages[seq_id])
+        self._track_new_pages(seq_id, map_logical=False)
+        dst = self._own_pages[seq_id][before]
+        self._seq_pages[seq_id][logical] = dst
+        self._unmap_page(seq_id, src)
+        self.cow_copies_total += 1
+        return src, dst
+
+    def sequence_shared(self, seq_id: str) -> bool:
+        """True when any of ``seq_id``'s pages has another live mapper."""
+        return any(
+            len(self._mappers.get(p, ())) > 1
+            for p in self._seq_pages.get(seq_id, ())
+        )
+
+    def rename_sequence(self, old: str, new: str) -> None:
+        """Re-key a live sequence (used to park retired prefix donors)."""
+        if new in self._tokens:
+            raise ValueError(f"sequence {new!r} exists")
+        self._tokens[new] = self._tokens.pop(old)
+        pages = self._seq_pages[new] = self._seq_pages.pop(old)
+        own = self._own_pages[new] = self._own_pages.pop(old)
+        for page in set(pages) | set(own):
+            mappers = self._mappers.get(page)
+            if mappers and old in mappers:
+                mappers.discard(old)
+                mappers.add(new)
+            if self._owner.get(page) == old:
+                self._owner[page] = new
+        for page in own:
+            if self._page_home.get(page) == old:
+                self._page_home[page] = new
+        self.arena.rename_region(old, new)
+        if old in self._poisoned:
+            self._poisoned.discard(old)
+            self._poisoned.add(new)
+        if old in self._collisions:
+            self._collisions.discard(old)
+            self._collisions.add(new)
+        self.prefix.rename(old, new)
+
+    def register_prefix(self, seq_id: str, tokens: Sequence[int]) -> None:
+        """Index ``seq_id``'s prompt once its K/V rows are resident."""
+        if seq_id not in self._tokens:
+            raise KeyError(seq_id)
+        self.prefix.insert(seq_id, tokens)
+
+    def lookup_prefix(
+        self, tokens: Sequence[int], exclude: Sequence[str] = ()
+    ) -> Tuple[Optional[str], int]:
+        """Longest indexed prefix of ``tokens`` held by a trusted donor."""
+
+        def eligible(s: str) -> bool:
+            return (
+                s in self._tokens
+                and s not in exclude
+                and s not in self._poisoned
+                and s not in self._collisions
+            )
+
+        return self.prefix.lookup(tokens, eligible)
+
+    def live_pages(self) -> int:
+        """Physical pages with at least one mapper (zero after drain)."""
+        return len(self._mappers)
+
+    def zombie_regions(self) -> List[str]:
+        """Regions of dropped sequences still pinned by shared pages."""
+        return sorted(self._zombies)
 
     def token_positions(
         self, seq_id: str, start: int, count: int
@@ -265,7 +580,9 @@ class PagedKVAllocator:
 
     def sequence(self, seq_id: str) -> SequencePages:
         return SequencePages(
-            seq_id, self._tokens[seq_id], self.arena.physical_pages(seq_id)
+            seq_id,
+            self._tokens[seq_id],
+            np.asarray(self._seq_pages[seq_id], np.int32),
         )
 
     def page_table(
@@ -321,6 +638,13 @@ class PagedKVAllocator:
         if seq_id not in self._tokens:
             return False
         self._poisoned.add(seq_id)
+        # corrupt rows are read by every sequence mapping those pages as
+        # its prefix, so poison propagates to all co-mappers; lookup
+        # excludes poisoned donors, so nobody shares *into* the blast
+        for page in self._seq_pages.get(seq_id, ()):
+            for other in self._mappers.get(page, ()):
+                if other in self._tokens:
+                    self._poisoned.add(other)
         return True
 
     def poisoned(self) -> List[str]:

@@ -553,6 +553,19 @@ class MetricsRegistry:
             ("kv_pages_freed_total", "serving_kv_pages_freed_total",
              "counter",
              "KV pages released (allocated - freed = pages live now)."),
+            ("prefix_hits_total", "serving_prefix_hits_total", "counter",
+             "Admissions that mapped a shared prompt prefix read-only "
+             "instead of prefilling it."),
+            ("prefix_shared_pages_total", "serving_prefix_shared_pages_total",
+             "counter",
+             "KV pages mapped from a prefix donor (no fresh fault)."),
+            ("prefix_cow_copies_total", "serving_prefix_cow_copies_total",
+             "counter",
+             "Shared pages copy-on-written before a divergent write."),
+            ("prefix_prefill_tokens_saved_total",
+             "serving_prefix_prefill_tokens_saved_total", "counter",
+             "Prompt tokens not prefilled because their K/V rows were "
+             "already resident in shared pages."),
         ]
         stats = [engine.serving_stats() for engine in servings]
         fams: List[_Family] = []

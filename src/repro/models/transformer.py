@@ -19,7 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import attention_block, decode_attn, init_attn_params
+from .attention import NEG_INF, attention_block, decode_attn, init_attn_params
 from .common import (
     ArchConfig,
     constrain,
@@ -336,6 +336,10 @@ class TransformerLM:
     #   paged_write_prefill(pool, rows, page_ids, offsets) → pool'
     #   paged_decode_step(params, pool, tokens, page_table, pos)
     #                                           → (pool', logits)
+    # Prefix sharing additionally needs (ServerConfig.prefix_sharing):
+    #   paged_prefill_at(params, tokens, pool, page_table, start)
+    #                                           → (kv_rows, last_logits)
+    #   paged_copy_page(pool, src, dst)         → pool'   (COW clone)
 
     @property
     def supports_paged_decode(self) -> bool:
@@ -376,6 +380,103 @@ class TransformerLM:
                 k.astype(pool["k_pages"].dtype)),
             "v_pages": pool["v_pages"].at[:, page_ids, offsets].set(
                 v.astype(pool["v_pages"].dtype)),
+        }
+
+    def paged_prefill_at(self, params, tokens, pool, page_table, start):
+        """Suffix prefill: K/V rows + last logits for tokens at positions
+        ``[start, start + S)``, attending through the shared-prefix rows
+        already resident in the page pool.
+
+        ``tokens``: (1, S) — the engine prefills one slot at a time.
+        ``page_table``: (1, W) int32, the sequence's physical pages (-1
+        padded); rows ``< start`` of those pages hold the donor-written
+        prefix K/V.  Row ``start + i``'s attention covers prefix rows
+        plus suffix rows ``<= i`` — exactly ``prefill``'s causal mask
+        started mid-sequence.
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        G = H // K
+        page_size = pool["k_pages"].shape[2]
+        W = page_table.shape[1]
+        P = W * page_size
+        scale = cfg.query_scale or (1.0 / math.sqrt(hd))
+        positions = start + jnp.arange(S)
+        h = self._embed_inputs(params, tokens)
+        pages = jnp.where(page_table[0] >= 0, page_table[0], 0)
+        prefix_live = (jnp.arange(P) < start)[None, None, None, None, :]
+        causal = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])[
+            None, :, None, None, :
+        ]
+
+        def body(h, xs):
+            p, base, kp, vp = xs
+            a = rms_norm(h, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norms)
+            q = jnp.einsum("bsd,dhk->bshk", a, p["attn"]["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", a, p["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", a, p["attn"]["wv"])
+            if cfg.qkv_bias:
+                q, k, v = (q + p["attn"]["bq"], k + p["attn"]["bk"],
+                           v + p["attn"]["bv"])
+            if cfg.qk_norm:
+                q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+            if base is not None:
+                q = rope(q, positions, base)
+                k = rope(k, positions, base)
+            pk = kp[pages].reshape(P, K, hd)
+            pv = vp[pages].reshape(P, K, hd)
+            qf = q.reshape(B, S, K, G, hd).astype(jnp.float32) * scale
+            s_pre = jnp.einsum(
+                "bskgh,pkh->bskgp", qf, pk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            s_pre = jnp.where(prefix_live, s_pre, NEG_INF)
+            s_suf = jnp.einsum(
+                "bskgh,btkh->bskgt", qf, k.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            s_suf = jnp.where(causal, s_suf, NEG_INF)
+            w = jax.nn.softmax(
+                jnp.concatenate([s_pre, s_suf], axis=-1), axis=-1
+            )
+            o = jnp.einsum(
+                "bskgp,pkh->bskgh", w[..., :P], pv.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ) + jnp.einsum(
+                "bskgt,btkh->bskgh", w[..., P:], v.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            o = o.reshape(B, S, H * hd).astype(h.dtype) @ p["attn"]["wo"]
+            if cfg.post_norms:
+                o = rms_norm(o, p["ln1_post"], cfg.norm_eps, plus_one=True)
+            h = h + o
+            m = rms_norm(h, p["ln2"], cfg.norm_eps, plus_one=cfg.post_norms)
+            if cfg.is_moe:
+                m, _ = moe_block(m, p["moe"], cfg)
+            else:
+                m = gated_mlp(m, p["mlp"]["wu"], p["mlp"].get("wg"),
+                              p["mlp"]["wd"], cfg.activation)
+            if cfg.post_norms:
+                m = rms_norm(m, p["ln2_post"], cfg.norm_eps, plus_one=True)
+            return constrain(h + m, "data", "model", None), (k, v)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h,
+            (params["layers"], jnp.asarray(self.rope_bases),
+             pool["k_pages"], pool["v_pages"]),
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps,
+                     plus_one=cfg.post_norms)
+        logits = self._unembed(params, h[:, -1])
+        return {"k": ks, "v": vs}, logits
+
+    def paged_copy_page(self, pool, src, dst):
+        """Clone page ``src`` into ``dst`` across all layers (COW)."""
+        return {
+            "k_pages": pool["k_pages"].at[:, dst].set(pool["k_pages"][:, src]),
+            "v_pages": pool["v_pages"].at[:, dst].set(pool["v_pages"][:, src]),
         }
 
     def paged_decode_step(self, params, pool, tokens, page_table, pos):

@@ -161,6 +161,13 @@ class FailureInjector:
     #: re-admission, in either kv_mode — the pages are corrupt by
     #: definition, so resuming off them would serve poisoned KV
     poison_arena_at_t: Dict[float, int] = field(default_factory=dict)
+    #: virtual time → index (sorted order) of a sequence whose pages are
+    #: *shared* with another sequence — a live slot or a parked prefix
+    #: donor.  Poison propagates to every co-mapper of those pages, so
+    #: the whole sharing clique evicts and re-prefills: the worst-case
+    #: blast radius of cross-tenant prefix sharing.  A no-op when
+    #: nothing is shared at that instant (the engine returns None)
+    poison_shared_at_t: Dict[float, int] = field(default_factory=dict)
 
     def check(self, step: int) -> None:
         victims = [w for w in self.fail_at.get(step, []) if w not in self.killed]
@@ -209,3 +216,7 @@ class FailureInjector:
             def _poison(idx=self.poison_arena_at_t[when]) -> None:
                 engine.poison_live(idx)
             sim.call_at(when, _poison)
+        for when in sorted(self.poison_shared_at_t):
+            def _poison_shared(idx=self.poison_shared_at_t[when]) -> None:
+                engine.poison_shared(idx)
+            sim.call_at(when, _poison_shared)

@@ -146,6 +146,21 @@ class ServerConfig:
     #: pool need not scale with max_seq is the point of paged KV, and
     #: benchmarks/serve_bench.py's sweep sets it accordingly
     kv_pool_pages: Optional[int] = None
+    #: cross-tenant prefix sharing (paged mode only): admission consults
+    #: the allocator's radix index and maps a matching prompt prefix's
+    #: pages read-only (per-page refcounts), prefilling just the suffix;
+    #: the first divergent write copy-on-writes the shared page.  Needs
+    #: a model exposing paged_prefill_at/paged_copy_page — silently off
+    #: otherwise
+    prefix_sharing: bool = True
+    #: >0: retired requests *park* their sequence (renamed ``~pfxN``)
+    #: instead of dropping it, keeping up to this many prefix donors
+    #: resident so later requests can share even across idle gaps — the
+    #: serving analogue of SEE++'s warm cache.  Parked donors are evicted
+    #: FIFO past the cap, dropped on poison, and released by
+    #: ``flush_prefix_cache()``.  0 (default) = pages die with the
+    #: request, sharing only hits live/resident donors
+    prefix_cache_seqs: int = 0
 
 
 class ServingEngine:
@@ -227,7 +242,20 @@ class ServingEngine:
             self._scatter_rows = jax.jit(
                 model.paged_write_prefill, donate_argnums=(0,)
             )
+            self._sharing = (
+                cfg.prefix_sharing
+                and hasattr(model, "paged_prefill_at")
+                and hasattr(model, "paged_copy_page")
+            )
+            if self._sharing:
+                # suffix prefill reads the pool (donor rows) but does not
+                # mutate it — only the scatter/copy donate the store
+                self._prefill_rows_at = jax.jit(model.paged_prefill_at)
+                self._copy_page = jax.jit(
+                    model.paged_copy_page, donate_argnums=(0,)
+                )
         else:
+            self._sharing = False
             # decode state lives per-slot: one persistent batch-state
             # whose slot i is overwritten (incremental mode) on admission
             self._state = model.init_decode_state(B, cfg.max_seq)
@@ -265,6 +293,12 @@ class ServingEngine:
         self._evictions = 0
         self._resumes = 0
         self._sampled = {"greedy": 0, "temperature": 0, "topk": 0, "topp": 0}
+        self._prefix_hits = 0
+        self._prefix_tokens_saved = 0
+        #: parked prefix donors (renamed retired sequences), FIFO by
+        #: retire order; names may go stale when a poison drops one
+        self._parked: Deque[str] = deque()
+        self._park_seq = itertools.count()
 
     # ------------------------------------------------------------- helpers
 
@@ -466,9 +500,9 @@ class ServingEngine:
             return heap[0]
         return None
 
-    def _admit_locked(self) -> List[Tuple[int, Request, bool]]:
+    def _admit_locked(self) -> List[Tuple[int, Request, bool, int]]:
         """Fill free slots from the queues; returns [(slot, request,
-        needs_prefill)] admitted.
+        needs_prefill, shared_prefix_tokens)] admitted.
 
         Each round admits the globally-best head — (priority, deadline,
         arrival) order — among tenants below their slot cap.  Capped
@@ -479,8 +513,12 @@ class ServingEngine:
         its re-admission is a *resume*: the sequence is still resident in
         the arena and needs no prefill — decode continues off the
         existing pages (the eviction-is-a-table-edit property).
+
+        With prefix sharing on, a fresh admission consults the arena's
+        radix index first: a prompt whose prefix is already resident
+        maps those pages read-only and prefills only the suffix.
         """
-        admitted: List[Tuple[int, Request, bool]] = []
+        admitted: List[Tuple[int, Request, bool, int]] = []
         active = self._active_by_tenant_locked()
         now = self._exec.now()
         # expire due requests every sweep, even with the batch full — a
@@ -516,17 +554,35 @@ class ServingEngine:
             active[r.tenant] = active.get(r.tenant, 0) + 1
             seq_id = self._seq_id(r)
             resume = self.kv_mode == "paged" and self.kv.has_sequence(seq_id)
+            start = 0
             if resume:
                 # pages survived the eviction: re-entry is a table edit
                 self.kv.ensure_tokens(seq_id, len(r.prompt) + len(r.tokens))
                 self._resumes += 1
             else:
                 self.kv.add_sequence(seq_id)
-                self.kv.append_tokens(seq_id, len(r.prompt) + len(r.tokens))
+                total = len(r.prompt) + len(r.tokens)
+                if self._sharing:
+                    donor, match = self.kv.lookup_prefix(r.prompt)
+                    # share whole pages *covering* the matched prompt
+                    # prefix (a trailing partial page included — the
+                    # suffix scatter COWs it), but always prefill at
+                    # least one token, and only bother for a full page
+                    match = min(match, len(r.prompt), total - 1)
+                    if donor is not None and match >= self.kv.tokens_per_page:
+                        self.kv.share_prefix(seq_id, donor, match)
+                        start = match
+                        self._prefix_hits += 1
+                        self._prefix_tokens_saved += match
+                        self._note(
+                            "prefix_share", r,
+                            f"donor={donor} tokens={match}"
+                        )
+                self.kv.append_tokens(seq_id, total - start)
             self.admission.slot_acquired(r.tenant)
             self._admitted[r.tenant] = self._admitted.get(r.tenant, 0) + 1
             self._note("admit", r, f"slot={slot}" + (" resume" if resume else ""))
-            admitted.append((slot, r, not resume))
+            admitted.append((slot, r, not resume, start))
         return admitted
 
     # ------------------------------------------------------------- prefill
@@ -547,7 +603,7 @@ class ServingEngine:
             seq = list(r.prompt)
         return np.asarray(seq, np.int32)
 
-    def _prefill_slot(self, slot: int, r: Request) -> None:
+    def _prefill_slot(self, slot: int, r: Request, start: int = 0) -> None:
         """Prefill exactly this request and write it into its slot.
 
         Live slots are untouched: their decode state (and cost already
@@ -577,35 +633,90 @@ class ServingEngine:
             self._state, sub, jnp.asarray(slot, jnp.int32)
         )
 
-    def _prefill_slot_paged(self, slot: int, r: Request) -> None:
+    def _cow_locked(self, seq_id: str, logical: int) -> None:
+        """Copy-on-write one logical page if another sequence maps it.
+
+        Remaps the slot onto a fresh page and clones the device rows so
+        the other mappers keep reading the original bytes — called
+        before *every* write that can land on a shared page (the suffix
+        prefill scatter and the decode append).
+        """
+        if self.kv.page_writable(seq_id, logical):
+            return
+        src, dst = self.kv.cow_page(seq_id, logical)
+        self.kv.swap_store(self._copy_page(
+            self.kv.store,
+            jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+        ))
+        self._note("cow", None, f"seq={seq_id} page {src}->{dst}")
+
+    def _prefill_slot_paged(self, slot: int, r: Request,
+                            start: int = 0) -> None:
         """Prefill this request's K/V rows straight into its arena pages.
 
         The scatter targets come from ``kv.token_positions`` under the
         lock (page allocation happened at admission); the model math runs
         outside it.  Same ownership re-checks as the dense path — a
         chaos eviction mid-prefill discards the work.
+
+        With ``start`` > 0 the first ``start`` positions are shared
+        donor pages: only the suffix runs through the model (attending
+        through the resident prefix rows), any shared page in the write
+        range is COW'd, and the scatter lands on the suffix positions.
         """
         with self._lock:
             if self._slots[slot] is not r:
                 return                     # evicted before the prefill ran
             seq = self._sequence_tokens(r)
-            page_ids, offsets = self.kv.token_positions(
-                self._seq_id(r), 0, seq.size
+            seq_id = self._seq_id(r)
+            if start:
+                # the sequence's own page-table row, bucketed like the
+                # decode table so jit compiles O(log max_pages) variants
+                table = self.kv.page_table(seq_ids=[seq_id])
+                w = max(table.shape[1], 1)
+                bucket = 1 << (w - 1).bit_length()
+                if bucket > table.shape[1]:
+                    table = np.pad(
+                        table, ((0, 0), (0, bucket - table.shape[1])),
+                        constant_values=-1,
+                    )
+        if start:
+            rows, _ = self._prefill_rows_at(
+                self.params, jnp.asarray(seq[None, start:]), self.kv.store,
+                jnp.asarray(table), jnp.asarray(start, jnp.int32),
             )
-        rows, _ = self._prefill_rows(self.params, jnp.asarray(seq[None, :]))
+        else:
+            rows, _ = self._prefill_rows(
+                self.params, jnp.asarray(seq[None, :])
+            )
         with self._lock:
             if self._slots[slot] is not r:
                 return                     # evicted mid-prefill: discard
             self._prefills["incremental"] += 1
-            self._prefill_tokens["incremental"] += int(seq.size)
+            self._prefill_tokens["incremental"] += int(seq.size - start)
             self._prefills_by_request[r.request_id] = (
                 self._prefills_by_request.get(r.request_id, 0) + 1
             )
-            self._note("prefill", r, f"slot={slot} tokens={seq.size}")
+            self._note(
+                "prefill", r,
+                f"slot={slot} tokens={seq.size - start}"
+                + (f" shared={start}" if start else ""),
+            )
+            page = self.kv.tokens_per_page
+            for lp in range(start // page, -(-seq.size // page)):
+                # a divergent write into the trailing shared (partial)
+                # page triggers COW before the scatter lands
+                self._cow_locked(seq_id, lp)
+            page_ids, offsets = self.kv.token_positions(
+                seq_id, start, seq.size - start
+            )
             self.kv.swap_store(self._scatter_rows(
                 self.kv.store, rows,
                 jnp.asarray(page_ids), jnp.asarray(offsets),
             ))
+            if self._sharing:
+                # rows are resident now: this prompt can donate
+                self.kv.register_prefix(seq_id, r.prompt)
 
     def _prefill_full(self) -> None:
         """Rebatching baseline: re-prefill every live slot (the old loop)."""
@@ -654,9 +765,9 @@ class ServingEngine:
                     self._prefill_slot_paged if self.kv_mode == "paged"
                     else self._prefill_slot
                 )
-                for slot, r, need in admitted:
+                for slot, r, need, start in admitted:
                     if need:
-                        prefill(slot, r)
+                        prefill(slot, r, start)
             else:
                 self._prefill_full()
             # sample arena occupancy while sequences are live (lazy
@@ -676,6 +787,13 @@ class ServingEngine:
                 for i, r in live:
                     pos[i] = len(r.prompt) + len(r.tokens)
                     self.kv.ensure_tokens(self._seq_id(r), int(pos[i]) + 1)
+                    if self._sharing:
+                        # the append lands at pos: COW its page first if
+                        # another sequence still maps it
+                        self._cow_locked(
+                            self._seq_id(r),
+                            int(pos[i]) // self.kv.tokens_per_page,
+                        )
                 seq_ids = [
                     self._seq_id(r) if r is not None else None
                     for r in self._slots
@@ -732,7 +850,8 @@ class ServingEngine:
                     # post-code runs: a failing post-processor can never
                     # leak them, and the slot is immediately reusable
                     r.done = True
-                    self.kv.drop_sequence(self._seq_id(r))
+                    if not self._park_locked(r):
+                        self.kv.drop_sequence(self._seq_id(r))
                     self.admission.slot_released(r.tenant)
                     self._slots[i] = None
                     self._note("retire", r, f"slot={i}")
@@ -746,6 +865,50 @@ class ServingEngine:
         if retiring:
             self._exec.notify()
         return len(retiring)
+
+    def _park_locked(self, r: Request) -> bool:
+        """Park a retiring request's sequence as a prefix-cache donor.
+
+        Instead of dropping its pages, the sequence is renamed to a
+        ``~pfxN`` cache entry (``~`` cannot appear in a request-derived
+        seq id) so later prompts can share it — the serving analogue of
+        SEE++'s warm sandbox cache.  Skipped (returns False → caller
+        drops normally) when caching is off, the sequence is poisoned,
+        its prompt never got indexed, or another donor already covers
+        this prompt (parking a duplicate would just pin pages).
+        """
+        if not self._sharing or self.cfg.prefix_cache_seqs <= 0:
+            return False
+        seq_id = self._seq_id(r)
+        if seq_id in self.kv.validate() or seq_id not in self.kv.prefix:
+            return False
+        donor, match = self.kv.lookup_prefix(r.prompt, exclude=(seq_id,))
+        if donor is not None and match >= len(r.prompt) - 1:
+            return False                   # a sharer can't use more anyway
+        name = f"~pfx{next(self._park_seq)}"
+        self.kv.rename_sequence(seq_id, name)
+        self._parked.append(name)
+        self._note("park", r, f"as={name}")
+        while len(self._parked) > self.cfg.prefix_cache_seqs:
+            old = self._parked.popleft()
+            if self.kv.has_sequence(old):  # may be stale after a poison
+                self.kv.drop_sequence(old)
+        return True
+
+    def flush_prefix_cache(self) -> int:
+        """Drop every parked prefix donor; returns how many were freed.
+
+        Live sharers keep the pages they map (the allocator only frees a
+        page at refcount zero), so flushing mid-decode is always safe.
+        """
+        with self._lock:
+            n = 0
+            while self._parked:
+                name = self._parked.popleft()
+                if self.kv.has_sequence(name):
+                    self.kv.drop_sequence(name)
+                    n += 1
+            return n
 
     def _postprocess(self, r: Request) -> None:
         """Dispatch or run the user post-processor for a retired request.
@@ -937,6 +1100,34 @@ class ServingEngine:
         self.telemetry.count("serving.arena_poison")
         return victim
 
+    def poison_shared(self, index: int = 0) -> Optional[str]:
+        """Chaos: poison the ``index``-th sequence whose pages are shared.
+
+        Candidates are live slots plus parked prefix donors (sorted, so
+        deterministic given engine state).  Poison propagates to every
+        co-mapper of the victim's pages — the whole sharing clique
+        evicts and re-prefills, which is exactly the blast radius the
+        chaos suite must prove survivable.  Returns None when nothing
+        is shared right now.
+        """
+        with self._lock:
+            names = [
+                self._seq_id(r) for r in self._slots if r is not None
+            ] + [p for p in self._parked if self.kv.has_sequence(p)]
+            shared = sorted(
+                s for s in names if self.kv.sequence_shared(s)
+            )
+            if not shared:
+                return None
+            victim = shared[index % len(shared)]
+            self.kv.poison_sequence(victim)
+            self._arena_poisons += 1
+            self._trace.append(
+                f"{self._exec.now():.6f} poison_shared seq={victim}"
+            )
+        self.telemetry.count("serving.arena_poison")
+        return victim
+
     def _evict_poisoned(self) -> None:
         # validate under the engine lock: every kv mutation (admit,
         # retire, kill_batch from a watchdog thread) happens under it,
@@ -1010,6 +1201,10 @@ class ServingEngine:
                 "sampled_tokens_total": dict(self._sampled),
                 "kv_pages_allocated_total": self.kv.pages_allocated,
                 "kv_pages_freed_total": self.kv.pages_freed,
+                "prefix_hits_total": self._prefix_hits,
+                "prefix_shared_pages_total": self.kv.shared_pages_total,
+                "prefix_cow_copies_total": self.kv.cow_copies_total,
+                "prefix_prefill_tokens_saved_total": self._prefix_tokens_saved,
             }
 
     def prefill_counts(self) -> Dict[int, int]:

@@ -186,6 +186,10 @@ def check_serving_invariants(engine, requests, *, ctx=""):
     )
 
     # -- KV-page accounting ---------------------------------------------
+    # parked prefix donors legitimately pin pages past the drain; release
+    # them so the zero-leak assertions below check *unaccounted* pages
+    if getattr(engine.cfg, "prefix_cache_seqs", 0):
+        engine.flush_prefix_cache()
     live = engine.kv.seq_lens()
     assert live.size == 0, f"KV sequences leaked{tag}: {live}"
     assert engine.kv.total_runs() == 0, (
@@ -200,6 +204,14 @@ def check_serving_invariants(engine, requests, *, ctx=""):
         f"KV page ledger out of balance{tag}: "
         f"allocated={engine.kv.pages_allocated} "
         f"freed={engine.kv.pages_freed}"
+    )
+    # refcount accounting: no page keeps a mapper, and no dropped
+    # sequence's region is still pinned by a shared page
+    assert engine.kv.live_pages() == 0, (
+        f"pages still mapped after drain{tag}: {engine.kv.live_pages()}"
+    )
+    assert engine.kv.zombie_regions() == [], (
+        f"zombie regions after drain{tag}: {engine.kv.zombie_regions()}"
     )
 
     # -- slot ledger -----------------------------------------------------

@@ -117,6 +117,41 @@ class ToyLM:
             "h_pages": pool["h_pages"].at[page_ids, offsets].set(rows["h"][0]),
         }
 
+    def paged_prefill_at(self, params, tokens, pool, page_table, start):
+        """Suffix prefill from a shared prefix: resume the recurrence at
+        the state row the donor wrote for token ``start - 1``.
+
+        Integer state makes this *exactly* the state a full prefill
+        would reach, so shared-vs-unshared token streams are an equality
+        check, not a tolerance check.
+        """
+        B, S = tokens.shape
+        page = pool["h_pages"].shape[1]
+        width = page_table.shape[1]
+        prev = jnp.maximum(start - 1, 0)
+        prev_page = jnp.maximum(
+            page_table[0, jnp.minimum(prev // page, width - 1)], 0)
+        h0 = jnp.where(
+            start > 0,
+            pool["h_pages"][prev_page, prev % page],
+            jnp.zeros((self.d,), jnp.int32),
+        )
+        h0 = jnp.broadcast_to(h0, (B, self.d))
+
+        def body(h, toks):
+            h = self._advance(params, h, toks)
+            return h, h
+
+        h, hs = jax.lax.scan(body, h0, jnp.swapaxes(tokens, 0, 1))
+        logits = h @ params["out"]
+        return {"h": jnp.swapaxes(hs, 0, 1)}, logits
+
+    def paged_copy_page(self, pool, src, dst):
+        """Clone page ``src`` into ``dst`` (copy-on-write)."""
+        return {
+            "h_pages": pool["h_pages"].at[dst].set(pool["h_pages"][src]),
+        }
+
     def paged_decode_step(self, params, pool, tokens, page_table, pos):
         num_pages, page = pool["h_pages"].shape[:2]
         width = page_table.shape[1]
@@ -138,14 +173,16 @@ class ToyLM:
 
 def make_engine(seed=None, *, max_batch=3, max_seq=48, step_time_s=0.01,
                 quotas=None, incremental=True, executor=None,
-                kv_mode="auto", **kwargs):
+                kv_mode="auto", prefix_sharing=True, prefix_cache_seqs=0,
+                **kwargs):
     """A ServingEngine over ToyLM on a seeded SimExecutor (or ``executor``)."""
     model = ToyLM()
     params = model.init()
     cfg = ServerConfig(
         max_batch=max_batch, max_seq=max_seq, tokens_per_page=4,
         step_time_s=step_time_s, quotas=quotas, incremental=incremental,
-        kv_mode=kv_mode,
+        kv_mode=kv_mode, prefix_sharing=prefix_sharing,
+        prefix_cache_seqs=prefix_cache_seqs,
     )
     executor = executor or SimExecutor(seed=seed or 0)
     engine = ServingEngine(
@@ -154,21 +191,41 @@ def make_engine(seed=None, *, max_batch=3, max_seq=48, step_time_s=0.01,
     return engine, executor
 
 
+#: fixed system-prompt headers for share_prob workloads.  With the test
+#: engines' tokens_per_page=4, the 6-token header splits mid-page (so the
+#: sharer's suffix prefill must COW the partial page) and the 9-token one
+#: spans two full pages plus a partial.
+SHARED_HEADERS = (
+    (7, 3, 11, 19, 2, 23),
+    (5, 1, 29, 13, 17, 4, 8, 30, 12),
+)
+
+
 def make_requests(rng, n, *, tenants=("alice", "bob", "carol"),
-                  vocab=31, deadline_prob=0.15, sample_prob=0.0):
+                  vocab=31, deadline_prob=0.15, sample_prob=0.0,
+                  share_prob=0.0):
     """n deterministic requests derived from ``rng`` (a random.Random).
 
     With ``sample_prob`` > 0 a fraction of requests carry non-greedy
     sampling knobs (temperature scaled to ToyLM's ~1e8 logit range) and
     a per-request seed, so replay determinism is exercised across every
-    sampler family, not just argmax.
+    sampler family, not just argmax.  With ``share_prob`` > 0 a fraction
+    of prompts open with a common header from :data:`SHARED_HEADERS`
+    (cross-tenant!), so prefix sharing and copy-on-write fire.
     """
     reqs = []
     for i in range(n):
-        prompt = np.asarray(
-            [rng.randrange(vocab) for _ in range(rng.randint(2, 6))],
-            np.int32,
-        )
+        # short-circuit so share_prob=0 consumes no rng draw (existing
+        # seeded workloads must stay byte-identical)
+        if share_prob and rng.random() < share_prob:
+            header = list(rng.choice(SHARED_HEADERS))
+            tail = [rng.randrange(vocab) for _ in range(rng.randint(1, 4))]
+            prompt = np.asarray(header + tail, np.int32)
+        else:
+            prompt = np.asarray(
+                [rng.randrange(vocab) for _ in range(rng.randint(2, 6))],
+                np.int32,
+            )
         sampled = rng.random() < sample_prob
         reqs.append(Request(
             prompt=prompt,

@@ -1,0 +1,242 @@
+"""Sharing-core tests: the radix index, refcounted pages and COW.
+
+The chaos suite proves sharing survives kills and poison at scale; this
+file pins the *mechanism* — where COW fires (page boundary vs mid-page
+divergence), that a refcount hitting zero frees a page exactly once,
+that evict-and-resume works while holding shared pages, and that a
+forged third-party collision is still detected on a page that is
+*legitimately* multi-owner (the invariant PR 5 hardened must survive
+sharing, or cross-tenant mapping quietly disables corruption detection).
+"""
+
+import random
+
+import numpy as np
+from helpers.invariants import check_serving_invariants
+from helpers.serving import make_engine, make_requests
+
+from repro.core.arena import PagedKVAllocator, PrefixIndex
+from repro.core.mm import MMConfig
+
+G = 4096
+PAGE = 16
+
+
+def _kv(**kwargs):
+    return PagedKVAllocator(
+        MMConfig.modern(granule=G), tokens_per_page=PAGE,
+        token_bytes=G // PAGE, **kwargs,
+    )
+
+
+def _fault_forged_page(kv, seq_id, page):
+    """Fault one page for ``seq_id`` whose tracked physical index is
+    forged to ``page`` (same idiom as test_arena: the DMA-scribble /
+    corrupt-page-table corruption validate() exists to catch)."""
+    real = kv.arena.physical_pages
+    kv.arena.physical_pages = lambda name: (
+        np.asarray([page], np.int32) if name == seq_id else real(name)
+    )
+    try:
+        kv.append_tokens(seq_id, kv.tokens_per_page)
+    finally:
+        kv.arena.physical_pages = real
+
+
+# ------------------------------------------------------------ the index
+
+
+def test_prefix_index_longest_match_and_tail_extension():
+    idx = PrefixIndex(4)
+    idx.insert("a", [1, 2, 3, 4, 5, 6, 7, 8, 9, 10])
+
+    def live(_):
+        return True
+
+    assert idx.lookup([1, 2, 3, 4, 5, 6, 7, 8, 9, 10], live) == ("a", 10)
+    # mid-tail divergence: both full pages + 1 tail token match
+    assert idx.lookup([1, 2, 3, 4, 5, 6, 7, 8, 9, 99], live) == ("a", 9)
+    # divergence inside the second page: radix stops at the page edge,
+    # token-level extension walks into the partial edge match
+    assert idx.lookup([1, 2, 3, 4, 5, 6, 99, 8], live) == ("a", 6)
+    assert idx.lookup([9, 9, 9, 9], live) == (None, 0)
+    # ineligible donors are invisible even on an exact match
+    assert idx.lookup([1, 2, 3, 4], lambda s: False) == (None, 0)
+
+
+def test_prefix_index_remove_and_rename():
+    idx = PrefixIndex(4)
+    idx.insert("a", [1, 2, 3, 4, 5])
+    idx.rename("a", "~pfx0")
+    assert "a" not in idx and "~pfx0" in idx
+    assert idx.lookup([1, 2, 3, 4, 5], lambda s: True) == ("~pfx0", 5)
+    idx.remove("~pfx0")
+    assert idx.lookup([1, 2, 3, 4], lambda s: True) == (None, 0)
+
+
+# --------------------------------------------------- refcount semantics
+
+
+def test_refcount_zero_frees_exactly_once():
+    """Two mappers of the same pages: dropping the donor frees nothing
+    (the sharer still maps), dropping the sharer frees each page exactly
+    once — never zero times (leak), never twice (double free)."""
+    kv = _kv()
+    kv.add_sequence("donor")
+    kv.append_tokens("donor", 2 * PAGE)
+    assert kv.pages_allocated == 2
+    kv.add_sequence("sharer")
+    kv.share_prefix("sharer", "donor", 2 * PAGE)
+    assert kv.shared_pages_total == 2
+    assert kv.pages_allocated == 2         # shares fault nothing
+
+    kv.drop_sequence("donor")              # sharer still maps both pages
+    assert kv.pages_freed == 0
+    assert kv.live_pages() == 2
+    assert kv.zombie_regions()             # donor's region pinned, not freed
+    assert not kv.has_sequence("donor")
+
+    kv.drop_sequence("sharer")             # refcount → 0: free exactly once
+    assert kv.pages_freed == 2
+    assert kv.live_pages() == 0
+    assert kv.zombie_regions() == []
+    assert kv.pages_allocated == kv.pages_freed
+
+
+def test_cow_unshares_one_page_and_keeps_the_donor_mapping():
+    kv = _kv()
+    kv.add_sequence("donor")
+    kv.append_tokens("donor", 2 * PAGE)
+    donor_pages = [int(p) for p in kv.sequence("donor").pages]
+    kv.add_sequence("sharer")
+    kv.share_prefix("sharer", "donor", PAGE + 2)   # page 0 + partial page 1
+    assert kv.page_writable("sharer", 0) is False
+    src, dst = kv.cow_page("sharer", 1)
+    assert src == donor_pages[1] and dst not in donor_pages
+    assert kv.cow_copies_total == 1
+    assert kv.pages_allocated == 3                 # the COW dst faulted
+    # donor still maps its original page; sharer now owns the copy
+    assert [int(p) for p in kv.sequence("donor").pages] == donor_pages
+    assert int(kv.sequence("sharer").pages[1]) == dst
+    assert kv.page_writable("sharer", 1) is True
+    kv.drop_sequence("donor")
+    kv.drop_sequence("sharer")
+    assert kv.pages_allocated == kv.pages_freed == 3
+
+
+def test_third_party_collision_detected_on_legitimately_shared_page():
+    """Regression: a page with two *legitimate* mappers (prefix sharing)
+    must still trip collision detection when a third sequence's fault is
+    forged onto it — multi-owner pages must not become a blind spot."""
+    kv = _kv()
+    kv.add_sequence("a")
+    kv.append_tokens("a", PAGE)
+    page = int(kv.arena.physical_pages("a")[0])
+    kv.add_sequence("b")
+    kv.share_prefix("b", "a", PAGE)
+    assert kv.validate() == []             # sharing alone is not a collision
+
+    kv.add_sequence("c")
+    _fault_forged_page(kv, "c", page)      # forged third claimant
+    assert kv.validate() == ["a", "b", "c"]
+
+
+def test_poison_propagates_to_every_co_mapper():
+    kv = _kv()
+    kv.add_sequence("a")
+    kv.append_tokens("a", PAGE)
+    kv.register_prefix("a", list(range(PAGE)))
+    kv.add_sequence("b")
+    kv.share_prefix("b", "a", PAGE)
+    kv.poison_sequence("b")
+    assert kv.validate() == ["a", "b"]     # the donor's page is the
+    # sharer's page: both are corrupt, and neither may donate again
+    assert kv.lookup_prefix(list(range(PAGE)))[0] is None
+
+
+# --------------------------------------------- engine divergence & COW
+
+
+def _run_pair(header, *, seeds=(50, 51), cache=0):
+    """Donor then sharer with a common ``header`` prompt prefix; returns
+    (engine, {request_id: tokens})."""
+    engine, _ = make_engine(
+        seed=17, max_batch=2, step_time_s=0.01, prefix_cache_seqs=cache,
+    )
+    reqs = []
+    for rid, (seed, tail) in enumerate(zip(seeds, ([9, 21], [4, 16, 2]))):
+        r = make_requests(random.Random(seed), 1, deadline_prob=0.0)[0]
+        r.prompt = np.asarray(list(header) + tail, np.int32)
+        r.request_id, r.max_new_tokens = rid, 6
+        reqs.append(r)
+    engine.submit(reqs[0])
+    engine.step()                          # donor prefilled + indexed
+    engine.submit(reqs[1])
+    engine.drain(timeout=60)
+    check_serving_invariants(engine, reqs, ctx=f"header={len(header)}")
+    return engine, {r.request_id: tuple(r.tokens) for r in reqs}
+
+
+def test_divergence_at_page_boundary_needs_no_cow():
+    """An 8-token header at tokens_per_page=4 shares two *full* pages;
+    the sharer's first own write starts a fresh page, so no COW fires."""
+    engine, _ = _run_pair((7, 3, 11, 19, 2, 23, 6, 28))
+    stats = engine.serving_stats()
+    assert stats["prefix_hits_total"] == 1
+    assert stats["prefix_shared_pages_total"] == 2
+    assert stats["prefix_prefill_tokens_saved_total"] == 8
+    assert stats["prefix_cow_copies_total"] == 0
+
+
+def test_divergence_mid_page_cows_the_partial_page():
+    """A 6-token header shares 1.5 pages: the sharer's suffix prefill
+    writes into the shared partial page, which must COW exactly once —
+    and the donor's stream must be exactly what an unshared run decodes
+    (its page was never scribbled)."""
+    engine, toks = _run_pair((7, 3, 11, 19, 2, 23))
+    stats = engine.serving_stats()
+    assert stats["prefix_hits_total"] == 1
+    assert stats["prefix_shared_pages_total"] == 2
+    assert stats["prefix_prefill_tokens_saved_total"] == 6
+    assert stats["prefix_cow_copies_total"] == 1
+
+    # same workload with sharing disabled: byte-identical streams
+    engine2, _ = make_engine(seed=17, max_batch=2, step_time_s=0.01,
+                             prefix_sharing=False)
+    reqs = []
+    for rid, (seed, tail) in enumerate(zip((50, 51), ([9, 21], [4, 16, 2]))):
+        r = make_requests(random.Random(seed), 1, deadline_prob=0.0)[0]
+        r.prompt = np.asarray([7, 3, 11, 19, 2, 23] + tail, np.int32)
+        r.request_id, r.max_new_tokens = rid, 6
+        reqs.append(r)
+    engine2.submit(reqs[0])
+    engine2.step()
+    engine2.submit(reqs[1])
+    engine2.drain(timeout=60)
+    assert engine2.serving_stats()["prefix_hits_total"] == 0
+    assert {r.request_id: tuple(r.tokens) for r in reqs} == toks
+
+
+def test_evict_and_resume_while_holding_shared_pages():
+    """A batch kill between the sharer's admission and completion: both
+    sequences resume off their pages (donor's shared, sharer's mix of
+    shared + own) with zero extra prefills."""
+    engine, _ = make_engine(seed=19, max_batch=2, step_time_s=0.01)
+    header = [5, 1, 29, 13, 17, 4, 8, 30]
+    reqs = []
+    for rid, (seed, tail) in enumerate(zip((60, 61), ([9], [22, 3]))):
+        r = make_requests(random.Random(seed), 1, deadline_prob=0.0)[0]
+        r.prompt = np.asarray(header + tail, np.int32)
+        r.request_id, r.max_new_tokens = rid, 8
+        reqs.append(r)
+    engine.submit(reqs[0])
+    engine.step()
+    engine.submit(reqs[1])
+    engine.step()                          # sharer shares + prefills
+    assert engine.serving_stats()["prefix_hits_total"] == 1
+    engine.kill_batch()
+    engine.drain(timeout=60)
+    stats = engine.serving_stats()
+    assert stats["resumed_total"] == 2     # both resumed, no re-prefill
+    assert stats["prefill_sequences_total"]["incremental"] == 2
+    check_serving_invariants(engine, reqs, ctx="evict-resume-shared")

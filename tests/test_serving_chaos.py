@@ -28,9 +28,10 @@ import os
 import random
 from collections import Counter
 
+import numpy as np
 import pytest
 from helpers.invariants import check_serving_invariants, check_serving_replay
-from helpers.serving import make_engine, make_requests
+from helpers.serving import SHARED_HEADERS, make_engine, make_requests
 
 from repro.core import TenantQuota
 from repro.runtime.fault import FailureInjector
@@ -62,9 +63,11 @@ def chaos_run(seed, kv_mode="paged"):
     rng = random.Random(seed * 9127 + 5)
     engine, sim = make_engine(
         seed=seed, max_batch=3, max_seq=48, step_time_s=0.01, quotas=QUOTAS,
-        kv_mode=kv_mode,
+        kv_mode=kv_mode, prefix_cache_seqs=2,
     )
-    reqs = make_requests(rng, 10, deadline_prob=0.15, sample_prob=0.5)
+    reqs = make_requests(
+        rng, 10, deadline_prob=0.15, sample_prob=0.5, share_prob=0.4,
+    )
 
     # -- fault plan (batch kills + arena poison at virtual times) -------
     injector = FailureInjector()
@@ -72,6 +75,10 @@ def chaos_run(seed, kv_mode="paged"):
         injector.kill_batch_at_t.append(round(rng.uniform(0.02, 0.35), 3))
     for _ in range(rng.randrange(3)):      # 0-2 arena poisonings
         injector.poison_arena_at_t[round(rng.uniform(0.02, 0.35), 3)] = (
+            rng.randrange(3)
+        )
+    for _ in range(rng.randrange(2)):      # 0-1 shared-sequence poisonings
+        injector.poison_shared_at_t[round(rng.uniform(0.02, 0.35), 3)] = (
             rng.randrange(3)
         )
     injector.arm_serving(sim, engine)
@@ -99,6 +106,8 @@ def chaos_run(seed, kv_mode="paged"):
         "expired": sum(stats["expired_total"].values()),
         "completed": sum(stats["completed_total"].values()),
         "clean": sum(1 for r in reqs if r.error is None),
+        "prefix_hits": stats["prefix_hits_total"],
+        "cow_copies": stats["prefix_cow_copies_total"],
     })
     return trace, results, counters
 
@@ -138,8 +147,14 @@ def test_serving_chaos_sweep_holds_all_invariants(kv_mode):
             # batch kills must have exercised the resume path (pages
             # kept, no re-prefill); dense mode by construction cannot
             assert totals["resumes"] > 0, totals
+            # the shared-header workload must actually share prefixes
+            # and hit the divergent-write COW path, or the sweep is not
+            # exercising the sharing plane at all
+            assert totals["prefix_hits"] > 0, totals
+            assert totals["cow_copies"] > 0, totals
         else:
             assert totals["resumes"] == 0, totals
+            assert totals["prefix_hits"] == 0, totals
 
 
 @pytest.mark.parametrize("kv_mode", KV_MODES)
@@ -254,6 +269,110 @@ def test_eviction_does_not_re_expire_an_admitted_deadline():
     assert r.admitted_at == 0.0
     assert any(" evict:kill " in ln for ln in engine.trace())
     check_serving_invariants(engine, [r], ctx="evict-not-expire")
+
+
+def _shared_pair(seed_a=20, seed_b=21, *, new_tokens=8):
+    """Two requests opening with the same system-prompt header (6 tokens
+    = 1.5 pages at tokens_per_page=4, so the sharer must COW the partial
+    second page before its suffix prefill lands)."""
+    header = list(SHARED_HEADERS[0])
+    out = []
+    for rid, (seed, tail) in enumerate(
+        ((seed_a, [3, 9]), (seed_b, [14, 2, 6]))
+    ):
+        r = make_requests(random.Random(seed), 1, deadline_prob=0.0)[0]
+        r.prompt = np.asarray(header + tail, np.int32)
+        r.request_id, r.max_new_tokens = rid, new_tokens
+        out.append(r)
+    return out
+
+
+def test_poison_shared_sequence_evicts_clique_and_recovers():
+    """Poisoning a sequence whose pages are shared propagates to every
+    co-mapper (the whole clique re-prefills — resuming any of them off
+    the corrupt page would serve poisoned KV), yet every request still
+    finishes with exactly the token stream of an unpoisoned run, and the
+    page ledger balances at drain."""
+
+    def run(poison):
+        engine, _ = make_engine(
+            seed=11, max_batch=3, step_time_s=0.01, prefix_cache_seqs=2,
+        )
+        reqs = _shared_pair()
+        engine.submit(reqs[0])
+        engine.step()                      # donor prefilled + indexed
+        engine.submit(reqs[1])
+        engine.step()                      # sharer maps the donor's pages
+        assert engine.serving_stats()["prefix_hits_total"] == 1
+        if poison:
+            victim = engine.poison_shared(0)
+            assert victim == "req0"        # sorted shared candidates
+        engine.drain(timeout=60)
+        check_serving_invariants(engine, reqs, ctx=f"poison={poison}")
+        return engine, {r.request_id: tuple(r.tokens) for r in reqs}
+
+    poisoned, ptoks = run(poison=True)
+    _, ctoks = run(poison=False)
+    assert ptoks == ctoks                  # survivors byte-identical
+    stats = poisoned.serving_stats()
+    assert stats["arena_poison_total"] == 1
+    assert stats["evicted_total"] == 2     # donor AND sharer evicted
+    assert sum(
+        1 for ln in poisoned.trace() if " evict:poison " in ln
+    ) == 2
+
+
+def test_batch_kill_with_shared_pages_resumes_the_clique():
+    """A batch kill under sequences sharing pages evicts the slots only:
+    both resume off their (shared) pages with zero extra prefills and
+    the streams match the unkilled run — eviction stays free even when
+    the page has two mappers."""
+
+    def run(kill):
+        engine, _ = make_engine(seed=12, max_batch=2, step_time_s=0.01)
+        reqs = _shared_pair(30, 31)
+        engine.submit(reqs[0])
+        engine.step()
+        engine.submit(reqs[1])
+        engine.step()
+        engine.step()
+        if kill:
+            engine.kill_batch()
+        engine.drain(timeout=60)
+        check_serving_invariants(engine, reqs, ctx=f"kill={kill}")
+        return engine, {r.request_id: tuple(r.tokens) for r in reqs}
+
+    killed, ktoks = run(kill=True)
+    clean, ctoks = run(kill=False)
+    assert ktoks == ctoks
+    kstats, cstats = killed.serving_stats(), clean.serving_stats()
+    assert kstats["resumed_total"] == kstats["evicted_total"] == 2
+    assert kstats["prefill_sequences_total"] == (
+        cstats["prefill_sequences_total"]
+    )
+
+
+def test_parked_donor_shares_across_an_idle_gap():
+    """With ``prefix_cache_seqs`` > 0 a retired request's pages survive
+    as a parked donor: a later request with the same header shares them
+    even though nothing is live in between (the warm-cache analogue),
+    and ``flush_prefix_cache`` releases them on demand."""
+    engine, _ = make_engine(
+        seed=13, max_batch=2, step_time_s=0.01, prefix_cache_seqs=1,
+    )
+    first, second = _shared_pair(40, 41)
+    engine.submit(first)
+    engine.drain(timeout=60)               # retired → parked, not dropped
+    assert engine.kv.live_pages() > 0
+    engine.submit(second)
+    engine.drain(timeout=60)
+    stats = engine.serving_stats()
+    assert stats["prefix_hits_total"] == 1
+    assert stats["prefix_prefill_tokens_saved_total"] == 6
+    assert engine.flush_prefix_cache() == 1
+    assert engine.kv.live_pages() == 0
+    assert engine.kv.pages_allocated == engine.kv.pages_freed
+    check_serving_invariants(engine, [first, second], ctx="parked-donor")
 
 
 def test_poison_live_targets_sorted_live_index():
