@@ -20,13 +20,17 @@ chaos:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_FLAGS) \
 		tests/test_scheduler_chaos.py
 
-# serving-plane chaos sweep (batch kills + KV-arena poison) over a
-# rotating seed window; CI runs the fixed window seeds 0..59 inside
-# tier-1.  Replay one failure with
-# CHAOS_SERVE_SEED_START=<seed> CHAOS_SERVE_SEED_COUNT=1
+# serving-plane chaos sweep (batch kills + KV-arena poison, plus the
+# mesh-fault plane: replica kills + silent mesh-member death) over
+# rotating seed windows; CI runs the fixed windows (serve 0..59, mesh
+# 0..19) inside tier-1.  Replay one failure with
+# CHAOS_SERVE_SEED_START=<seed> CHAOS_SERVE_SEED_COUNT=1 (or the
+# MESH_CHAOS_SEED_* pair for the mesh sweep)
 serve-chaos:
 	CHAOS_SERVE_SEED_START=$$(( ($$(date +%s) / 86400 % 5000) * 120 )) \
 	CHAOS_SERVE_SEED_COUNT=120 \
+	MESH_CHAOS_SEED_START=$$(( ($$(date +%s) / 86400 % 5000) * 40 )) \
+	MESH_CHAOS_SEED_COUNT=40 \
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_FLAGS) \
 		tests/test_serving_chaos.py
 

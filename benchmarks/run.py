@@ -5,6 +5,12 @@ Prints ``name,value,derived`` CSV rows after each bench's own report.
 
 from __future__ import annotations
 
+from repro.launch.mesh import simulate_host_devices
+
+# the serve bench's tensor-parallel sweep needs a simulated device mesh,
+# and XLA freezes the host device count at the first computation — so
+# the split must happen before ANY bench touches a device
+simulate_host_devices(4)
 
 
 def main() -> None:
@@ -92,6 +98,8 @@ def main() -> None:
          "reduced-model CPU decode"),
         ("serve_paged_speedup_x", sv["paged_speedup_x"],
          "paged vs dense KV at the largest (slots, max_seq) cell"),
+        ("serve_shard_speedup_x", sv["shard_speedup_x"],
+         "mesh-4 vs mesh-1 TP decode; simulated shards share one core"),
     ]
 
     print("=" * 72)

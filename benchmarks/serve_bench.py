@@ -29,18 +29,26 @@ must show the gap growing.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import hashlib
 import json
 import time
 from typing import Dict, List, Optional
 
-import jax
-import numpy as np
+from repro.launch.mesh import make_serving_mesh, simulate_host_devices
 
-from repro.configs import get_reduced
-from repro.models import build_model
-from repro.runtime import Request, ServingEngine
-from repro.runtime.serve_loop import ServerConfig
+# before the first computation: split the host CPU into 4 simulated XLA
+# devices so the shard sweep has a mesh to run on (a no-op if XLA_FLAGS
+# already pins a device count — e.g. under the test conftest)
+simulate_host_devices(4)
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.runtime import Request, ServingEngine  # noqa: E402
+from repro.runtime.serve_loop import ServerConfig  # noqa: E402
 
 
 def _requests(n: int, prompt_len: int, new_tokens: int, long_every: int,
@@ -181,6 +189,78 @@ def run_paged_sweep(arch: str, *, prompt_len: int = 8,
     return rows
 
 
+def _shard_cell(arch: str, *, mesh_devices: int, slots: int = 2,
+                max_seq: int = 48, requests: int = 6, prompt_len: int = 8,
+                new_tokens: int = 6) -> float:
+    """Tokens/s for one tensor-parallel cell (``mesh_devices=0`` = no mesh).
+
+    Uses a TP-capable head layout (4 query heads over 4 KV heads) so the
+    mesh sizes 1/2/4 all divide the head axes — the stock reduced config
+    has a single KV head and would fall back to the unsharded path.
+    """
+    cfg = dataclasses.replace(
+        get_reduced(arch), num_heads=4, num_kv_heads=4, head_dim=16,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    page = ServerConfig.tokens_per_page
+    pool = 4 * slots * (-(-(prompt_len + new_tokens + 1) // page) + 1)
+    engine = ServingEngine(
+        model, params,
+        ServerConfig(max_batch=slots, max_seq=max_seq, incremental=True,
+                     kv_mode="paged", kv_pool_pages=pool),
+        mesh=make_serving_mesh(mesh_devices) if mesh_devices else None,
+    )
+    expect_shards = mesh_devices if mesh_devices else 1
+    assert engine.serving_stats()["tp_shards"] == expect_shards
+    for r in _requests(slots, prompt_len, new_tokens, 0, 0, cfg.vocab_size):
+        r.request_id += 10_000
+        engine.submit(r)
+    engine.drain()
+
+    reqs = _requests(requests, prompt_len, new_tokens, 0, 0, cfg.vocab_size)
+    t0 = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
+    engine.drain()
+    wall = time.perf_counter() - t0
+    assert all(r.error is None for r in reqs)
+    assert engine.kv.pages_allocated == engine.kv.pages_freed
+    return sum(len(r.tokens) for r in reqs) / wall
+
+
+def run_shard_sweep(arch: str) -> Dict[str, object]:
+    """Tensor-parallel paged decode over mesh sizes 1/2/4.
+
+    The 1-device mesh row must land within noise of the no-mesh baseline
+    (shard_map over one device is the same computation, so a real gap
+    means the TP plumbing itself costs throughput).  ``shard_speedup_x``
+    is largest-mesh over 1-device-mesh tokens/s — on a *simulated* CPU
+    mesh the shards timeshare one physical core, so this is a plumbing-
+    overhead measurement (expected near or below 1x), not a scaling
+    claim; on real multi-chip hardware the same sweep measures scaling.
+    """
+    base = _shard_cell(arch, mesh_devices=0)
+    rows = []
+    for n in (1, 2, 4):
+        if n > len(jax.devices()):
+            continue
+        rows.append({
+            "mesh_devices": n,
+            "tokens_per_s": _shard_cell(arch, mesh_devices=n),
+        })
+    ratio1 = rows[0]["tokens_per_s"] / base
+    assert 1 / 3 <= ratio1 <= 3, (
+        f"1-device mesh row diverged from the no-mesh baseline: "
+        f"{ratio1:.2f}x"
+    )
+    return {
+        "no_mesh_tokens_per_s": base,
+        "rows": rows,
+        "shard_speedup_x": rows[-1]["tokens_per_s"] / rows[0]["tokens_per_s"],
+    }
+
+
 def run_sim_determinism(arch: str, seed: int = 7) -> str:
     """Engine trace under SimExecutor must be a pure function of the seed."""
     from repro.core import SimExecutor
@@ -245,6 +325,8 @@ def main(
         + ", ".join(f"{r['speedup_x']:.2f}x" for r in sweep)
     )
 
+    shard = run_shard_sweep(arch)
+
     digest = run_sim_determinism(arch)
 
     print("# serve_bench")
@@ -265,6 +347,15 @@ def main(
               f"-> {row['speedup_x']:.2f}x")
     print(f"  paged speedup       : {paged_speedup:.2f}x at the largest "
           f"cell (gap grows along the sweep)")
+    print("  tensor-parallel shard sweep (simulated mesh):")
+    print(f"    no mesh           : "
+          f"{shard['no_mesh_tokens_per_s']:8.1f} tok/s")
+    for row in shard["rows"]:
+        print(f"    mesh={row['mesh_devices']}            : "
+              f"{row['tokens_per_s']:8.1f} tok/s")
+    print(f"  shard speedup       : {shard['shard_speedup_x']:.2f}x "
+          f"(mesh-{shard['rows'][-1]['mesh_devices']} vs mesh-1; "
+          f"simulated shards timeshare one core)")
     print(f"  sim determinism     : 3 runs -> trace sha256 "
           f"{digest[:16]}... identical")
 
@@ -280,6 +371,8 @@ def main(
         "prefill_reduction_x": prefill_saved,
         "paged_speedup_x": paged_speedup,
         "paged_sweep": sweep,
+        "shard_speedup_x": shard["shard_speedup_x"],
+        "shard_sweep": shard,
         "sim_trace_sha256": digest,
     }
     if json_out:

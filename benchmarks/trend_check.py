@@ -55,6 +55,14 @@ TRACKED = (
     # this row catches the slow drift (e.g. the radix lookup matching
     # ever-shorter prefixes) that a binary floor never would
     ("BENCH_prefix.json", "prefix_prefill_tokens_saved_x", "higher", 1.0),
+    # shard_speedup_x is mesh-4 over mesh-1 TP decode on a *simulated*
+    # CPU mesh: the four shards timeshare one physical core, so the
+    # ratio measures shard_map plumbing overhead (near 1x), not scaling,
+    # and collective-scheduling jitter swings it hard run to run.  The
+    # generous scale still catches the failure this row exists for —
+    # the sharded path collapsing (e.g. a psum falling onto the host
+    # transfer path) to a small fraction of the unsharded throughput.
+    ("BENCH_serve.json", "shard_speedup_x", "higher", 3.0),
 )
 
 

@@ -309,6 +309,11 @@ class PagedKVAllocator:
         # ...}) bound by the engine when the arena is the physical
         # backing store for decode; the allocator only hands it around
         self._store: Any = None
+        # tensor-parallel serving: the engine sets this to the mesh size
+        # when the bound store is head-sharded — every page table entry
+        # then addresses tp_shards physical slices of that page, one per
+        # device, and per-shard byte accounting divides accordingly
+        self.tp_shards = 1
 
     # -- device store (the physical page tensors) --------------------------
 
@@ -551,6 +556,33 @@ class PagedKVAllocator:
     def live_pages(self) -> int:
         """Physical pages with at least one mapper (zero after drain)."""
         return len(self._mappers)
+
+    def sequence_ids(self) -> List[str]:
+        """Every resident sequence (live, evicted-but-resident, parked).
+
+        Sorted, so replica evacuation drops them in deterministic order.
+        """
+        return sorted(self._tokens)
+
+    def shard_stats(self) -> Dict[str, int]:
+        """Per-device view of the page ledger under tensor parallelism.
+
+        Page allocation is a table edit shared by every shard (one fault
+        maps the page on all ``tp_shards`` devices at once), so the
+        *counts* are identical per shard and leak checks apply shard-
+        for-shard; only the bytes divide.  ``live_pages_per_shard`` must
+        be zero after drain on every device — a leak on any shard is a
+        leak, there is no averaging it away.
+        """
+        per_shard_bytes = self.arena.page_bytes // max(self.tp_shards, 1)
+        return {
+            "tp_shards": self.tp_shards,
+            "pages_allocated_per_shard": self.pages_allocated,
+            "pages_freed_per_shard": self.pages_freed,
+            "live_pages_per_shard": self.live_pages(),
+            "page_bytes_per_shard": per_shard_bytes,
+            "live_bytes_per_shard": self.live_pages() * per_shard_bytes,
+        }
 
     def zombie_regions(self) -> List[str]:
         """Regions of dropped sequences still pinned by shared pages."""

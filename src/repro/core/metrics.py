@@ -113,6 +113,7 @@ class MetricsRegistry:
         self._admissions: List[Any] = []
         self._schedulers: List[Any] = []
         self._servings: List[Any] = []
+        self._replica_sets: List[Any] = []
         self._gauges: List[Tuple[str, str, Callable[[], float]]] = []
         self._lock = threading.Lock()
 
@@ -149,6 +150,17 @@ class MetricsRegistry:
         with self._lock:
             if engine not in self._servings:
                 self._servings.append(engine)
+        return self
+
+    def register_replicas(self, replica_set: Any) -> "MetricsRegistry":
+        """Export a :class:`~repro.runtime.replica.ReplicaSet` as the
+        ``seepp_serving_replica_*`` / ``seepp_serving_mesh_*`` families
+        (per-replica liveness/load/TP width, re-home and mesh-fault
+        counters).  Register the member engines individually too if the
+        per-tenant serving families should aggregate across them."""
+        with self._lock:
+            if replica_set not in self._replica_sets:
+                self._replica_sets.append(replica_set)
         return self
 
     def register_gauge(
@@ -204,6 +216,7 @@ class MetricsRegistry:
             admissions = list(self._admissions)
             schedulers = list(self._schedulers)
             servings = list(self._servings)
+            replica_sets = list(self._replica_sets)
             gauges = list(self._gauges)
 
         fams: List[_Family] = []
@@ -265,6 +278,10 @@ class MetricsRegistry:
         # --- serving engine -----------------------------------------------
         if servings:
             fams.extend(self._serving_families(servings))
+
+        # --- replica sets -------------------------------------------------
+        if replica_sets:
+            fams.extend(self._replica_families(replica_sets))
 
         # --- ad-hoc gauges ------------------------------------------------
         for name, help_text, fn in gauges:
@@ -627,6 +644,62 @@ class MetricsRegistry:
                 {"method": method},
             )
         fams.append(fam)
+        return fams
+
+    def _replica_families(self, replica_sets: List[Any]) -> List[_Family]:
+        """``seepp_serving_replica_*`` / ``seepp_serving_mesh_*`` families.
+
+        Per-replica series carry a ``replica`` label (index within the
+        set); set-level mesh-fault counters are summed across registered
+        sets.  Everything is read off ``replica_stats()`` at scrape time.
+        """
+        stats = [rs.replica_stats() for rs in replica_sets]
+        fams: List[_Family] = []
+        per_replica = [
+            ("alive", "serving_replica_alive", "gauge",
+             "Replica liveness (0 = evacuated or mesh member dead)."),
+            ("tp_shards", "serving_replica_tp_shards", "gauge",
+             "Tensor-parallel width of the replica's paged decode."),
+            ("active", "serving_replica_active_slots", "gauge",
+             "Decode slots held on the replica."),
+            ("queued", "serving_replica_queue_depth", "gauge",
+             "Requests queued for admission on the replica."),
+            ("completed", "serving_replica_completed_total", "counter",
+             "Requests completed on the replica."),
+            ("evictions", "serving_replica_evicted_total", "counter",
+             "Sequences evicted on the replica (chaos + evacuation)."),
+            ("live_pages", "serving_replica_live_pages", "gauge",
+             "KV pages live on the replica's (per-shard) page pool."),
+        ]
+        for key, name, kind, text in per_replica:
+            fam = _Family(self._n(name), kind, text)
+            idx = 0
+            for s in stats:
+                for per in s["per_replica"]:
+                    fam.add(per[key], {"replica": str(idx)})
+                    idx += 1
+            fams.append(fam)
+        scalars = [
+            ("rehomed_total", "serving_replica_rehomed_total", "counter",
+             "Requests re-homed onto a surviving replica after a death."),
+            ("replica_kills", "serving_replica_kills_total", "counter",
+             "Replica processes killed loudly (chaos)."),
+            ("orphaned", "serving_replica_orphaned_total", "counter",
+             "Evacuated requests with no surviving replica to take them."),
+            ("replicas_alive", "serving_mesh_replicas_alive", "gauge",
+             "Replicas currently serving."),
+            ("mesh_members_dead", "serving_mesh_members_dead", "gauge",
+             "Mesh members currently dead and not yet reaped."),
+            ("mesh_member_kills", "serving_mesh_member_kills_total",
+             "counter", "Mesh members killed silently (chaos)."),
+            ("heartbeat_reaps", "serving_mesh_heartbeat_reaps_total",
+             "counter",
+             "Silent replicas reaped by the heartbeat monitor."),
+        ]
+        for key, name, kind, text in scalars:
+            fam = _Family(self._n(name), kind, text)
+            fam.add(sum(s[key] for s in stats))
+            fams.append(fam)
         return fams
 
     # -------------------------------------------------------------- output

@@ -12,13 +12,61 @@ what DCN can sustain).
 
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "MESH_AXES"]
+__all__ = [
+    "make_production_mesh",
+    "make_host_mesh",
+    "make_serving_mesh",
+    "simulate_host_devices",
+    "MESH_AXES",
+    "SERVING_AXIS",
+]
 
 MESH_AXES = ("data", "model")
+
+#: the tensor-parallel axis sharded serving decodes over (1-D mesh)
+SERVING_AXIS = "model"
+
+
+def simulate_host_devices(n: int = 4) -> None:
+    """Split the host CPU into ``n`` XLA devices (bayespec-style).
+
+    Appends ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``,
+    which XLA reads at backend initialization — call this before the
+    first computation (importing jax is fine; using a device is not).
+    A pre-existing device-count flag is respected, so nesting harnesses
+    (conftest → bench → example) never fight over the count.
+    """
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
+def make_serving_mesh(devices: Optional[int] = None, *, offset: int = 0):
+    """1-D ``("model",)`` mesh for tensor-parallel serving.
+
+    Uses ``devices`` host devices starting at ``offset`` — replicas can
+    carve disjoint sub-meshes out of one simulated host (replica 0 on
+    devices 0–1, replica 1 on 2–3, ...).
+    """
+    avail = jax.devices()
+    n = devices if devices is not None else len(avail)
+    if n < 1:
+        raise ValueError(f"serving mesh needs at least 1 device, got {n}")
+    if offset + n > len(avail):
+        raise ValueError(
+            f"need devices [{offset}, {offset + n}) but only "
+            f"{len(avail)} exist — call simulate_host_devices() before "
+            "the first jax computation"
+        )
+    return jax.sharding.Mesh(avail[offset:offset + n], (SERVING_AXIS,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -18,7 +18,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec
 
+from ..parallel.collectives import maybe_psum
 from .attention import NEG_INF, attention_block, decode_attn, init_attn_params
 from .common import (
     ArchConfig,
@@ -531,7 +533,10 @@ class TransformerLM:
             vp_stack = jax.lax.dynamic_update_slice_in_dim(
                 vp_stack, vp[None], lyr, 0)
             o = paged_attention(q, kp, vp, page_table, lens, scale=scale)
-            o = o.reshape(B, -1).astype(h.dtype) @ p["attn"]["wo"]
+            # row-sharded wo under serving TP: reduce partial products
+            # across the mesh (identity under plain jit) *before* any
+            # post-norm sees the activation
+            o = maybe_psum(o.reshape(B, -1).astype(h.dtype) @ p["attn"]["wo"])
             if cfg.post_norms:
                 o = rms_norm(o, p["ln1_post"], cfg.norm_eps, plus_one=True)
             h = h + o
@@ -554,3 +559,51 @@ class TransformerLM:
         h = rms_norm(h, params["final_norm"], cfg.norm_eps, plus_one=cfg.post_norms)
         logits = self._unembed(params, h)
         return {"k_pages": k_pages, "v_pages": v_pages}, logits
+
+    # ------------------------------------------------------------------
+    # tensor-parallel serving (sharded paged decode)
+    # ------------------------------------------------------------------
+    #
+    # TP shards the KV-head axis: each mesh member holds H/n q-heads,
+    # K/n kv-heads, the matching rows of wo, and the head shard of every
+    # physical KV page.  Q heads are KV-major (head h serves kv-head
+    # h // group), so contiguous H/n chunks align to group boundaries
+    # exactly when K % n == 0 — the only cross-device op per layer is
+    # the psum after wo in ``paged_decode_step``.
+
+    def tp_supported(self, n: int) -> bool:
+        """Whether paged decode can shard over an ``n``-way model axis."""
+        return (n >= 1 and self.supports_paged_decode
+                and self.cfg.num_kv_heads % n == 0
+                and self.cfg.num_heads % n == 0)
+
+    def tp_param_specs(self, params):
+        """PartitionSpec pytree matching ``params`` exactly.
+
+        q/k/v projections column-sharded on the head axis, wo row-sharded
+        (reduced by the in-body psum); norms, MLP/MoE and embeddings
+        replicated — the decode batch is tiny, so replicated FFN compute
+        is cheaper than two more collectives per layer.
+        """
+        attn_rules = {
+            "wq": PartitionSpec(None, None, "model", None),
+            "wk": PartitionSpec(None, None, "model", None),
+            "wv": PartitionSpec(None, None, "model", None),
+            "wo": PartitionSpec(None, "model", None),
+            "bq": PartitionSpec(None, "model", None),
+            "bk": PartitionSpec(None, "model", None),
+            "bv": PartitionSpec(None, "model", None),
+        }
+
+        def visit(path, leaf):
+            keys = [getattr(k, "key", None) for k in path]
+            if "attn" in keys and keys[-1] in attn_rules:
+                return attn_rules[keys[-1]]
+            return PartitionSpec(*([None] * leaf.ndim))
+
+        return jax.tree_util.tree_map_with_path(visit, params)
+
+    def tp_pool_specs(self, store):
+        """Page pools (L, P, page, K, hd) shard the kv-head axis."""
+        spec = PartitionSpec(None, None, None, "model", None)
+        return {k: spec for k in store}

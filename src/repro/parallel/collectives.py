@@ -25,9 +25,27 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
-           "ErrorFeedback", "compressed_grad_tree"]
+           "maybe_psum", "ErrorFeedback", "compressed_grad_tree"]
 
 BLOCK = 256
+
+
+def maybe_psum(x: jnp.ndarray, axis_name: str = "model") -> jnp.ndarray:
+    """``psum(x, axis_name)`` when the axis is bound, identity otherwise.
+
+    Model bodies call this after every row-sharded matmul so *one*
+    definition serves both execution modes: inside ``shard_map`` the
+    axis name resolves and partial products reduce across the mesh;
+    under plain ``jit`` (single-device serving, training, tests) the
+    unbound name raises ``NameError`` at trace time and the full-width
+    product passes through untouched.  Integer operands reduce exactly
+    (psum of int32 is order-independent), which is what lets the
+    sharded-vs-single-device differential tests demand byte equality.
+    """
+    try:
+        return jax.lax.psum(x, axis_name)
+    except NameError:
+        return x
 
 
 def quantize_int8(x: jnp.ndarray, block: int = BLOCK):

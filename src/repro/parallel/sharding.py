@@ -32,6 +32,7 @@ __all__ = [
     "batch_specs",
     "batch_shardings",
     "decode_state_shardings",
+    "serving_tp_shardings",
     "named",
 ]
 
@@ -301,3 +302,26 @@ def decode_state_shardings(state_shape, mesh: Mesh, *, layout: str = "seq",
         return named(mesh, P(*([None] * nd)))
 
     return jax.tree_util.tree_map_with_path(visit, state_shape)
+
+
+# --------------------------------------------------------------------------
+# sharded serving (tensor-parallel paged decode)
+# --------------------------------------------------------------------------
+
+def serving_tp_shardings(mesh: Mesh, specs):
+    """NamedShardings for a model's serving-TP spec pytree.
+
+    ``specs`` comes from a model's ``tp_param_specs()`` /
+    ``tp_pool_specs()`` — a pytree of :class:`PartitionSpec` matching the
+    params / paged-store structure.  These drive both the ``device_put``
+    placement of params and the bound page pool (so every device holds
+    its head shard of each physical page) and, spec-for-spec, the
+    ``shard_map`` in/out specs of the paged decode step.  Only call when
+    ``model.tp_supported(n)`` — the specs are exact-divisibility by
+    contract, never fit-adjusted (a silently replicated leaf would make
+    ``shard_map`` mis-slice it).
+    """
+    return jax.tree.map(
+        lambda s: named(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

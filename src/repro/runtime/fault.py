@@ -168,6 +168,14 @@ class FailureInjector:
     #: blast radius of cross-tenant prefix sharing.  A no-op when
     #: nothing is shared at that instant (the engine returns None)
     poison_shared_at_t: Dict[float, int] = field(default_factory=dict)
+    #: virtual time → replica indices whose process dies *loudly* (exit
+    #: observed): the ReplicaSet evacuates and re-homes immediately
+    kill_replica_at_t: Dict[float, List[int]] = field(default_factory=dict)
+    #: virtual time → replica indices whose mesh member dies *silently*:
+    #: the replica strands its requests until the heartbeat monitor
+    #: times it out, then the set evacuates and re-homes (PR-4 reap path)
+    kill_mesh_member_at_t: Dict[float, List[int]] = field(
+        default_factory=dict)
 
     def check(self, step: int) -> None:
         victims = [w for w in self.fail_at.get(step, []) if w not in self.killed]
@@ -220,3 +228,24 @@ class FailureInjector:
             def _poison_shared(idx=self.poison_shared_at_t[when]) -> None:
                 engine.poison_shared(idx)
             sim.call_at(when, _poison_shared)
+
+    def arm_replicas(self, sim, replica_set) -> None:
+        """Schedule the replica-plane chaos plan onto a ``SimExecutor``.
+
+        ``kill_replica_at_t`` fires ``ReplicaSet.kill_replica`` (loud
+        death → instant evacuate + re-home); ``kill_mesh_member_at_t``
+        fires ``kill_mesh_member`` (silent death → stranded until the
+        heartbeat reap).  Timers land during the set's between-step
+        sleep, so the plan replays identically per sim seed.
+        """
+        for when in sorted(self.kill_replica_at_t):
+            def _kill(victims=tuple(self.kill_replica_at_t[when])) -> None:
+                for i in victims:
+                    replica_set.kill_replica(i)
+            sim.call_at(when, _kill)
+        for when in sorted(self.kill_mesh_member_at_t):
+            def _kill_m(victims=tuple(
+                    self.kill_mesh_member_at_t[when])) -> None:
+                for i in victims:
+                    replica_set.kill_mesh_member(i)
+            sim.call_at(when, _kill_m)

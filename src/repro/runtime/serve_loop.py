@@ -184,10 +184,12 @@ class ServingEngine:
         pool: Optional[SandboxPool] = None,
         scheduler: Optional[ServerlessScheduler] = None,
         postprocess_tenant: str = "serving",
+        mesh=None,
     ) -> None:
         self.model = model
         self.params = params
         self.cfg = cfg
+        self._requested_mesh = mesh
         self._exec = executor or ThreadExecutor()
         self.telemetry = resolve_sink(admission, telemetry)
         self.admission = admission or AdmissionController(sink=self.telemetry)
@@ -220,7 +222,21 @@ class ServingEngine:
         #: grow it without limit (far above any test workload's length)
         self._trace: Deque[str] = deque(maxlen=cfg.trace_limit or None)
 
-        self.kv_mode = self._resolve_kv_mode(model, cfg)
+        self.kv_mode = self._resolve_kv_mode(model, cfg, mesh)
+        self.mesh = mesh if (
+            self.kv_mode == "paged" and self._tp_fits(model, mesh)
+        ) else None
+        self.tp_shards = (
+            int(self.mesh.devices.size) if self.mesh is not None else 1
+        )
+        self.kv.tp_shards = self.tp_shards
+        if mesh is not None and self.mesh is None:
+            # mesh requested but unusable: dense mode runs replicated,
+            # paged mode (explicit, non-dividing model) runs unsharded —
+            # record it so tests can pin the graceful-fallback behavior
+            self._trace.append(
+                f"{self._exec.now():.6f} tp_fallback kv_mode={self.kv_mode}"
+            )
         if self.kv_mode == "paged":
             # the arena *is* the backing store: physical page tensors are
             # bound to the allocator and every decode/prefill mutates
@@ -231,13 +247,48 @@ class ServingEngine:
                     "kv_mode='paged' needs a PagedKVAllocator with a "
                     "bounded pool (pool_pages) to size the device pages"
                 )
-            self.kv.bind_store(model.init_paged_state(
+            store = model.init_paged_state(
                 self.kv.pool_pages, self.kv.tokens_per_page
-            ))
-            self._state = None
-            self._decode_paged = jax.jit(
-                model.paged_decode_step, donate_argnums=(1,)
             )
+            if self.mesh is not None:
+                # tensor-parallel decode: params and every physical page
+                # shard over the mesh per the model's TP specs (the page
+                # *pool* is per-device — each member holds its head/d
+                # slice of every page), and the decode step runs under
+                # shard_map so the paged-attention kernel grid sees only
+                # local heads; the model body psums the logits.  Prefill
+                # / scatter / COW stay plain jit: GSPMD reads the same
+                # sharded buffers, and exactness is the model's contract
+                # (integer ToyLM: bit-exact; transformers: per-head
+                # attention is untouched, only the wo psum reorders
+                # float adds).
+                from jax.sharding import PartitionSpec
+                from repro.compat import shard_map
+                from repro.parallel.sharding import serving_tp_shardings
+                pspecs = model.tp_param_specs(self.params)
+                poolspecs = model.tp_pool_specs(store)
+                self.params = jax.device_put(
+                    self.params, serving_tp_shardings(self.mesh, pspecs)
+                )
+                store = jax.device_put(
+                    store, serving_tp_shardings(self.mesh, poolspecs)
+                )
+                rep = PartitionSpec()
+                self._decode_paged = jax.jit(
+                    shard_map(
+                        model.paged_decode_step, self.mesh,
+                        in_specs=(pspecs, poolspecs, rep, rep, rep),
+                        out_specs=(poolspecs, rep),
+                        check_vma=False,
+                    ),
+                    donate_argnums=(1,),
+                )
+            else:
+                self._decode_paged = jax.jit(
+                    model.paged_decode_step, donate_argnums=(1,)
+                )
+            self.kv.bind_store(store)
+            self._state = None
             self._prefill_rows = jax.jit(model.paged_prefill)
             self._scatter_rows = jax.jit(
                 model.paged_write_prefill, donate_argnums=(0,)
@@ -299,13 +350,39 @@ class ServingEngine:
         #: retire order; names may go stale when a poison drops one
         self._parked: Deque[str] = deque()
         self._park_seq = itertools.count()
+        #: set by evacuate(): the replica's mesh member is gone — the
+        #: engine is inert and a ReplicaSet must not route to it
+        self.dead = False
 
     # ------------------------------------------------------------- helpers
 
     @staticmethod
-    def _resolve_kv_mode(model, cfg: ServerConfig) -> str:
+    def _tp_fits(model, mesh) -> bool:
+        """Whether the model can tensor-parallel over this mesh.
+
+        Needs the TP spec interface *and* exact divisibility (uneven
+        head counts must not silently mis-slice under shard_map).
+        """
+        if mesh is None:
+            return False
+        n = int(mesh.devices.size)
+        return (
+            hasattr(model, "tp_supported")
+            and hasattr(model, "tp_param_specs")
+            and hasattr(model, "tp_pool_specs")
+            and bool(model.tp_supported(n))
+        )
+
+    @staticmethod
+    def _resolve_kv_mode(model, cfg: ServerConfig, mesh=None) -> str:
         supports = bool(getattr(model, "supports_paged_decode", False))
         if cfg.kv_mode == "auto":
+            if mesh is not None and supports and cfg.incremental \
+                    and not ServingEngine._tp_fits(model, mesh):
+                # a mesh was requested but the model's heads don't
+                # divide it: fall back to dense (replicated) serving
+                # rather than mis-sharding the page pool
+                return "dense"
             return "paged" if (supports and cfg.incremental) else "dense"
         if cfg.kv_mode == "paged":
             if not supports:
@@ -756,6 +833,8 @@ class ServingEngine:
         Returns the number of requests retired this tick.  Safe to call
         with nothing active (returns 0 after the admit sweep).
         """
+        if self.dead:
+            return 0
         self._evict_poisoned()
         with self._lock:
             admitted = self._admit_locked()
@@ -1079,6 +1158,51 @@ class ServingEngine:
         self._exec.notify()
         return len(live)
 
+    def evacuate(self) -> List[Request]:
+        """Tear down this replica: return every incomplete request.
+
+        The mesh-member-death path (:class:`~repro.runtime.replica.
+        ReplicaSet` reaping a silent replica): live slots evict with
+        their tokens intact, queued requests come back untouched, and
+        *all* resident sequences — evicted-but-resident pages, parked
+        prefix donors — drop, because the pages lived on the dead
+        member's shard of the pool.  The returned list is deterministic
+        (slot order, then queue (priority, deadline, arrival) order) so
+        re-homing them on the survivors replays byte-identically.
+
+        After this the engine is inert: ``step()`` returns 0 and the
+        allocator's ledger balances (no page outlives its replica).
+        """
+        with self._lock:
+            out: List[Request] = []
+            for i, r in enumerate(self._slots):
+                if r is None:
+                    continue
+                self.kv.drop_sequence(self._seq_id(r))
+                self.admission.slot_released(r.tenant)
+                self._slots[i] = None
+                self._evictions += 1
+                self._note("evict:evacuate", r, f"slot={i}")
+                out.append(r)
+            for tenant in sorted(self._queues):
+                heap = self._queues[tenant]
+                for _, _, _, r in sorted(heap):
+                    if not r.done:
+                        out.append(r)
+                        self._note("evacuate_queued", r)
+                heap.clear()
+            self._deadlines.clear()
+            self._parked.clear()
+            for seq_id in self.kv.sequence_ids():
+                # evicted-but-resident sequences and parked donors: the
+                # pages died with the mesh member
+                if self.kv.has_sequence(seq_id):
+                    self.kv.drop_sequence(seq_id)
+            self._live_ids.clear()
+            self.dead = True
+        self._exec.notify()
+        return out
+
     def poison_live(self, index: int = 0) -> Optional[str]:
         """Chaos: poison the ``index``-th live sequence's arena pages.
 
@@ -1191,6 +1315,7 @@ class ServingEngine:
                 "completed_total": dict(self._completed_n),
                 "tokens_total": dict(self._tokens_n),
                 "decode_steps_total": self._decode_steps,
+                "tp_shards": self.tp_shards,
                 "prefill_sequences_total": dict(self._prefills),
                 "prefill_tokens_total": dict(self._prefill_tokens),
                 "batch_kill_total": self._batch_kills,

@@ -1,3 +1,23 @@
+"""Suite-wide fixtures and environment.
+
+The sharded-serving tests need a multi-device mesh, and XLA locks the
+host device count at backend initialization — so the split must happen
+here, before any test module imports jax.  Every single-device test is
+unaffected: computations without an explicit sharding run on device 0,
+and ``jax.make_mesh((1,), ...)`` keeps working with extra devices
+present.
+"""
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    ).strip()
+
 import numpy as np
 import pytest
 

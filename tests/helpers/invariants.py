@@ -24,6 +24,7 @@ __all__ = [
     "AuditedPool",
     "WatchedScheduler",
     "check_drain_invariants",
+    "check_replica_invariants",
     "check_serving_invariants",
     "check_serving_replay",
 ]
@@ -217,6 +218,67 @@ def check_serving_invariants(engine, requests, *, ctx=""):
     # -- slot ledger -----------------------------------------------------
     balance = engine.admission.slot_balance()
     assert balance == {}, f"slot ledger out of balance{tag}: {balance}"
+
+
+def check_replica_invariants(replica_set, requests, *, ctx=""):
+    """Safety invariants for a drained :class:`~repro.runtime.replica.
+    ReplicaSet` — the per-engine checks, aggregated across replicas.
+
+    * every submitted request completed exactly once *somewhere* (kills
+      and heartbeat reaps re-home, never lose or double a completion),
+    * error-free requests decoded exactly ``max_new_tokens`` tokens,
+    * every replica's plane is empty and its slot ledger balances,
+    * zero KV-page leak per replica — and per *shard*: a dead replica's
+      evacuation must have dropped every page on every shard of its pool
+      (``shard_stats`` counts are per-shard by construction).
+    """
+    tag = f" [{ctx}]" if ctx else ""
+
+    lost = [r.request_id for r in requests if not r.done]
+    assert not lost, f"requests never completed{tag}: {lost}"
+    completed_ids = [r.request_id for r in replica_set.completed]
+    assert sorted(completed_ids) == sorted(set(completed_ids)), (
+        f"request completed twice{tag}: {sorted(completed_ids)}"
+    )
+    assert sorted(completed_ids) == sorted(r.request_id for r in requests), (
+        f"completed set != submitted set{tag}"
+    )
+    short = {
+        r.request_id: len(r.tokens) for r in requests
+        if r.error is None and len(r.tokens) != r.max_new_tokens
+    }
+    assert not short, f"wrong token counts without error{tag}: {short}"
+
+    for i, engine in enumerate(replica_set.replicas):
+        rtag = f"{tag} replica={i}"
+        assert engine.active_count() == 0, (
+            f"slots still held after drain{rtag}: {engine.active_count()}"
+        )
+        assert engine.queue_depth() == 0, (
+            f"requests still queued after drain{rtag}: "
+            f"{engine.queue_depth()}"
+        )
+        if getattr(engine.cfg, "prefix_cache_seqs", 0) and not engine.dead:
+            engine.flush_prefix_cache()
+        assert engine.kv.live_pages() == 0, (
+            f"pages still mapped after drain{rtag}: "
+            f"{engine.kv.live_pages()}"
+        )
+        assert engine.kv.pages_allocated == engine.kv.pages_freed, (
+            f"KV page ledger out of balance{rtag}: "
+            f"allocated={engine.kv.pages_allocated} "
+            f"freed={engine.kv.pages_freed}"
+        )
+        shard = engine.kv.shard_stats()
+        assert shard["live_pages_per_shard"] == 0, (
+            f"per-shard page leak{rtag}: {shard}"
+        )
+        assert engine.kv.zombie_regions() == [], (
+            f"zombie regions after drain{rtag}: "
+            f"{engine.kv.zombie_regions()}"
+        )
+        balance = engine.admission.slot_balance()
+        assert balance == {}, f"slot ledger out of balance{rtag}: {balance}"
 
 
 def check_serving_replay(first, second, *, ctx=""):

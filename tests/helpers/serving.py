@@ -17,7 +17,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core.sim import SimExecutor
+from repro.parallel.collectives import maybe_psum
 from repro.runtime.serve_loop import Request, ServerConfig, ServingEngine
 
 __all__ = ["ToyLM", "make_engine", "make_requests"]
@@ -75,13 +78,13 @@ class ToyLM:
 
         h, _ = jax.lax.scan(body, jnp.zeros((B, self.d), jnp.int32),
                             jnp.swapaxes(tokens, 0, 1))
-        logits = h @ params["out"]
+        logits = maybe_psum(h @ params["out"])
         state = {"h": h, "pos": jnp.full((B,), S, jnp.int32)}
         return state, logits
 
     def decode_step(self, params, state, tokens):
         h = self._advance(params, state["h"], tokens)
-        logits = h @ params["out"]
+        logits = maybe_psum(h @ params["out"])
         return {"h": h, "pos": state["pos"] + 1}, logits
 
     # -------------------------------------------- paged-decode interface
@@ -109,7 +112,7 @@ class ToyLM:
 
         h, hs = jax.lax.scan(body, jnp.zeros((B, self.d), jnp.int32),
                              jnp.swapaxes(tokens, 0, 1))
-        logits = h @ params["out"]
+        logits = maybe_psum(h @ params["out"])
         return {"h": jnp.swapaxes(hs, 0, 1)}, logits          # (B, S, d)
 
     def paged_write_prefill(self, pool, rows, page_ids, offsets):
@@ -143,7 +146,7 @@ class ToyLM:
             return h, h
 
         h, hs = jax.lax.scan(body, h0, jnp.swapaxes(tokens, 0, 1))
-        logits = h @ params["out"]
+        logits = maybe_psum(h @ params["out"])
         return {"h": jnp.swapaxes(hs, 0, 1)}, logits
 
     def paged_copy_page(self, pool, src, dst):
@@ -167,17 +170,45 @@ class ToyLM:
         write_page = jnp.where(
             (write_page >= 0) & (logical < width), write_page, num_pages)
         pages = pool["h_pages"].at[write_page, pos % page].set(h)
-        logits = h @ params["out"]
+        logits = maybe_psum(h @ params["out"])
         return {"h_pages": pages}, logits
+
+    # ------------------------------------------- tensor-parallel serving
+    #
+    # The recurrence is elementwise in d, so TP shards the d axis: each
+    # mesh member holds a d/n slice of emb, out and every page row, and
+    # the only cross-shard op is the (integer, hence exact) logits psum
+    # in paged_decode_step.  That makes the 4-device differential test a
+    # byte-equality check, same bar as the chaos replay suite.
+
+    def tp_supported(self, n: int) -> bool:
+        return n >= 1 and self.d % n == 0
+
+    def tp_param_specs(self, params):
+        return {"emb": P(None, "model"), "out": P("model", None)}
+
+    def tp_pool_specs(self, store):
+        return {"h_pages": P(None, None, "model")}
 
 
 def make_engine(seed=None, *, max_batch=3, max_seq=48, step_time_s=0.01,
                 quotas=None, incremental=True, executor=None,
                 kv_mode="auto", prefix_sharing=True, prefix_cache_seqs=0,
-                **kwargs):
-    """A ServingEngine over ToyLM on a seeded SimExecutor (or ``executor``)."""
+                mesh_devices=0, mesh_offset=0, **kwargs):
+    """A ServingEngine over ToyLM on a seeded SimExecutor (or ``executor``).
+
+    ``mesh_devices`` > 0 builds a tensor-parallel serving mesh over that
+    many simulated host devices (starting at ``mesh_offset``, so replicas
+    can carve disjoint sub-meshes) — requires the conftest's 4-device
+    split.
+    """
     model = ToyLM()
     params = model.init()
+    if mesh_devices:
+        from repro.launch.mesh import make_serving_mesh
+        kwargs.setdefault(
+            "mesh", make_serving_mesh(mesh_devices, offset=mesh_offset)
+        )
     cfg = ServerConfig(
         max_batch=max_batch, max_seq=max_seq, tokens_per_page=4,
         step_time_s=step_time_s, quotas=quotas, incremental=incremental,

@@ -30,11 +30,17 @@ from collections import Counter
 
 import numpy as np
 import pytest
-from helpers.invariants import check_serving_invariants, check_serving_replay
+from helpers.invariants import (
+    check_replica_invariants,
+    check_serving_invariants,
+    check_serving_replay,
+)
 from helpers.serving import SHARED_HEADERS, make_engine, make_requests
 
 from repro.core import TenantQuota
+from repro.core.sim import SimExecutor
 from repro.runtime.fault import FailureInjector
+from repro.runtime.replica import ReplicaSet
 
 KV_MODES = ("paged", "dense")
 
@@ -389,3 +395,128 @@ def test_poison_live_targets_sorted_live_index():
     assert engine.kv.poisoned() == [name]
     engine.drain(timeout=60)
     check_serving_invariants(engine, reqs, ctx="poison-index")
+
+
+# -------------------------------------------------- mesh-fault chaos sweep
+#
+# The replica plane's seed window is independent of the engine-level one
+# (MESH_CHAOS_SEED_*), so CI can pin a small fixed window and nightly can
+# rotate a larger one without coupling the two sweeps' schedules.
+
+MESH_CHAOS_SEED_START = int(os.environ.get("MESH_CHAOS_SEED_START", "0"))
+MESH_CHAOS_SEED_COUNT = int(os.environ.get("MESH_CHAOS_SEED_COUNT", "20"))
+MESH_SEEDS = range(MESH_CHAOS_SEED_START,
+                   MESH_CHAOS_SEED_START + MESH_CHAOS_SEED_COUNT)
+
+
+def mesh_chaos_run(seed):
+    """One seeded replica-set scenario: 2 DP replicas (every third seed
+    additionally 2-way TP on disjoint sub-meshes of the 4 simulated
+    devices), with replica kills and silent mesh-member deaths layered
+    on top of the engine-level chaos (batch kills).
+
+    The whole schedule — routing, faults, heartbeat reaps, re-homing —
+    is a pure function of the seed, so replays must be byte-identical.
+    """
+    rng = random.Random(seed * 7451 + 13)
+    sim = SimExecutor(seed=seed)
+    tp = 2 if seed % 3 == 0 else 0
+    engines = []
+    for i in range(2):
+        kw = dict(executor=sim, max_batch=3, max_seq=48, step_time_s=0.01,
+                  quotas=QUOTAS, kv_mode="paged", prefix_cache_seqs=2)
+        if tp:
+            kw.update(mesh_devices=tp, mesh_offset=i * tp)
+        engine, _ = make_engine(**kw)
+        engines.append(engine)
+    rs = ReplicaSet(engines, heartbeat_timeout_s=0.05)
+    reqs = make_requests(
+        rng, 10, deadline_prob=0.1, sample_prob=0.5, share_prob=0.4,
+    )
+
+    injector = FailureInjector()
+    kind = rng.randrange(4)
+    when = round(rng.uniform(0.02, 0.3), 3)
+    if kind == 0:                          # loud replica death
+        injector.kill_replica_at_t[when] = [rng.randrange(2)]
+    elif kind == 1:                        # silent mesh-member death
+        injector.kill_mesh_member_at_t[when] = [rng.randrange(2)]
+    elif kind == 2:                        # both planes hit ONE replica:
+        # the loud kill races the heartbeat reap of the silent death
+        # (whichever fires first evacuates; the other must be a no-op)
+        victim = rng.randrange(2)
+        injector.kill_mesh_member_at_t[when] = [victim]
+        injector.kill_replica_at_t[round(rng.uniform(0.02, 0.3), 3)] = (
+            [victim])
+    # kind == 3: no mesh fault (control seeds keep the baseline honest)
+    if rng.random() < 0.3:                 # engine-level chaos still rides
+        victim = rng.randrange(2)
+        sim.call_at(round(rng.uniform(0.02, 0.3), 3),
+                    engines[victim].kill_batch)
+    injector.arm_replicas(sim, rs)
+
+    for r in reqs:
+        rs.submit(r)
+    rs.drain(timeout=60)
+    check_replica_invariants(rs, reqs, ctx=f"mesh seed={seed}")
+
+    trace = "\n===\n".join(e.trace_text() for e in rs.replicas)
+    results = tuple(
+        (r.request_id, tuple(r.tokens), r.error, round(r.latency_s, 9))
+        for r in sorted(reqs, key=lambda r: r.request_id)
+    )
+    st = rs.replica_stats()
+    counters = Counter({
+        "replica_kills": st["replica_kills"],
+        "mesh_kills": st["mesh_member_kills"],
+        "reaps": st["heartbeat_reaps"],
+        "rehomed": st["rehomed_total"],
+        "orphaned": st["orphaned"],
+        "tp_runs": int(tp > 0),
+        "clean": sum(1 for r in reqs if r.error is None),
+        "completed": sum(p["completed"] for p in st["per_replica"]),
+    })
+    return trace, results, counters
+
+
+def test_mesh_chaos_sweep_holds_all_invariants():
+    """Headline mesh property: every seed drains with every request
+    completed exactly once, zero per-shard page leaks on every replica
+    (dead ones included), balanced slot ledgers — and the window as a
+    whole exercised both fault planes and the re-home path."""
+    totals = Counter()
+    for seed in MESH_SEEDS:
+        try:
+            _, _, counters = mesh_chaos_run(seed)
+        except AssertionError:
+            raise
+        except BaseException as e:
+            raise AssertionError(
+                f"mesh chaos scenario crashed [seed={seed}]: "
+                f"{type(e).__name__}: {e}"
+            ) from e
+        totals.update(counters)
+
+    if MESH_CHAOS_SEED_COUNT >= 15:
+        assert totals["replica_kills"] > 0, totals
+        assert totals["mesh_kills"] > 0, totals
+        assert totals["reaps"] > 0, totals
+        assert totals["rehomed"] > 0, totals
+        assert totals["tp_runs"] > 0, totals
+        assert totals["clean"] > 0, totals
+        assert totals["orphaned"] == 0, totals
+
+
+def test_mesh_chaos_seeds_replay_byte_identically():
+    """Replica routing + heartbeat reaps + re-homing are pure functions
+    of the seed: replaying a seed reproduces every replica's trace and
+    every token stream byte for byte."""
+    replayed = 0
+    for seed in MESH_SEEDS:
+        if seed % REPLAY_STRIDE:
+            continue
+        first = mesh_chaos_run(seed)
+        second = mesh_chaos_run(seed)
+        check_serving_replay(first, second, ctx=f"mesh seed={seed}")
+        replayed += 1
+    assert replayed >= 1 or MESH_CHAOS_SEED_COUNT < REPLAY_STRIDE
