@@ -1,6 +1,7 @@
 PYTHON ?= python
 
-.PHONY: test lint bench bench-smoke bench-trend chaos serve-chaos ci dev-deps
+.PHONY: test lint bench bench-smoke bench-trend chaos serve-chaos \
+	orch-chaos ci dev-deps
 
 # tier-1 verification: the exact command CI and ROADMAP.md reference
 # (includes the scheduler chaos suite at its fixed default seed window)
@@ -34,6 +35,16 @@ serve-chaos:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_FLAGS) \
 		tests/test_serving_chaos.py
 
+# orchestration chaos sweep (mixed workloads + node kills + forced
+# scale events on the shared pool) over a rotating seed window; CI runs
+# the fixed window (0..29) inside tier-1.  Replay one failure with
+# ORCH_CHAOS_SEED_START=<seed> ORCH_CHAOS_SEED_COUNT=1
+orch-chaos:
+	ORCH_CHAOS_SEED_START=$$(( ($$(date +%s) / 86400 % 5000) * 60 )) \
+	ORCH_CHAOS_SEED_COUNT=60 \
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_FLAGS) \
+		tests/test_orchestrator_chaos.py
+
 # same invocation as the CI lint job (config in ruff.toml)
 lint:
 	ruff check src tests benchmarks
@@ -55,6 +66,8 @@ bench-smoke:
 		--requests 12 --json-out BENCH_serve.json
 	PYTHONPATH=src $(PYTHON) benchmarks/prefix_bench.py \
 		--requests 8 --json-out BENCH_prefix.json
+	PYTHONPATH=src $(PYTHON) benchmarks/orchestrator_bench.py \
+		--json-out BENCH_orchestrator.json
 
 # the CI trend check, locally: diff BENCH_*.json against .bench-baseline/
 # (seeded on the first run) and fail on a >30% regression

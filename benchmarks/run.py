@@ -17,6 +17,7 @@ def main() -> None:
     from benchmarks import (
         admission_bench,
         loader_bench,
+        orchestrator_bench,
         pool_bench,
         prefix_bench,
         query_latency,
@@ -100,6 +101,16 @@ def main() -> None:
          "paged vs dense KV at the largest (slots, max_seq) cell"),
         ("serve_shard_speedup_x", sv["shard_speedup_x"],
          "mesh-4 vs mesh-1 TP decode; simulated shards share one core"),
+    ]
+
+    print("=" * 72)
+    ob = orchestrator_bench.main()
+    rows += [
+        ("orchestrator_decode_p50_protection_x",
+         ob["decode_p50_protection_x"],
+         "class-aware vs naive FIFO mixing, target:>1x"),
+        ("orchestrator_batch_makespan_cost_x",
+         ob["batch_makespan_cost_x"], "batch's bounded price, target:<5x"),
     ]
 
     print("=" * 72)

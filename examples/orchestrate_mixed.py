@@ -1,0 +1,148 @@
+"""Unified orchestration: decode + training + batch on one worker pool,
+with metrics-driven elastic autoscaling.
+
+One :class:`~repro.core.sim.SimExecutor` clock drives the full stack:
+
+1. a :class:`~repro.runtime.serve_loop.ServingEngine` decoding a stream
+   of requests (the latency-sensitive class, priority lane + preemption
+   rights over batch),
+2. a real :class:`~repro.runtime.train_loop.TrainStepper` running
+   optimizer steps as pool tasks,
+3. a bag of sandbox-batch jobs (the throughput class),
+
+while an :class:`~repro.runtime.elastic.ElasticAutoscaler` watches queue
+depth / admit-wait / busy fractions and scales the fleet:
+
+* at t=0.25 a **load spike** lands (a burst of decode requests + batch
+  jobs) — the backlog crosses ``queue_high`` and workers are added;
+* at t=0.45 a **node dies**; the heartbeat reaper requeues its task
+  exactly once and replaces the worker;
+* when the burst drains, sustained idleness (``idle_ticks``) scales the
+  fleet back down.
+
+Every decision and task transition is virtual-clock deterministic: run
+it twice and the printed trace is byte-identical.
+
+    PYTHONPATH=src python examples/orchestrate_mixed.py
+"""
+
+import random
+
+import jax
+
+from repro.configs import get_reduced
+from repro.core import ServerlessScheduler, SimExecutor
+from repro.core.tasks import checkpoint
+from repro.data import DataConfig, Loader, SyntheticLM
+from repro.models import build_model
+from repro.runtime import (ElasticAutoscaler, Request, ServingEngine,
+                           Trainer, TrainerConfig, WorkloadOrchestrator)
+from repro.runtime.elastic import AutoscalerConfig
+from repro.runtime.serve_loop import ServerConfig
+
+
+def main():
+    sim = SimExecutor(seed=42)
+    rng = random.Random(7)
+
+    # --- serving plane: a reduced model decoding on the shared pool -------
+    scfg = get_reduced("gemma2-9b")
+    smodel = build_model(scfg)
+    engine = ServingEngine(
+        smodel, smodel.init(jax.random.PRNGKey(0)),
+        ServerConfig(max_batch=3, max_seq=48, step_time_s=0.01),
+        executor=sim,
+    )
+
+    def req(i, n=4):
+        import numpy as np
+        prompt = np.asarray([rng.randrange(scfg.vocab_size)
+                             for _ in range(4)], np.int32)
+        return Request(prompt=prompt, max_new_tokens=n, request_id=i)
+
+    # --- training plane: a real TrainStepper as pool tasks -----------------
+    tcfg = get_reduced("gemma2-9b")
+    dc = DataConfig(global_batch=4, seq_len=16, vocab_size=tcfg.vocab_size)
+    trainer = Trainer(build_model(tcfg), Loader(SyntheticLM(dc), dc),
+                      TrainerConfig(total_steps=6, log_every=2,
+                                    ckpt_every=100))
+    params, opt = trainer.init_state(jax.random.PRNGKey(0))
+    stepper = trainer.stepper(params, opt)
+
+    # --- the shared pool + autoscaler + orchestrator -----------------------
+    sched = ServerlessScheduler(workers=2, executor=sim)
+    sched.enable_heartbeats(timeout_s=0.3, replace_dead=True)
+    sched.start()
+    auto = ElasticAutoscaler(sched, serving=engine, cfg=AutoscalerConfig(
+        min_workers=1, max_workers=6, queue_high=3, idle_ticks=4,
+        cooldown_ticks=2))
+    orch = WorkloadOrchestrator(sched, serving=engine, stepper=stepper,
+                                autoscaler=auto)
+
+    def batch_body(sleeps=4):
+        def body():
+            for _ in range(sleeps):
+                checkpoint()            # cooperative preemption point
+                sim.sleep(0.01)
+            return sleeps
+
+        return body
+
+    # steady state: a few requests + jobs from t=0
+    for i in range(4):
+        engine.submit(req(i))
+    jobs = [orch.submit_batch(batch_body(), name=f"steady{i}")
+            for i in range(2)]
+
+    # t=0.25: load spike — decode burst + batch burst
+    def spike():
+        print(f"[t={sim.now():.2f}] LOAD SPIKE: +6 requests, +4 jobs")
+        for i in range(100, 106):
+            engine.submit(req(i))
+        for i in range(4):
+            jobs.append(orch.submit_batch(batch_body(6), name=f"spike{i}"))
+
+    sim.call_at(0.25, spike)
+
+    # t=0.45: node death — heartbeats reap + replace it
+    def node_death():
+        print(f"[t={sim.now():.2f}] NODE DEATH: killing w0")
+        sim.kill("w0")
+
+    sim.call_at(0.45, node_death)
+
+    # pumps: orchestration ticks, heartbeat reaper, and everything runs
+    for k in range(200):
+        sim.call_at(0.02 * k + 0.005, orch.tick)
+    for k in range(1, 80):
+        sim.call_at(0.05 * k, sched.check_heartbeats)
+    sim.run()
+    orch.tick()
+    sched.drain(timeout=120)
+    sim.run()
+
+    # --- report -------------------------------------------------------------
+    print(f"\n[t={sim.now():.2f}] drained")
+    print(f"  decode   : {len(engine.completed)} requests completed")
+    print(f"  training : {stepper.step} steps"
+          f" (loss {trainer.metrics_log[-1]['loss']:.4f})")
+    print(f"  batch    : {sum(1 for j in jobs if j.state == 'done')}"
+          f"/{len(jobs)} jobs done,"
+          f" {orch.preemptions_total} preemptions for decode")
+    print("\nautoscaler decisions (scale events only):")
+    for d in auto.decisions:
+        if d.action != "hold":
+            print(f"  t={d.t:5.2f}  {d.action:18s} {d.reason:22s}"
+                  f" queue={d.queue_depth:3d} workers={d.workers}")
+    st = auto.elastic_stats()
+    print(f"\nfleet: {st['workers_active']} active workers"
+          f" (scaled up {st['scale_up_total']}x,"
+          f" down {st['scale_down_total']}x);"
+          f" pool healthy={st['pool_healthy']}")
+    assert all(j.state == "done" for j in jobs)
+    assert stepper.done()
+    trainer.loader.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -42,7 +42,22 @@ __all__ = [
     "AdmissionTicket",
     "ImageDigestError",
     "default_controller",
+    "system_task",
 ]
+
+
+def system_task(fn: Callable) -> Callable:
+    """Mark ``fn`` as a trusted runtime-internal task body.
+
+    Admission's static verification exists for *tenant* programs; system
+    bodies (e.g. the orchestrator's decode/train step tasks) are engine
+    code whose side effects cannot be jaxpr-traced.  Marked fns skip the
+    trace/verify stage — the image-digest gate still applies — and admit
+    with a zero-cost ticket, which also keeps their admission behavior
+    free of cold/warm variance across replays.
+    """
+    fn.__system_task__ = True
+    return fn
 
 
 class ImageDigestError(RuntimeError):
@@ -239,6 +254,22 @@ class AdmissionController:
                 raise ImageDigestError(
                     f"image digest {digest!r} not in pinned set"
                 )
+
+        # stage 1.5: trusted runtime-internal bodies bypass verification
+        # (see :func:`system_task`); nothing to cost, nothing to cache
+        if getattr(fn, "__system_task__", False):
+            self.sink.count("admission.system_task")
+            return AdmissionTicket(
+                tenant=tenant,
+                fn_name=fn_name,
+                policy_name=policy.name,
+                cache_hit=True,
+                histogram={},
+                flops=0.0,
+                bytes=0.0,
+                eqn_count=0,
+                image_digest=digest,
+            )
 
         # stage 2: verification cache
         key = (

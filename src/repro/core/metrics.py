@@ -114,6 +114,8 @@ class MetricsRegistry:
         self._schedulers: List[Any] = []
         self._servings: List[Any] = []
         self._replica_sets: List[Any] = []
+        self._orchestrators: List[Any] = []
+        self._autoscalers: List[Any] = []
         self._gauges: List[Tuple[str, str, Callable[[], float]]] = []
         self._lock = threading.Lock()
 
@@ -161,6 +163,24 @@ class MetricsRegistry:
         with self._lock:
             if replica_set not in self._replica_sets:
                 self._replica_sets.append(replica_set)
+        return self
+
+    def register_orchestrator(self, orch: Any) -> "MetricsRegistry":
+        """Export a :class:`~repro.runtime.orchestrator.WorkloadOrchestrator`
+        as the ``seepp_orchestrator_*`` families (per-class step/job
+        counters, preemptions, resubmits, class-lane queue depths)."""
+        with self._lock:
+            if orch not in self._orchestrators:
+                self._orchestrators.append(orch)
+        return self
+
+    def register_elastic(self, autoscaler: Any) -> "MetricsRegistry":
+        """Export an :class:`~repro.runtime.elastic.ElasticAutoscaler` as
+        the ``seepp_elastic_*`` families (fleet size, scale events, device
+        pool healthy/in-use/spare)."""
+        with self._lock:
+            if autoscaler not in self._autoscalers:
+                self._autoscalers.append(autoscaler)
         return self
 
     def register_gauge(
@@ -217,6 +237,8 @@ class MetricsRegistry:
             schedulers = list(self._schedulers)
             servings = list(self._servings)
             replica_sets = list(self._replica_sets)
+            orchestrators = list(self._orchestrators)
+            autoscalers = list(self._autoscalers)
             gauges = list(self._gauges)
 
         fams: List[_Family] = []
@@ -282,6 +304,14 @@ class MetricsRegistry:
         # --- replica sets -------------------------------------------------
         if replica_sets:
             fams.extend(self._replica_families(replica_sets))
+
+        # --- workload orchestrator ----------------------------------------
+        if orchestrators:
+            fams.extend(self._orchestrator_families(orchestrators))
+
+        # --- elastic autoscaler -------------------------------------------
+        if autoscalers:
+            fams.extend(self._elastic_families(autoscalers))
 
         # --- ad-hoc gauges ------------------------------------------------
         for name, help_text, fn in gauges:
@@ -695,6 +725,86 @@ class MetricsRegistry:
             ("heartbeat_reaps", "serving_mesh_heartbeat_reaps_total",
              "counter",
              "Silent replicas reaped by the heartbeat monitor."),
+        ]
+        for key, name, kind, text in scalars:
+            fam = _Family(self._n(name), kind, text)
+            fam.add(sum(s[key] for s in stats))
+            fams.append(fam)
+        return fams
+
+    def _orchestrator_families(self, orchestrators: List[Any]) -> List[_Family]:
+        """``seepp_orchestrator_*`` families off ``orchestrator_stats()``.
+
+        Class-lane queue depths carry a ``workload_class`` label; scalar
+        counters sum across registered orchestrators.
+        """
+        stats = [o.orchestrator_stats() for o in orchestrators]
+        fams: List[_Family] = []
+        scalars = [
+            ("ticks", "orchestrator_ticks_total", "counter",
+             "Orchestration rounds executed."),
+            ("serving_steps", "orchestrator_serving_steps_total", "counter",
+             "Decode step-tasks completed on the shared pool."),
+            ("train_steps", "orchestrator_train_steps_total", "counter",
+             "Training step-tasks completed on the shared pool."),
+            ("serving_step_failures",
+             "orchestrator_serving_step_failures_total", "counter",
+             "Decode step-tasks that landed in a non-success state."),
+            ("batch_jobs_submitted", "orchestrator_batch_jobs_submitted_total",
+             "counter", "Batch jobs accepted by the orchestrator."),
+            ("batch_jobs_done", "orchestrator_batch_jobs_done_total",
+             "counter", "Batch jobs that completed successfully."),
+            ("batch_jobs_failed", "orchestrator_batch_jobs_failed_total",
+             "counter", "Batch jobs that failed terminally."),
+            ("preemptions_total", "orchestrator_preemptions_total", "counter",
+             "Batch tasks preempted to unblock a pending decode step."),
+            ("batch_resubmits_total", "orchestrator_batch_resubmits_total",
+             "counter", "Batch tasks resubmitted after preemption."),
+            ("workers_active", "orchestrator_workers_active", "gauge",
+             "Workers serving the shared pool (condemned excluded)."),
+        ]
+        for key, name, kind, text in scalars:
+            fam = _Family(self._n(name), kind, text)
+            fam.add(sum(s[key] for s in stats))
+            fams.append(fam)
+        depth = _Family(
+            self._n("orchestrator_class_queue_depth"), "gauge",
+            "Pending tasks per workload class on the shared pool.",
+        )
+        merged: Dict[str, int] = {}
+        for o in orchestrators:
+            for cls, n in o.class_queue_depths().items():
+                merged[cls] = merged.get(cls, 0) + n
+        for cls in sorted(merged):
+            depth.add(merged[cls], {"workload_class": cls})
+        fams.append(depth)
+        return fams
+
+    def _elastic_families(self, autoscalers: List[Any]) -> List[_Family]:
+        """``seepp_elastic_*`` families off ``elastic_stats()``."""
+        stats = [a.elastic_stats() for a in autoscalers]
+        fams: List[_Family] = []
+        scalars = [
+            ("workers_active", "elastic_workers_active", "gauge",
+             "Worker fleet size the autoscaler currently manages."),
+            ("replicas_alive", "elastic_replicas_alive", "gauge",
+             "Serving replicas alive under autoscaler management."),
+            ("scale_up_total", "elastic_scale_up_total", "counter",
+             "Worker scale-up actions taken."),
+            ("scale_down_total", "elastic_scale_down_total", "counter",
+             "Worker scale-down actions taken."),
+            ("replica_scale_up_total", "elastic_replica_scale_up_total",
+             "counter", "Replica scale-up actions taken."),
+            ("replica_scale_down_total", "elastic_replica_scale_down_total",
+             "counter", "Replica scale-down actions taken."),
+            ("decisions_total", "elastic_decisions_total", "counter",
+             "Autoscaler ticks recorded in the decision log."),
+            ("pool_healthy", "elastic_pool_healthy_devices", "gauge",
+             "Healthy devices in the elastic pool."),
+            ("pool_in_use", "elastic_pool_in_use_devices", "gauge",
+             "Devices the planned mesh currently occupies."),
+            ("pool_spare", "elastic_pool_spare_devices", "gauge",
+             "Healthy devices the current mesh leaves idle."),
         ]
         for key, name, kind, text in scalars:
             fam = _Family(self._n(name), kind, text)

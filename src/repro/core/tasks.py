@@ -345,6 +345,11 @@ class ServerlessScheduler:
     def quota(self, tenant: str) -> TenantQuota:
         return self._quotas.get(tenant, TenantQuota())
 
+    def set_quota(self, tenant: str, quota: TenantQuota) -> None:
+        """Install or replace a tenant's quota (orchestrator class lanes)."""
+        with self._lock:
+            self._quotas[tenant] = quota
+
     def sandbox_for(self, tenant: str) -> Sandbox:
         """Borrow a warm sandbox (checkout + immediate checkin)."""
         sandbox = self.pool.checkout(tenant)
@@ -626,6 +631,41 @@ class ServerlessScheduler:
             self._hb_monitor.beat(name)
         self._exec.spawn(self._worker_loop, name, name=name)
         return name
+
+    def retire_worker(self, worker: Optional[str] = None) -> Optional[str]:
+        """Gracefully shrink the fleet by one worker (autoscaler path).
+
+        Unlike :meth:`_reap_worker` (node death: revoke + requeue), a
+        retired worker keeps its current task: it is condemned *without*
+        revocation, finishes whatever it is running, and exits at the top
+        of its loop — no requeue, no discarded sandbox, no lost work.
+        ``worker=None`` picks the highest-numbered live worker (LIFO, so
+        scale-down unwinds scale-up).  Returns the retired name, or None
+        when no eligible worker remains.
+        """
+        with self._lock:
+            if worker is None:
+                live = [w for w in self._worker_busy
+                        if w not in self._condemned]
+                if not live:
+                    return None
+                worker = max(live, key=lambda w: (len(w), w))
+            elif worker in self._condemned or worker not in self._worker_busy:
+                return None
+            self._condemned.add(worker)
+            self._note("retire", 0, "", worker)
+        if self._hb_monitor is not None:
+            self._hb_monitor.remove(worker)
+        self.telemetry.count("scheduler.worker_retired")
+        self._exec.notify()                # wake it if parked idle
+        return worker
+
+    def active_worker_count(self) -> int:
+        """Workers serving the pool (spawned minus condemned/retired)."""
+        with self._lock:
+            return sum(
+                1 for w in self._worker_busy if w not in self._condemned
+            )
 
     def _worker_loop(self, worker: str) -> None:
         while True:

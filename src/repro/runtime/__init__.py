@@ -1,10 +1,15 @@
-from .elastic import ElasticController, plan_mesh
+from .elastic import (ElasticAutoscaler, ElasticController, ElasticEvent,
+                      ScaleDecision, plan_mesh)
 from .fault import (FailureInjector, HeartbeatMonitor, StragglerDetector,
                     WorkerFailure)
+from .orchestrator import (BatchJob, OrchestratorConfig, WorkloadOrchestrator)
+from .replica import ReplicaSet
 from .serve_loop import Request, Server, ServerConfig, ServingEngine
-from .train_loop import Trainer, TrainerConfig
+from .train_loop import Trainer, TrainerConfig, TrainStepper
 
-__all__ = ["ElasticController", "FailureInjector", "HeartbeatMonitor",
-           "Request", "Server", "ServerConfig", "ServingEngine",
-           "StragglerDetector", "Trainer", "TrainerConfig", "WorkerFailure",
-           "plan_mesh"]
+__all__ = ["BatchJob", "ElasticAutoscaler", "ElasticController",
+           "ElasticEvent", "FailureInjector", "HeartbeatMonitor",
+           "OrchestratorConfig", "ReplicaSet", "Request", "ScaleDecision",
+           "Server", "ServerConfig", "ServingEngine", "StragglerDetector",
+           "Trainer", "TrainerConfig", "TrainStepper", "WorkerFailure",
+           "WorkloadOrchestrator", "plan_mesh"]

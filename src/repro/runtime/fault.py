@@ -176,6 +176,13 @@ class FailureInjector:
     #: times it out, then the set evacuates and re-homes (PR-4 reap path)
     kill_mesh_member_at_t: Dict[float, List[int]] = field(
         default_factory=dict)
+    #: virtual time → workers to force-add (ops-driven scale event on an
+    #: :class:`~repro.runtime.elastic.ElasticAutoscaler`); the chaos
+    #: suite mixes these with node kills to stress the fleet plane
+    scale_up_at_t: Dict[float, int] = field(default_factory=dict)
+    #: virtual time → workers to force-retire (graceful scale-down: the
+    #: victims finish their current task, then exit)
+    scale_down_at_t: Dict[float, int] = field(default_factory=dict)
 
     def check(self, step: int) -> None:
         victims = [w for w in self.fail_at.get(step, []) if w not in self.killed]
@@ -249,3 +256,20 @@ class FailureInjector:
                 for i in victims:
                     replica_set.kill_mesh_member(i)
             sim.call_at(when, _kill_m)
+
+    def arm_orchestrator(self, sim, autoscaler) -> None:
+        """Schedule ops-driven scale events onto a ``SimExecutor``.
+
+        ``scale_up_at_t`` / ``scale_down_at_t`` fire the autoscaler's
+        ``force_scale_up`` / ``force_scale_down`` hooks, so chaos plans
+        can mix fleet churn with node kills and the decisions still land
+        in the same byte-replayable decision log.
+        """
+        for when in sorted(self.scale_up_at_t):
+            def _up(n=int(self.scale_up_at_t[when])) -> None:
+                autoscaler.force_scale_up(n, reason="chaos")
+            sim.call_at(when, _up)
+        for when in sorted(self.scale_down_at_t):
+            def _down(n=int(self.scale_down_at_t[when])) -> None:
+                autoscaler.force_scale_down(n, reason="chaos")
+            sim.call_at(when, _down)

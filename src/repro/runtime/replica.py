@@ -64,6 +64,8 @@ class ReplicaSet:
         self.replica_kills = 0
         self.mesh_member_kills = 0
         self.heartbeat_reaps = 0
+        self.replicas_added = 0                  # elastic scale-up events
+        self.replicas_retired = 0                # elastic scale-down events
 
     @staticmethod
     def _name(i: int) -> str:
@@ -138,6 +140,61 @@ class ReplicaSet:
             r.drain(timeout=max(deadline - time.monotonic(), 1.0))
         return self.completed
 
+    # ------------------------------------------------------------- elastic
+
+    def add_replica(self, engine: ServingEngine) -> int:
+        """Grow the set by one replica (autoscaler scale-up).
+
+        The new replica joins routing immediately: it starts least-loaded,
+        so the next un-homed tenant lands on it.  Returns its index.
+        """
+        if engine._exec is not self._exec:
+            raise ValueError("replica must share the set's executor")
+        idx = len(self.replicas)
+        self.replicas.append(engine)
+        self.step_time_s = max(self.step_time_s, engine.cfg.step_time_s)
+        self.monitor.beat(self._name(idx))     # registers + first beat
+        self.replicas_added += 1
+        return idx
+
+    def retire_replica(self, i: Optional[int] = None) -> Optional[int]:
+        """Gracefully shrink the set by one replica (scale-down).
+
+        Unlike :meth:`kill_replica` this is an *ops* event, not a fault:
+        the replica is drained via the same evacuate + re-home path (its
+        in-flight requests resume elsewhere), but counted as a scale
+        event.  ``i=None`` picks the live replica with the least load
+        (ties to the highest index, so scale-down unwinds scale-up).
+        Refuses (returns None) when it would leave no live replica.
+        """
+        live = self.alive()
+        if len(live) <= 1:
+            return None
+        if i is None:
+            i = min(live, key=lambda j: (self._load(j), -j))
+        elif i not in live:
+            return None
+        self.replicas_retired += 1
+        self.monitor.remove(self._name(i))
+        self._reap(i)
+        return i
+
+    def queue_depth(self) -> int:
+        """Aggregate admit-queue depth across live replicas."""
+        return sum(r.queue_depth() for i, r in enumerate(self.replicas)
+                   if not r.dead and i not in self.mesh_dead)
+
+    def admit_wait_snapshot(self):
+        """(count, sum) of admit-wait across the set's distinct sinks."""
+        n = 0.0
+        s = 0.0
+        for sink in {id(r.telemetry): r.telemetry for r in self.replicas}.values():
+            for (name, _tenant), hist in sink.histograms().items():
+                if name == "serving.admit_wait_seconds":
+                    n += hist.count
+                    s += hist.sum
+        return (n, s)
+
     # --------------------------------------------------------------- chaos
 
     def kill_replica(self, i: int) -> int:
@@ -206,5 +263,7 @@ class ReplicaSet:
             "heartbeat_reaps": self.heartbeat_reaps,
             "rehomed_total": self.rehomed_total,
             "orphaned": len(self._orphans),
+            "replicas_added": self.replicas_added,
+            "replicas_retired": self.replicas_retired,
             "per_replica": per,
         }

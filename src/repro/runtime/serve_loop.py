@@ -1332,6 +1332,21 @@ class ServingEngine:
                 "prefix_prefill_tokens_saved_total": self._prefix_tokens_saved,
             }
 
+    def admit_wait_snapshot(self) -> Tuple[float, float]:
+        """(count, sum) of ``serving.admit_wait_seconds`` across tenants.
+
+        The autoscaler differentiates this between ticks to get the mean
+        admit wait over its window; the histogram is fed from executor
+        timestamps, so the snapshot is deterministic under sim.
+        """
+        n = 0.0
+        s = 0.0
+        for (name, _tenant), hist in self.telemetry.histograms().items():
+            if name == "serving.admit_wait_seconds":
+                n += hist.count
+                s += hist.sum
+        return (n, s)
+
     def prefill_counts(self) -> Dict[int, int]:
         """Times each request was prefilled (regression probe for tests)."""
         with self._lock:

@@ -32,7 +32,7 @@ from repro.runtime.fault import (
     WorkerFailure,
 )
 
-__all__ = ["TrainerConfig", "Trainer"]
+__all__ = ["TrainerConfig", "Trainer", "TrainStepper"]
 
 
 @dataclass
@@ -162,6 +162,22 @@ class Trainer:
                            blocking=True)
         return params, opt_state
 
+    # ------------------------------------------------------------ stepping
+
+    def stepper(self, params, opt_state, *, start_step: int = 0
+                ) -> "TrainStepper":
+        """A one-step-at-a-time driver for orchestrated training.
+
+        :meth:`run` owns its own while-loop, which makes training a
+        monolith no scheduler can interleave with other workload classes.
+        The stepper exposes the same step body (jitted step, checkpoint
+        cadence, injector/recovery path) as an incremental API —
+        ``step_once()`` per call — so the orchestrator can run each step
+        as one task on the shared worker pool, with a cooperative
+        preemption point between steps.
+        """
+        return TrainStepper(self, params, opt_state, start_step)
+
     # ------------------------------------------------------------ recovery
 
     def _recover(self, failure: WorkerFailure, params, opt_state):
@@ -184,3 +200,73 @@ class Trainer:
             return fresh_p, fresh_o, 0
         step, tree, manifest = restored
         return tree["params"], tree["opt"], int(manifest["step"])
+
+
+class TrainStepper:
+    """Incremental view of :meth:`Trainer.run`: one optimizer step per call.
+
+    Holds the loop state (params, opt state, loader iterator, step index)
+    so the orchestrator can schedule ``step_once`` invocations as tasks
+    on a shared worker pool.  Each call starts with a
+    :func:`repro.core.tasks.checkpoint` — the cooperative preemption
+    point and worker heartbeat the task plane relies on — and ends with
+    the same checkpoint/injector/recovery bookkeeping as ``run()``.
+    """
+
+    def __init__(self, trainer: Trainer, params, opt_state,
+                 start_step: int = 0) -> None:
+        self.trainer = trainer
+        self.params = params
+        self.opt_state = opt_state
+        self.step = start_step
+        self._it = iter(trainer.loader)
+
+    def done(self) -> bool:
+        return self.step >= self.trainer.cfg.total_steps
+
+    def remaining(self) -> int:
+        return max(self.trainer.cfg.total_steps - self.step, 0)
+
+    def step_once(self) -> Optional[Dict[str, float]]:
+        """Run one training step; returns its metrics row (None if done)."""
+        from repro.core.tasks import checkpoint
+
+        tr = self.trainer
+        if self.done():
+            return None
+        checkpoint()                       # preemption point + heartbeat
+        t0 = time.perf_counter()
+        try:
+            if tr.injector is not None:
+                tr.injector.check(self.step)
+            batch = next(self._it)
+            jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = tr._step_fn(
+                self.params, self.opt_state, jbatch
+            )
+            if tr.monitor is not None:
+                for w in tr.monitor.workers():
+                    tr.monitor.beat(w)
+        except WorkerFailure as e:
+            self.params, self.opt_state, self.step = tr._recover(
+                e, self.params, self.opt_state
+            )
+            self._it = iter(tr.loader)
+            return {"recovered": 1.0, "step": float(self.step)}
+        dt = time.perf_counter() - t0
+        if tr.stragglers is not None:
+            tr.stragglers.record("host0", dt)
+        row = {k: float(v) for k, v in metrics.items()}
+        row.update(step=self.step, secs=dt)
+        if (self.step % tr.cfg.log_every == 0
+                or self.step == tr.cfg.total_steps - 1):
+            tr.metrics_log.append(row)
+        if (tr.ckpt is not None and self.step
+                and self.step % tr.cfg.ckpt_every == 0):
+            tr.ckpt.save(self.step, {"params": self.params,
+                                     "opt": self.opt_state})
+        self.step += 1
+        if tr.ckpt is not None and self.done():
+            tr.ckpt.save(self.step, {"params": self.params,
+                                     "opt": self.opt_state}, blocking=True)
+        return row

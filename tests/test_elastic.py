@@ -1,0 +1,337 @@
+"""Elastic plane: ``plan_mesh`` branches, the repaired ``ElasticController``
+pool accounting, and the metrics-driven ``ElasticAutoscaler``.
+
+``runtime/elastic.py`` shipped exported-but-untested; this file pins every
+controller branch, including the two regressions the orchestration PR
+fixed before wiring the controller into the autoscaler:
+
+* ``lose()`` used to clamp the pool at ``model_axis``, making the
+  degrade-TP branch of ``plan_mesh`` unreachable from the controller;
+* ``lose()``/``gain()`` used to overwrite the pool with the planned mesh
+  *product*, silently forgetting spare devices that did not fit the grid
+  — a later ``gain(1)`` planned from the truncated count and could never
+  recover the forgotten capacity.
+"""
+
+import pytest
+
+from repro.core.sim import SimExecutor
+from repro.core.tasks import ServerlessScheduler, TaskSpec
+from repro.runtime.elastic import (AutoscalerConfig, ElasticAutoscaler,
+                                   ElasticController, plan_mesh)
+
+
+# ------------------------------------------------------------- plan_mesh
+
+
+def test_plan_mesh_shapes_across_device_counts():
+    # model axis preserved whenever it fits; data shrinks first
+    assert plan_mesh(256, model=16) == ((16, 16), ("data", "model"))
+    assert plan_mesh(240, model=16) == ((15, 16), ("data", "model"))
+    assert plan_mesh(17, model=16) == ((1, 16), ("data", "model"))
+    assert plan_mesh(16, model=16) == ((1, 16), ("data", "model"))
+    assert plan_mesh(4, model=4) == ((1, 4), ("data", "model"))
+
+
+def test_plan_mesh_degrade_tp_branch():
+    # fewer devices than the TP degree: halve model until it fits
+    assert plan_mesh(8, model=16) == ((1, 8), ("data", "model"))
+    assert plan_mesh(3, model=16) == ((1, 2), ("data", "model"))
+    assert plan_mesh(1, model=16) == ((1, 1), ("data", "model"))
+    # non-power-of-two degrade halves (6 -> 3 -> 1) rather than looping
+    assert plan_mesh(2, model=6) == ((2, 1), ("data", "model"))
+
+
+def test_plan_mesh_prefer_pods_branch():
+    assert plan_mesh(512, model=16, prefer_pods=2) == \
+        ((2, 16, 16), ("pod", "data", "model"))
+    assert plan_mesh(512, model=16, prefer_pods=4) == \
+        ((4, 8, 16), ("pod", "data", "model"))
+    # pods that do not divide the data axis fall back to 2-D
+    assert plan_mesh(48, model=16, prefer_pods=5) == \
+        ((3, 16), ("data", "model"))
+    # a single data row cannot split into pods
+    assert plan_mesh(16, model=16, prefer_pods=2) == \
+        ((1, 16), ("data", "model"))
+
+
+def test_plan_mesh_never_overcommits():
+    for n in range(1, 70):
+        for model in (1, 2, 4, 16):
+            shape, axes = plan_mesh(n, model=model)
+            used = 1
+            for s in shape:
+                used *= s
+            assert used <= n, (n, model, shape)
+            assert len(shape) == len(axes)
+
+
+# ----------------------------------------------------- ElasticController
+
+
+def test_elastic_controller_lose_gain_roundtrip():
+    ec = ElasticController(512, model_axis=16)
+    shape, axes, ev = ec.lose(32, step=100, reason="pod slice down")
+    assert ev.old_devices == 512 and ev.new_devices == 480
+    assert ec.healthy == 480 and shape == (30, 16)
+    shape, axes, ev = ec.gain(32, step=200)
+    assert ec.healthy == 512 and shape == (32, 16)
+    assert [e.reason for e in ec.events] == ["pod slice down", "scale-up"]
+
+
+def test_controller_reaches_degrade_tp_branch():
+    """Regression: losing more devices than the TP degree must shrink the
+    model axis (the degrade-TP branch), not silently floor the pool at
+    ``model_axis``.  Pre-fix, ``lose()`` clamped ``healthy`` to the model
+    axis, so this planned a phantom (1, 16) mesh on 4 surviving chips."""
+    ec = ElasticController(16, model_axis=16)
+    shape, axes, ev = ec.lose(12, step=0, reason="rack down")
+    assert ec.healthy == 4, ec.healthy
+    assert shape == (1, 4), shape
+    assert ev.new_devices == 4
+
+
+def test_controller_remembers_spare_devices_across_gain():
+    """Regression: spares that do not fit the planned grid stay in the
+    pool.  Pre-fix, ``lose()``/``gain()`` overwrote ``healthy`` with the
+    mesh product, so after lose(1) on 8 devices (mesh (1,4), 3 spare) a
+    ``gain(1)`` planned from 4+1=5 and the pool was stuck at 4 forever."""
+    ec = ElasticController(8, model_axis=4)
+    shape, axes, ev = ec.lose(1, step=10)
+    assert shape == (1, 4)
+    assert ec.healthy == 7, ec.healthy        # pool keeps the 3 spares
+    assert ev.in_use == 4 and ev.spare == 3
+    shape, axes, ev = ec.gain(1, step=20)
+    assert shape == (2, 4), shape             # 8 devices fit a full grid
+    assert ec.healthy == 8 and ev.in_use == 8 and ev.spare == 0
+
+
+def test_controller_pool_floors_at_zero():
+    ec = ElasticController(4, model_axis=4)
+    shape, axes, ev = ec.lose(100, step=1)
+    assert ec.healthy == 0
+    assert shape == (1, 1)                    # plan for the last chip
+    assert ev.spare == 0 or ev.spare == -1    # in_use never exceeds pool+1
+    shape, axes, ev = ec.gain(4, step=2)
+    assert ec.healthy == 4 and shape == (1, 4)
+
+
+def test_controller_event_log_is_complete():
+    ec = ElasticController(32, model_axis=4)
+    ec.lose(2, step=1)
+    ec.lose(2, step=2)
+    ec.gain(4, step=3)
+    assert [(e.old_devices, e.new_devices) for e in ec.events] == [
+        (32, 30), (30, 28), (28, 32),
+    ]
+    assert all(e.in_use <= max(e.new_devices, 1) for e in ec.events)
+
+
+# ----------------------------------------------------- ElasticAutoscaler
+
+
+class _FakeServing:
+    """Duck-typed serving plane: just the two metric feeds."""
+
+    def __init__(self):
+        self.wait = (0.0, 0.0)        # (count, sum) admit-wait histogram
+        self.depth = 0
+
+    def admit_wait_snapshot(self):
+        return self.wait
+
+    def queue_depth(self):
+        return self.depth
+
+
+class _FakeReplicaSet(_FakeServing):
+    """Adds the replica-elasticity surface the autoscaler actuates."""
+
+    def __init__(self, n=1):
+        super().__init__()
+        self._alive = list(range(n))
+
+    def alive(self):
+        return list(self._alive)
+
+    def add_replica(self, engine):
+        self._alive.append(len(self._alive))
+
+    def retire_replica(self, i=None):
+        if len(self._alive) <= 1:
+            return None
+        return self._alive.pop()
+
+
+def _sim_sched(seed=1, workers=1):
+    sim = SimExecutor(seed=seed)
+    sched = ServerlessScheduler(workers=workers, executor=sim)
+    # start() registers the workers; under sim nothing runs until driven,
+    # so submitted tasks stay PENDING and ticks see a deterministic queue
+    sched.start()
+    return sim, sched
+
+
+def test_autoscaler_scales_up_on_queue_depth():
+    sim, sched = _sim_sched()
+    auto = ElasticAutoscaler(sched, cfg=AutoscalerConfig(
+        queue_high=3, max_workers=4, cooldown_ticks=1))
+
+    def body():
+        sim.sleep(0.05)
+
+    ids = [sched.submit(TaskSpec(tenant="t", fn=body, name=f"b{i}"))
+           for i in range(8)]
+    d = auto.tick()                     # 8 pending >= queue_high
+    assert d.action == "scale_up_worker"
+    assert d.reason.startswith("queue_high:")
+    assert d.queue_depth == 8 and d.workers == 2
+    assert auto.tick().reason == "cooldown"
+    d = auto.tick()                     # backlog still deep: grow again
+    assert d.action == "scale_up_worker" and d.workers == 3
+    assert auto.scale_ups == 2
+    # the controller pool tracked both gains
+    assert auto.controller.healthy == 3
+    sched.drain(timeout=30)
+    assert all(sched.record(i).state.name == "SUCCEEDED" for i in ids)
+
+
+def test_autoscaler_scales_up_on_admit_wait():
+    _, sched = _sim_sched()
+    fake = _FakeServing()
+    auto = ElasticAutoscaler(sched, serving=fake, cfg=AutoscalerConfig(
+        queue_high=100, admit_wait_high_s=0.05, cooldown_ticks=0))
+    fake.wait = (4.0, 1.0)              # 4 admits waited 0.25 s mean
+    d = auto.tick()
+    assert d.action == "scale_up_worker"
+    assert d.reason.startswith("admit_wait_high:")
+    assert d.admit_wait_s == pytest.approx(0.25)
+    # snapshot unchanged since last tick -> window mean is 0 -> steady
+    d = auto.tick()
+    assert d.action == "hold" and d.admit_wait_s == 0.0
+
+
+def test_autoscaler_scales_up_replicas_on_serving_depth():
+    _, sched = _sim_sched()
+    rs = _FakeReplicaSet(n=1)
+    auto = ElasticAutoscaler(
+        sched, serving=rs, replica_factory=lambda: object(),
+        cfg=AutoscalerConfig(queue_high=100, serving_queue_high=2,
+                             max_replicas=3, cooldown_ticks=0))
+    rs.depth = 5
+    d = auto.tick()
+    assert d.action == "scale_up_replica" and d.replicas == 2
+    d = auto.tick()
+    assert d.action == "scale_up_replica" and d.replicas == 3
+    d = auto.tick()                     # at max_replicas: hold
+    assert d.action == "hold"
+    assert auto.replica_scale_ups == 2
+
+
+def test_autoscaler_scales_down_after_idle_ticks():
+    sim, sched = _sim_sched(workers=3)
+    auto = ElasticAutoscaler(sched, cfg=AutoscalerConfig(
+        min_workers=1, idle_ticks=2, cooldown_ticks=1))
+    assert auto.tick().reason == "idle_streak"
+    d = auto.tick()                     # second qualifying tick fires
+    assert d.action == "scale_down_worker"
+    assert d.reason == "idle:w2" and d.workers == 2
+    assert sched.condemned_workers() == ["w2"]
+    assert auto.tick().reason == "cooldown"
+    assert auto.tick().reason == "idle_streak"
+    d = auto.tick()
+    assert d.action == "scale_down_worker" and d.reason == "idle:w1"
+    # pool shrank with the fleet
+    assert auto.controller.healthy == 1
+    sched.start()
+    sim.run()                           # condemned workers unwind
+
+
+def test_autoscaler_retires_replica_when_workers_at_floor():
+    _, sched = _sim_sched(workers=1)
+    rs = _FakeReplicaSet(n=2)
+    auto = ElasticAutoscaler(
+        sched, serving=rs, replica_factory=lambda: object(),
+        cfg=AutoscalerConfig(min_workers=1, min_replicas=1,
+                             idle_ticks=1, cooldown_ticks=0))
+    d = auto.tick()
+    assert d.action == "scale_down_replica" and d.replicas == 1
+    # both planes at their floors now: nothing left to shrink
+    assert auto.tick().action == "hold"
+    assert auto.replica_scale_downs == 1
+
+
+def test_autoscaler_respects_bounds():
+    _, sched = _sim_sched(workers=2)
+    auto = ElasticAutoscaler(sched, cfg=AutoscalerConfig(
+        min_workers=2, max_workers=2, idle_ticks=1, cooldown_ticks=0))
+
+    def body():
+        pass
+
+    for i in range(10):
+        sched.submit(TaskSpec(tenant="t", fn=body, name=f"b{i}"))
+    assert auto.tick().action == "hold"         # pressured but at max
+    assert auto.scale_ups == 0
+    assert auto.force_scale_up(3) == 0          # force respects max too
+    assert auto.force_scale_down(3) == 0        # ... and min
+
+
+def test_autoscaler_force_hooks_log_decisions():
+    sim, sched = _sim_sched(workers=1)
+    auto = ElasticAutoscaler(sched, cfg=AutoscalerConfig(
+        min_workers=1, max_workers=3))
+    assert auto.force_scale_up(5, reason="chaos") == 2   # capped at max
+    assert [d.action for d in auto.decisions] == \
+        ["scale_up_worker", "scale_up_worker"]
+    assert all(d.reason.startswith("chaos:") for d in auto.decisions)
+    assert auto.force_scale_down(5, reason="chaos") == 2  # floored at min
+    assert auto.elastic_stats()["workers_active"] == 1
+    assert auto.elastic_stats()["pool_healthy"] == 1
+    sched.start()
+    sim.run()
+
+
+def test_autoscaler_elastic_stats_keys():
+    _, sched = _sim_sched(workers=2)
+    auto = ElasticAutoscaler(sched, serving=_FakeReplicaSet(n=2))
+    stats = auto.elastic_stats()
+    assert set(stats) == {
+        "workers_active", "replicas_alive", "scale_up_total",
+        "scale_down_total", "replica_scale_up_total",
+        "replica_scale_down_total", "decisions_total", "pool_healthy",
+        "pool_in_use", "pool_spare",
+    }
+    assert stats["workers_active"] == 2 and stats["replicas_alive"] == 2
+
+
+def _autoscaler_scenario(seed):
+    """Seeded end-to-end run; returns the replay-comparable decision log."""
+    sim = SimExecutor(seed=seed)
+    sched = ServerlessScheduler(workers=1, executor=sim)
+    sched.start()
+    auto = ElasticAutoscaler(sched, cfg=AutoscalerConfig(
+        queue_high=3, max_workers=4, idle_ticks=2, cooldown_ticks=1))
+
+    def body():
+        sim.sleep(0.03)
+
+    for i in range(7):
+        sched.submit(TaskSpec(tenant="t", fn=body, name=f"b{i}"))
+    for k in range(1, 25):
+        sim.call_at(0.02 * k, auto.tick)
+    sched.drain(timeout=60)
+    sim.run()
+    return tuple(auto.decision_log())
+
+
+def test_autoscaler_decision_log_replays_byte_identically():
+    first = _autoscaler_scenario(11)
+    second = _autoscaler_scenario(11)
+    assert first == second
+    assert any(k[1] == "scale_up_worker" for k in first)
+    assert _autoscaler_scenario(12) == _autoscaler_scenario(12)
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-v"]))

@@ -1,0 +1,254 @@
+"""Unified workload orchestration: decode, training and batch tasks on
+one shared :class:`~repro.core.tasks.ServerlessScheduler` pool.
+
+Covers the orchestration PR's placement guarantees:
+
+* all three workload classes drain on a shared pool under one
+  :class:`~repro.core.sim.SimExecutor` clock, with drain + serving
+  invariants intact;
+* the decode lane holds preemption rights — a PENDING decode step on a
+  saturated pool trips one running batch task's cancel token — and the
+  per-job preemption budget bounds it, so batch work cannot starve;
+* a :class:`~repro.runtime.train_loop.TrainStepper` run *through the
+  pool* produces bit-identical parameters to ``Trainer.run``;
+* orchestrator step-tasks are ``system_task``-marked, so the admission
+  controller skips jaxpr verification for trusted engine bodies (they
+  convert arrays mid-step, which is untraceable) while still counting
+  the bypass;
+* ``seepp_orchestrator_*`` / ``seepp_elastic_*`` metric families render.
+"""
+
+import random
+
+import jax
+import numpy as np
+import pytest
+from helpers.invariants import check_drain_invariants, check_serving_invariants
+from helpers.serving import make_engine, make_requests
+
+from repro.core.metrics import MetricsRegistry
+from repro.core.sim import SimExecutor
+from repro.core.tasks import ServerlessScheduler, TaskState, checkpoint
+from repro.runtime.elastic import AutoscalerConfig, ElasticAutoscaler
+from repro.runtime.orchestrator import (OrchestratorConfig,
+                                        WorkloadOrchestrator)
+
+
+class FakeStepper:
+    """Duck-typed TrainStepper: cooperative, virtual-time step bodies."""
+
+    def __init__(self, n, sim, step_s=0.01):
+        self.n = n
+        self.sim = sim
+        self.step_s = step_s
+        self.steps = 0
+
+    def done(self):
+        return self.steps >= self.n
+
+    def step_once(self):
+        checkpoint()
+        self.sim.sleep(self.step_s)
+        self.steps += 1
+        return {"step": float(self.steps)}
+
+
+def _stack(seed=0, workers=2, n_requests=6, cfg=None):
+    sim = SimExecutor(seed=seed)
+    engine, _ = make_engine(executor=sim, step_time_s=0.01)
+    sched = ServerlessScheduler(workers=workers, executor=sim)
+    orch = WorkloadOrchestrator(sched, serving=engine, cfg=cfg)
+    rng = random.Random(seed * 7919 + 5)
+    reqs = make_requests(rng, n_requests, deadline_prob=0.0)
+    for r in reqs:
+        engine.submit(r)
+    return sim, engine, sched, orch, reqs
+
+
+def _batch_body(sim, sleeps=3, step_s=0.01):
+    def body():
+        for _ in range(sleeps):
+            checkpoint()
+            sim.sleep(step_s)
+        return sleeps
+
+    return body
+
+
+def test_mixed_workloads_share_one_pool():
+    sim, engine, sched, orch, reqs = _stack(seed=3, workers=2)
+    orch.stepper = FakeStepper(4, sim)
+    jobs = [orch.submit_batch(_batch_body(sim), name=f"job{i}")
+            for i in range(3)]
+    orch.drain(timeout=120)
+    sched.drain(timeout=30)
+    sim.run()
+
+    assert len(engine.completed) == len(reqs)
+    assert orch.stepper.done() and orch.train_steps == 4
+    assert all(j.state == "done" for j in jobs)
+    stats = orch.orchestrator_stats()
+    assert stats["serving_steps"] >= 2          # decode actually pooled
+    assert stats["batch_jobs_done"] == 3
+    check_serving_invariants(engine, reqs, ctx="mixed pool")
+    check_drain_invariants(
+        sched, [r.task_id for r in sched.records()], ctx="mixed pool")
+
+
+def test_decode_preempts_saturated_batch_pool():
+    """With one worker and long batch bodies, the decode lane must win
+    the worker via preemption — and the victims still finish later."""
+    sim, engine, sched, orch, reqs = _stack(
+        seed=5, workers=1, n_requests=4,
+        cfg=OrchestratorConfig(max_preemptions_per_job=2))
+    jobs = [orch.submit_batch(_batch_body(sim, sleeps=10), name=f"long{i}")
+            for i in range(2)]
+    orch.drain(timeout=240)
+    sched.drain(timeout=30)
+    sim.run()
+
+    assert len(engine.completed) == len(reqs)
+    assert orch.preemptions_total >= 1
+    assert all(j.state == "done" for j in jobs)
+    # every preempted attempt was resubmitted under a fresh task id
+    for j in jobs:
+        assert len(j.task_ids) == j.resubmits + 1
+        states = [sched.record(t).state for t in j.task_ids]
+        assert states[-1] is TaskState.SUCCEEDED
+        assert all(s in (TaskState.PREEMPTED, TaskState.CANCELLED)
+                   for s in states[:-1])
+    check_serving_invariants(engine, reqs, ctx="preemption")
+
+
+def test_preemption_budget_bounds_batch_starvation():
+    sim, engine, sched, orch, reqs = _stack(
+        seed=9, workers=1, n_requests=10,
+        cfg=OrchestratorConfig(max_preemptions_per_job=1))
+    jobs = [orch.submit_batch(_batch_body(sim, sleeps=6), name=f"b{i}")
+            for i in range(3)]
+    orch.drain(timeout=240)
+    sched.drain(timeout=30)
+    sim.run()
+
+    assert all(j.state == "done" for j in jobs), [j.state for j in jobs]
+    # cancel *requests* are bounded per job — the no-starvation guarantee
+    assert all(j.preemptions <= 1 for j in jobs)
+    assert len(engine.completed) == len(reqs)
+
+
+def test_lane_quotas_installed_on_construction():
+    sim = SimExecutor(seed=0)
+    sched = ServerlessScheduler(workers=1, executor=sim)
+    orch = WorkloadOrchestrator(sched)
+    c = orch.cfg
+    assert sched.quota(c.serving_tenant).weight == c.serving_weight
+    assert sched.quota(c.serving_tenant).max_tasks_in_flight == 1
+    assert sched.quota(c.train_tenant).max_tasks_in_flight == 1
+    assert sched.quota(c.batch_tenant).weight == c.batch_weight
+    assert sched.quota(c.batch_tenant).max_tasks_in_flight == c.batch_in_flight
+    assert orch.class_queue_depths() == {"serving": 0, "train": 0, "batch": 0}
+
+
+def test_batch_job_failure_is_terminal():
+    sim = SimExecutor(seed=1)
+    sched = ServerlessScheduler(workers=1, executor=sim)
+    orch = WorkloadOrchestrator(sched)
+
+    def boom():
+        raise ValueError("bad batch")
+
+    def fine():
+        return 7
+
+    bad = orch.submit_batch(boom, name="bad")
+    good = orch.submit_batch(fine, name="good")
+    orch.drain(timeout=60)
+    sched.drain(timeout=30)
+    sim.run()
+    assert bad.state == "failed" and good.state == "done"
+    assert bad.resubmits == 0           # failures are not retried
+    stats = orch.orchestrator_stats()
+    assert stats["batch_jobs_failed"] == 1 and stats["batch_jobs_done"] == 1
+
+
+def test_system_task_bypasses_admission_tracing():
+    """Decode step bodies convert jax arrays mid-step — untraceable by
+    the admission jaxpr verifier.  The ``system_task`` marker must route
+    them around stage-2 (and be counted), or every step lands FAILED."""
+    sim, engine, sched, orch, reqs = _stack(seed=7, workers=2, n_requests=3)
+    orch.drain(timeout=120)
+    sched.drain(timeout=30)
+    sim.run()
+    assert len(engine.completed) == len(reqs)
+    assert orch.serving_step_failures == 0
+    assert sched.telemetry.counter("admission.system_task") >= \
+        orch.serving_steps > 0
+
+
+def test_train_through_pool_matches_direct_run():
+    """Bit-exact training through the shared pool: TrainStepper driven by
+    orchestrator step-tasks must equal Trainer.run on the same seed."""
+    from repro.configs import get_reduced
+    from repro.data import DataConfig, Loader, SyntheticLM
+    from repro.models import build_model
+    from repro.runtime import Trainer, TrainerConfig
+
+    def make_trainer():
+        cfg = get_reduced("gemma2-9b")
+        dc = DataConfig(global_batch=4, seq_len=16, vocab_size=cfg.vocab_size)
+        tr = Trainer(build_model(cfg), Loader(SyntheticLM(dc), dc),
+                     TrainerConfig(total_steps=3, ckpt_every=100,
+                                   log_every=1))
+        params, opt = tr.init_state(jax.random.PRNGKey(0))
+        return tr, params, opt
+
+    tr, params, opt = make_trainer()
+    params_direct, _ = tr.run(params, opt)
+
+    tr2, params2, opt2 = make_trainer()
+    stepper = tr2.stepper(params2, opt2)
+    sim = SimExecutor(seed=2)
+    sched = ServerlessScheduler(workers=2, executor=sim)
+    orch = WorkloadOrchestrator(sched, stepper=stepper)
+    orch.drain(timeout=120)
+    sched.drain(timeout=30)
+    sim.run()
+
+    assert stepper.done() and orch.train_steps == 3
+    direct = jax.tree_util.tree_leaves(params_direct)
+    pooled = jax.tree_util.tree_leaves(stepper.params)
+    assert all(np.array_equal(a, b) for a, b in zip(direct, pooled))
+
+
+def test_metrics_families_render():
+    sim, engine, sched, orch, reqs = _stack(seed=4, workers=2, n_requests=3)
+    auto = ElasticAutoscaler(sched, serving=engine,
+                             cfg=AutoscalerConfig(max_workers=4))
+    orch.autoscaler = auto
+    jobs = [orch.submit_batch(_batch_body(sim), name="m0")]
+    orch.drain(timeout=120)
+    sched.drain(timeout=30)
+    sim.run()
+    assert all(j.state == "done" for j in jobs)
+
+    reg = MetricsRegistry().register_orchestrator(orch).register_elastic(auto)
+    text = reg.render()
+    for name in (
+        "seepp_orchestrator_ticks_total",
+        "seepp_orchestrator_serving_steps_total",
+        "seepp_orchestrator_batch_jobs_done_total",
+        "seepp_orchestrator_preemptions_total",
+        "seepp_orchestrator_class_queue_depth",
+        'workload_class="serving"',
+        "seepp_elastic_workers_active",
+        "seepp_elastic_decisions_total",
+        "seepp_elastic_pool_healthy_devices",
+    ):
+        assert name in text, name
+    dump = reg.dump()
+    assert dump["seepp_orchestrator_batch_jobs_done_total"][""] == 1.0
+    assert dump["seepp_elastic_decisions_total"][""] >= 1.0
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-v"]))

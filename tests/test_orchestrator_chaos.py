@@ -1,0 +1,243 @@
+"""Orchestration chaos sweep: mixed workloads + node kills + scale events.
+
+Each seed builds the full stack on one :class:`~repro.core.sim.SimExecutor`
+— a :class:`~repro.runtime.orchestrator.WorkloadOrchestrator` pumping a
+serving engine, a train stepper and a bag of batch jobs through one
+shared worker pool, with a metrics-driven
+:class:`~repro.runtime.elastic.ElasticAutoscaler` growing/shrinking the
+fleet — then injects node kills, node slowdowns (heartbeat deaths) and
+ops-driven scale events at seeded virtual times, and asserts after the
+drain:
+
+* the scheduler drain invariants across *all three planes' tasks*
+  (decode steps, train steps, batch attempts): every task terminal,
+  exactly-once completion, sandbox ledger balanced;
+* the serving invariants: no lost/doubled completions, zero KV leak;
+* no batch starvation: every job reaches ``done`` and no job is
+  preempted beyond ``max_preemptions_per_job``;
+* the training lane ran to completion;
+* replay determinism: the scheduler trace, per-request results, batch
+  job outcomes AND the autoscaler's decision log are byte-identical
+  when a seed is re-run.
+
+Replay a failing seed with::
+
+    ORCH_CHAOS_SEED_START=N ORCH_CHAOS_SEED_COUNT=1 \
+        PYTHONPATH=src python -m pytest tests/test_orchestrator_chaos.py
+
+CI runs the fixed default window (seeds 0..29); ``make orch-chaos``
+sweeps a rotating window locally.
+"""
+
+import os
+import random
+from collections import Counter
+
+import pytest
+from helpers.invariants import (AuditedPool, WatchedScheduler,
+                                check_drain_invariants,
+                                check_serving_invariants)
+from helpers.serving import make_engine, make_requests
+
+from repro.core.sim import SimExecutor
+from repro.core.tasks import checkpoint
+from repro.runtime.elastic import AutoscalerConfig, ElasticAutoscaler
+from repro.runtime.fault import FailureInjector
+from repro.runtime.orchestrator import (OrchestratorConfig,
+                                        WorkloadOrchestrator)
+
+ORCH_CHAOS_SEED_START = int(os.environ.get("ORCH_CHAOS_SEED_START", "0"))
+ORCH_CHAOS_SEED_COUNT = int(os.environ.get("ORCH_CHAOS_SEED_COUNT", "30"))
+SEEDS = range(ORCH_CHAOS_SEED_START,
+              ORCH_CHAOS_SEED_START + ORCH_CHAOS_SEED_COUNT)
+REPLAY_STRIDE = 10        # every 10th seed is re-run byte-for-byte
+
+PREEMPT_BOUND = 2
+
+
+class _Stepper:
+    """Duck-typed TrainStepper with cooperative virtual-time bodies."""
+
+    def __init__(self, n, sim):
+        self.n = n
+        self.sim = sim
+        self.steps = 0
+
+    def done(self):
+        return self.steps >= self.n
+
+    def step_once(self):
+        checkpoint()
+        self.sim.sleep(0.01)
+        self.steps += 1
+        return {"step": float(self.steps)}
+
+
+def chaos_run(seed):
+    """One seeded orchestration scenario; returns the replay tuple.
+
+    Everything — workload mix, arrival times, fault plan, scale events —
+    derives from ``seed``, so two calls with the same seed must produce
+    byte-identical traces, results, job outcomes and decision logs.
+    """
+    rng = random.Random(seed * 9176 + 29)
+    sim = SimExecutor(seed=seed)
+    pool = AuditedPool()
+    sched = WatchedScheduler(workers=2, executor=sim, pool=pool)
+    sched.enable_heartbeats(timeout_s=0.3, replace_dead=True)
+    sched.start()                      # register workers before baselining
+    engine, _ = make_engine(executor=sim, step_time_s=0.01)
+    auto = ElasticAutoscaler(sched, serving=engine, cfg=AutoscalerConfig(
+        min_workers=1, max_workers=5, queue_high=3, idle_ticks=3,
+        cooldown_ticks=2))
+    stepper = _Stepper(rng.randint(2, 5), sim)
+    orch = WorkloadOrchestrator(
+        sched, serving=engine, stepper=stepper, autoscaler=auto,
+        cfg=OrchestratorConfig(max_preemptions_per_job=PREEMPT_BOUND,
+                               autoscale_every=2))
+
+    # -- workload: staggered decode arrivals + a bag of batch jobs ------
+    reqs = make_requests(rng, rng.randint(5, 10), deadline_prob=0.0,
+                         sample_prob=0.3)
+    for r in reqs:
+        if rng.random() < 0.5:
+            engine.submit(r)
+        else:
+            sim.call_at(round(rng.uniform(0.05, 0.4), 3),
+                        lambda r=r: engine.submit(r))
+
+    # batch bodies are per-run closures on purpose: fresh admission-cache
+    # keys per run keep the cold/warm pattern — and the schedule —
+    # identical between a run and its replay
+    def make_body(sleeps):
+        def body():
+            for _ in range(sleeps):
+                checkpoint()           # cooperative preemption point
+                sim.sleep(0.01)
+            return sleeps
+
+        return body
+
+    jobs = []
+    for i in range(rng.randint(3, 5)):
+        body = make_body(rng.randint(2, 6))
+        if rng.random() < 0.6:
+            jobs.append(orch.submit_batch(body, name=f"job{i}"))
+        else:
+            sim.call_at(round(rng.uniform(0.02, 0.35), 3),
+                        lambda b=body, i=i: jobs.append(
+                            orch.submit_batch(b, name=f"job{i}")))
+
+    # -- fault plan: node faults + ops-driven scale events --------------
+    injector = FailureInjector()
+    if rng.random() < 0.45:            # a node dies outright
+        injector.kill_at_t[round(rng.uniform(0.03, 0.3), 3)] = [
+            f"w{rng.randrange(2)}"]
+    if rng.random() < 0.35:            # a node gets sick: heartbeat death
+        injector.slow_at_t[round(rng.uniform(0.03, 0.3), 3)] = {
+            f"w{rng.randrange(2)}": rng.choice((20.0, 50.0))}
+    if rng.random() < 0.6:             # ops scales the fleet up...
+        injector.scale_up_at_t[round(rng.uniform(0.05, 0.3), 3)] = \
+            rng.randint(1, 2)
+    if rng.random() < 0.4:             # ... and back down later
+        injector.scale_down_at_t[round(rng.uniform(0.4, 0.7), 3)] = 1
+    injector.arm(sim)
+    injector.arm_orchestrator(sim, auto)
+
+    # -- pumps: orchestration ticks + the heartbeat reaper --------------
+    # explicit tick timers (not start()'s self-rescheduling chain) so the
+    # pump survives quiescent gaps before late seeded arrivals
+    for k in range(150):
+        sim.call_at(0.02 * k + 0.005, orch.tick)
+    for k in range(1, 60):
+        sim.call_at(0.05 * k, sched.check_heartbeats)
+
+    sim.run()                          # drive everything to quiescence
+    orch.tick()                        # final harvest
+    sched.drain(timeout=60)
+    sim.run()                          # unwind condemned zombie workers
+
+    # -- invariants across all three planes -----------------------------
+    ctx = f"seed={seed}"
+    assert not orch.has_work(), f"orchestrator not quiescent [{ctx}]"
+    all_ids = [r.task_id for r in sched.records()]
+    check_drain_invariants(sched, all_ids, ctx=ctx)
+    check_serving_invariants(engine, reqs, ctx=ctx)
+    assert len(engine.completed) == len(reqs), ctx
+    assert stepper.done(), f"train lane starved [{ctx}]"
+    assert len(jobs) > 0 and all(j.state == "done" for j in jobs), (
+        f"batch starved: {[(j.name, j.state) for j in jobs]} [{ctx}]"
+    )
+    assert all(j.preemptions <= PREEMPT_BOUND for j in jobs), ctx
+
+    results = tuple(sorted(
+        (r.request_id, tuple(r.tokens), r.error) for r in reqs))
+    outcomes = tuple((j.name, j.state, j.preemptions, j.resubmits)
+                     for j in orch.jobs())
+    counters = Counter({
+        "preemptions": orch.preemptions_total,
+        "resubmits": orch.batch_resubmits_total,
+        "scale_ups": auto.scale_ups,
+        "scale_downs": auto.scale_downs,
+        "hb_deaths": sched.heartbeat_death_count,
+        "kills": len(sim.killed_workers()),
+        "serving_steps": orch.serving_steps,
+    })
+    trace = sched.trace_text()
+    decisions = tuple(auto.decision_log())
+    sched.shutdown()
+    return trace, results, outcomes, decisions, counters
+
+
+# ------------------------------------------------------------ the sweep
+
+
+def test_orchestration_chaos_sweep_holds_all_invariants():
+    """Every seed in the window drains with the three-plane invariants
+    intact, and the sweep as a whole exercised the interesting paths."""
+    totals = Counter()
+    for seed in SEEDS:
+        try:
+            *_, counters = chaos_run(seed)
+        except AssertionError:
+            raise
+        except BaseException as e:     # SimDeadlock, timeout, ...
+            raise AssertionError(
+                f"orchestration chaos crashed [seed={seed}]: "
+                f"{type(e).__name__}: {e}"
+            ) from e
+        totals.update(counters)
+
+    # coverage floor — only meaningful on a full-size sweep (rotating
+    # small windows via `make orch-chaos ORCH_CHAOS_SEED_COUNT=...` skip)
+    if ORCH_CHAOS_SEED_COUNT >= 20:
+        assert totals["serving_steps"] > 0, totals
+        assert totals["preemptions"] > 0, totals
+        assert totals["scale_ups"] > 0, totals
+        assert totals["scale_downs"] > 0, totals
+        assert totals["kills"] > 0, totals
+
+
+def test_orchestration_chaos_replays_byte_identically():
+    """A failing seed is a complete bug report: trace, per-request
+    results, batch outcomes and the autoscaler decision log all replay
+    byte-for-byte."""
+    replayed = 0
+    for seed in SEEDS:
+        if seed % REPLAY_STRIDE:
+            continue
+        first = chaos_run(seed)
+        second = chaos_run(seed)
+        assert first[0] == second[0], f"trace diverged [seed={seed}]"
+        assert first[1] == second[1], f"results diverged [seed={seed}]"
+        assert first[2] == second[2], f"job outcomes diverged [seed={seed}]"
+        assert first[3] == second[3], (
+            f"autoscaler decision log diverged [seed={seed}]"
+        )
+        replayed += 1
+    if ORCH_CHAOS_SEED_COUNT >= 20:
+        assert replayed >= 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-v"]))
