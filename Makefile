@@ -1,7 +1,7 @@
 PYTHON ?= python
 
 .PHONY: test lint bench bench-smoke bench-trend chaos serve-chaos \
-	orch-chaos ci dev-deps
+	orch-chaos examples ci dev-deps
 
 # tier-1 verification: the exact command CI and ROADMAP.md reference
 # (includes the scheduler chaos suite at its fixed default seed window)
@@ -45,6 +45,14 @@ orch-chaos:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_FLAGS) \
 		tests/test_orchestrator_chaos.py
 
+# every demo in examples/ runs headless, end to end (the CI examples
+# job runs this same loop) — a new example file is covered by the
+# wildcard automatically, and the first failure stops the run
+examples:
+	@set -e; for ex in examples/*.py; do \
+		echo "== $$ex"; PYTHONPATH=src $(PYTHON) $$ex; \
+	done
+
 # same invocation as the CI lint job (config in ruff.toml)
 lint:
 	ruff check src tests benchmarks
@@ -79,7 +87,7 @@ bench-trend: bench-smoke
 # everything the CI pipeline runs, locally — including the trend gate
 # (bench-trend wraps bench-smoke, so a green `make ci` predicts a green
 # pipeline instead of silently skipping the regression check)
-ci: lint test bench-trend
+ci: lint test bench-trend examples
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -99,6 +99,9 @@ def main() -> None:
          "reduced-model CPU decode"),
         ("serve_paged_speedup_x", sv["paged_speedup_x"],
          "paged vs dense KV at the largest (slots, max_seq) cell"),
+        ("serve_chunk_stall_reduction_x", sv["chunk_stall_reduction_x"],
+         "p99 inter-token stall, chunked vs monolithic long-prompt "
+         "admit, target:>=3x"),
         ("serve_shard_speedup_x", sv["shard_speedup_x"],
          "mesh-4 vs mesh-1 TP decode; simulated shards share one core"),
     ]

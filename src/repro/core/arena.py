@@ -617,6 +617,16 @@ class PagedKVAllocator:
             np.asarray(self._seq_pages[seq_id], np.int32),
         )
 
+    def resident_tokens(self, seq_id: str) -> int:
+        """Tokens allocated (and, for chunked prefill, scattered) so far.
+
+        Chunked prefill allocates chunk-by-chunk, so mid-prefill this is
+        the last chunk boundary — the position a partially-prefilled
+        sequence resumes from after an eviction that kept its pages.
+        Returns 0 for unknown sequences (dropped pages = no progress).
+        """
+        return self._tokens.get(seq_id, 0)
+
     def page_table(
         self,
         max_pages: Optional[int] = None,

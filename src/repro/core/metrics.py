@@ -595,6 +595,10 @@ class MetricsRegistry:
             ("resumed_total", "serving_resumed_total", "counter",
              "Evicted sequences re-admitted without a prefill (paged "
              "mode: the pages survived, resume is a page-table edit)."),
+            ("prefill_chunks_total", "serving_prefill_chunks_total",
+             "counter",
+             "Bounded prefill chunks executed (chunked prefill: each "
+             "advances at most prefill_chunk_tokens prompt rows)."),
             ("kv_pages_allocated_total", "serving_kv_pages_allocated_total",
              "counter", "KV pages faulted in from the arena."),
             ("kv_pages_freed_total", "serving_kv_pages_freed_total",
@@ -793,6 +797,10 @@ class MetricsRegistry:
              "Worker scale-up actions taken."),
             ("scale_down_total", "elastic_scale_down_total", "counter",
              "Worker scale-down actions taken."),
+            ("class_scale_down_total", "elastic_class_scale_down_total",
+             "counter",
+             "Worker scale-downs triggered by one workload class's "
+             "queue idling (per-class lane shrink)."),
             ("replica_scale_up_total", "elastic_replica_scale_up_total",
              "counter", "Replica scale-up actions taken."),
             ("replica_scale_down_total", "elastic_replica_scale_down_total",

@@ -256,6 +256,109 @@ class TransformerLM:
         }
         return state, logits
 
+    def prefill_chunk(self, params, tokens, state, start):
+        """Chunked dense prefill: consume ``tokens`` at positions
+        ``[start, start + S)`` of one slot's decode state, attending
+        through the cache rows earlier chunks already wrote.
+
+        ``tokens``: (1, S) — the engine prefills one slot at a time;
+        ``state`` is a batch-of-one decode state (the engine slices its
+        slot out of the batched state).  Row ``start + i`` attends the
+        cached rows ``< start`` plus chunk rows ``<= i`` — exactly
+        ``prefill``'s causal mask started mid-sequence, so chunked
+        prefill composes to the monolithic result.  Returns the updated
+        state (chunk K/V written at ``[start, start + S)``,
+        ``pos = start + S``) and logits at the chunk's last position —
+        the dense analogue of ``paged_prefill_at``.
+        """
+        cfg = self.cfg
+        if cfg.attn_logit_softcap or any(w != 0 for w in self.windows):
+            raise NotImplementedError(
+                "chunked dense prefill supports neither attention logit "
+                "softcap nor sliding windows"
+            )
+        B, S = tokens.shape
+        max_seq = state["cache_k"].shape[2]
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        G = H // K
+        scale = cfg.query_scale or (1.0 / math.sqrt(hd))
+        positions = start + jnp.arange(S)
+        h = self._embed_inputs(params, tokens)
+        prefix_live = (jnp.arange(max_seq) < start)[None, None, None, None, :]
+        causal = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])[
+            None, :, None, None, :
+        ]
+
+        def body(h, xs):
+            p, base, ck, cv = xs                  # ck: (B, max_seq, K, hd)
+            a = rms_norm(h, p["ln1"], cfg.norm_eps, plus_one=cfg.post_norms)
+            q = jnp.einsum("bsd,dhk->bshk", a, p["attn"]["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", a, p["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", a, p["attn"]["wv"])
+            if cfg.qkv_bias:
+                q, k, v = (q + p["attn"]["bq"], k + p["attn"]["bk"],
+                           v + p["attn"]["bv"])
+            if cfg.qk_norm:
+                q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+            if base is not None:
+                q = rope(q, positions, base)
+                k = rope(k, positions, base)
+            qf = q.reshape(B, S, K, G, hd).astype(jnp.float32) * scale
+            s_pre = jnp.einsum(
+                "bskgh,bpkh->bskgp", qf, ck.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            s_pre = jnp.where(prefix_live, s_pre, NEG_INF)
+            s_suf = jnp.einsum(
+                "bskgh,btkh->bskgt", qf, k.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            s_suf = jnp.where(causal, s_suf, NEG_INF)
+            w = jax.nn.softmax(
+                jnp.concatenate([s_pre, s_suf], axis=-1), axis=-1
+            )
+            o = jnp.einsum(
+                "bskgp,bpkh->bskgh", w[..., :max_seq],
+                cv.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ) + jnp.einsum(
+                "bskgt,btkh->bskgh", w[..., max_seq:], v.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            o = o.reshape(B, S, H * hd).astype(h.dtype) @ p["attn"]["wo"]
+            if cfg.post_norms:
+                o = rms_norm(o, p["ln1_post"], cfg.norm_eps, plus_one=True)
+            h = h + o
+            m = rms_norm(h, p["ln2"], cfg.norm_eps, plus_one=cfg.post_norms)
+            if cfg.is_moe:
+                m, _ = moe_block(m, p["moe"], cfg)
+            else:
+                m = gated_mlp(m, p["mlp"]["wu"], p["mlp"].get("wg"),
+                              p["mlp"]["wd"], cfg.activation)
+            if cfg.post_norms:
+                m = rms_norm(m, p["ln2_post"], cfg.norm_eps, plus_one=True)
+            return constrain(h + m, "data", "model", None), (k, v)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h,
+            (params["layers"], jnp.asarray(self.rope_bases),
+             state["cache_k"], state["cache_v"]),
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps,
+                     plus_one=cfg.post_norms)
+        logits = self._unembed(params, h[:, -1])
+        new_state = {
+            "cache_k": jax.lax.dynamic_update_slice_in_dim(
+                state["cache_k"], ks.astype(state["cache_k"].dtype), start, 2
+            ),
+            "cache_v": jax.lax.dynamic_update_slice_in_dim(
+                state["cache_v"], vs.astype(state["cache_v"].dtype), start, 2
+            ),
+            "pos": jnp.full_like(state["pos"], start + S),
+        }
+        return new_state, logits
+
     def decode_step(self, params, state, tokens):
         """tokens: (B,) — one new token per sequence."""
         cfg = self.cfg

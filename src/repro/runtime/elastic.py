@@ -178,6 +178,14 @@ class AutoscalerConfig:
     busy_low: float = 0.25
     #: consecutive qualifying ticks before a scale-down fires
     idle_ticks: int = 3
+    #: >0: per-class idle scale-down.  A workload class (e.g. "train",
+    #: "batch") whose *own* queue has been empty this many consecutive
+    #: ticks — after having shown demand at least once — retires one
+    #: worker, without waiting for the whole pool to go quiet the way
+    #: the global ``idle_ticks`` path does.  Needs a class-queue-depth
+    #: source bound via :meth:`ElasticAutoscaler.bind_class_queues`
+    #: (the orchestrator binds its own).  0 (default) = off
+    class_idle_ticks: int = 0
     #: ticks of enforced hold after any scale action
     cooldown_ticks: int = 2
     #: device-pool devices each worker represents on the controller
@@ -205,10 +213,12 @@ class ElasticAutoscaler:
         controller: Optional[ElasticController] = None,
         cfg: Optional[AutoscalerConfig] = None,
         telemetry=None,
+        class_queues: Optional[Callable[[], dict]] = None,
     ) -> None:
         self.scheduler = scheduler
         self.serving = serving
         self.replica_factory = replica_factory
+        self._class_queues = class_queues
         self.cfg = cfg or AutoscalerConfig()
         self.telemetry = telemetry or scheduler.telemetry
         self._exec = scheduler.executor
@@ -220,10 +230,16 @@ class ElasticAutoscaler:
         self.decisions: List[ScaleDecision] = []
         self.scale_ups = 0
         self.scale_downs = 0
+        self.class_scale_downs = 0
         self.replica_scale_ups = 0
         self.replica_scale_downs = 0
         self._cooldown = 0
         self._idle_streak = 0
+        #: per-class consecutive-idle-tick streaks; a class only accrues
+        #: one after it has *shown demand* (appeared with a non-zero
+        #: queue), so classes that never ran can't trigger scale-downs
+        self._class_idle: dict = {}
+        self._class_seen: set = set()
         self._ticks = 0
         self._last_t = self._exec.now()
         self._last_busy = self._busy_total()
@@ -259,6 +275,25 @@ class ElasticAutoscaler:
         replicas = getattr(self.serving, "alive", None)
         return len(replicas()) if replicas is not None else 0
 
+    def bind_class_queues(self, fn: Callable[[], dict]) -> None:
+        """Bind the per-class queue-depth source (class name -> depth).
+
+        The orchestrator binds its ``class_queue_depths`` here so
+        ``class_idle_ticks`` can shrink a workload class's lane when
+        *that class's* queue idles, independent of the rest of the pool.
+        """
+        self._class_queues = fn
+
+    def _update_class_streaks(self) -> None:
+        if self.cfg.class_idle_ticks <= 0 or self._class_queues is None:
+            return
+        for cls, depth in sorted(self._class_queues().items()):
+            if depth > 0:
+                self._class_seen.add(cls)
+                self._class_idle[cls] = 0
+            elif cls in self._class_seen:
+                self._class_idle[cls] = self._class_idle.get(cls, 0) + 1
+
     # ---------------------------------------------------------------- tick
 
     def tick(self) -> ScaleDecision:
@@ -280,6 +315,7 @@ class ElasticAutoscaler:
         self._last_t, self._last_busy = now, busy
         self._last_wait = (wait_n, wait_sum)
         self._ticks += 1
+        self._update_class_streaks()
 
         decision = self._decide(
             now, qdepth, sdepth, busy_frac, wait_mean, workers,
@@ -331,6 +367,34 @@ class ElasticAutoscaler:
             return ScaleDecision(now, "scale_up_replica", "serving_queue_high",
                                  qdepth, sdepth, busy_frac, wait_mean,
                                  n, replicas + 1)
+
+        # -- scale down: one workload class's lane went quiet -----------
+        # fires without waiting for the *whole* pool to idle: a class
+        # that showed demand and then drained for class_idle_ticks
+        # consecutive ticks hands one worker back, even while other
+        # classes are still busy.  The class must show demand again
+        # before it can trigger another shrink
+        if cfg.class_idle_ticks > 0 and n > cfg.min_workers:
+            for cls in sorted(self._class_idle):
+                if self._class_idle[cls] < cfg.class_idle_ticks:
+                    continue
+                name = self.scheduler.retire_worker()
+                if name is None:
+                    break
+                self.controller.lose(
+                    cfg.devices_per_worker, step=self._ticks,
+                    reason=f"class-idle:{cls}",
+                )
+                self.scale_downs += 1
+                self.class_scale_downs += 1
+                self._class_idle[cls] = 0
+                self._class_seen.discard(cls)
+                self._cooldown = cfg.cooldown_ticks
+                self._idle_streak = 0
+                return ScaleDecision(
+                    now, "scale_down_worker", f"class_idle:{cls}:{name}",
+                    qdepth, sdepth, busy_frac, wait_mean, n - 1, replicas,
+                )
 
         # -- scale down: sustained idle capacity ------------------------
         idle = qdepth == 0 and busy_frac < cfg.busy_low
@@ -421,6 +485,7 @@ class ElasticAutoscaler:
             "replicas_alive": self._replica_count(),
             "scale_up_total": self.scale_ups,
             "scale_down_total": self.scale_downs,
+            "class_scale_down_total": self.class_scale_downs,
             "replica_scale_up_total": self.replica_scale_ups,
             "replica_scale_down_total": self.replica_scale_downs,
             "decisions_total": len(self.decisions),

@@ -168,6 +168,12 @@ class FailureInjector:
     #: blast radius of cross-tenant prefix sharing.  A no-op when
     #: nothing is shared at that instant (the engine returns None)
     poison_shared_at_t: Dict[float, int] = field(default_factory=dict)
+    #: virtual time → index (sorted order) of a sequence that is *mid
+    #: chunked-prefill* — some but not all of its prompt rows are
+    #: resident.  Poison drops the partial pages, so re-admission
+    #: restarts the chunked prefill from zero; a no-op when nothing is
+    #: mid-prefill at that instant (the engine returns None)
+    poison_prefilling_at_t: Dict[float, int] = field(default_factory=dict)
     #: virtual time → replica indices whose process dies *loudly* (exit
     #: observed): the ReplicaSet evacuates and re-homes immediately
     kill_replica_at_t: Dict[float, List[int]] = field(default_factory=dict)
@@ -235,6 +241,10 @@ class FailureInjector:
             def _poison_shared(idx=self.poison_shared_at_t[when]) -> None:
                 engine.poison_shared(idx)
             sim.call_at(when, _poison_shared)
+        for when in sorted(self.poison_prefilling_at_t):
+            def _poison_pref(idx=self.poison_prefilling_at_t[when]) -> None:
+                engine.poison_prefilling(idx)
+            sim.call_at(when, _poison_pref)
 
     def arm_replicas(self, sim, replica_set) -> None:
         """Schedule the replica-plane chaos plan onto a ``SimExecutor``.

@@ -136,6 +136,11 @@ class WorkloadOrchestrator:
         self.stepper = stepper            # TrainStepper (or duck-type)
         self.autoscaler = autoscaler
         self.cfg = cfg or OrchestratorConfig()
+        if autoscaler is not None and hasattr(autoscaler, "bind_class_queues"):
+            # per-class idle scale-down reads the orchestrator's lane
+            # depths: a class whose queue drained can shrink its lane
+            # while the other classes stay busy
+            autoscaler.bind_class_queues(self.class_queue_depths)
         self._exec = scheduler.executor
         c = self.cfg
         scheduler.set_quota(c.serving_tenant, TenantQuota(

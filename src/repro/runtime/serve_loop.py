@@ -29,6 +29,18 @@ re-prefill, no state copy) — while a poisoned sequence still drops its
 pages and re-prefills, because they are corrupt by definition.
 ``kv_mode="dense"`` keeps the per-slot dense reservation for A/B.
 
+With ``ServerConfig.prefill_chunk_tokens > 0`` prefill is *preemptible*:
+a freshly admitted slot enters a PREFILLING phase and each ``step()``
+advances at most one token-budget's worth of prefill rows across the
+prefilling slots before decoding the fully-resident ones — so a single
+multi-thousand-token prompt can no longer stall every live stream for
+its full prefill.  Paged mode scatters chunk-by-chunk (later chunks
+attend through the rows earlier chunks wrote, via the same
+``paged_prefill_at`` primitive prefix sharing uses); dense mode threads
+a per-slot prefill carry.  Token streams are bit-exact vs monolithic
+prefill, and a mid-prefill paged batch kill resumes from the last chunk
+boundary.
+
 Token selection is a seeded sampler (:mod:`repro.runtime.sampling`):
 temperature / top-k / top-p knobs ride on each :class:`Request` and every
 draw is keyed by ``(request.seed, token index)``, so chaos replay — and
@@ -161,6 +173,19 @@ class ServerConfig:
     #: ``flush_prefix_cache()``.  0 (default) = pages die with the
     #: request, sharing only hits live/resident donors
     prefix_cache_seqs: int = 0
+    #: >0: per-step prefill-token budget (chunked prefill).  Admission no
+    #: longer prefills its whole prompt synchronously before the decode
+    #: batch runs: a freshly admitted slot enters a PREFILLING phase, each
+    #: ``step()`` advances at most this many prompt tokens across the
+    #: prefilling slots, then decodes the fully-resident slots — so one
+    #: multi-thousand-token prompt can no longer stall every live stream
+    #: for its full prefill.  A slot joins the decode batch once its
+    #: prompt is fully resident; a mid-prefill eviction that keeps pages
+    #: (paged batch kill) resumes from the last chunk boundary.  Token
+    #: streams are bit-exact vs monolithic prefill.  Requires
+    #: ``incremental`` and a model exposing ``paged_prefill_at`` (paged)
+    #: or ``prefill_chunk`` (dense).  0 (default) = monolithic prefill
+    prefill_chunk_tokens: int = 0
 
 
 class ServingEngine:
@@ -198,6 +223,12 @@ class ServingEngine:
         self._post_tenant = postprocess_tenant
         self.kv = kv if kv is not None else self._build_kv(model, cfg)
         self._lock = threading.RLock()
+        self._chunked = cfg.prefill_chunk_tokens > 0
+        if self._chunked and not cfg.incremental:
+            raise ValueError(
+                "prefill_chunk_tokens requires incremental=True (the "
+                "rebatching baseline re-prefills whole dense batches)"
+            )
 
         B = cfg.max_batch
         self._slots: List[Optional[Request]] = [None] * B
@@ -298,15 +329,34 @@ class ServingEngine:
                 and hasattr(model, "paged_prefill_at")
                 and hasattr(model, "paged_copy_page")
             )
-            if self._sharing:
-                # suffix prefill reads the pool (donor rows) but does not
-                # mutate it — only the scatter/copy donate the store
+            if self._chunked and not hasattr(model, "paged_prefill_at"):
+                raise ValueError(
+                    "prefill_chunk_tokens (paged) needs a model exposing "
+                    "paged_prefill_at — later chunks attend through the "
+                    "rows earlier chunks scattered"
+                )
+            if self._sharing or self._chunked:
+                # suffix/chunk prefill reads the pool (resident rows) but
+                # does not mutate it — only the scatter/copy donate the
+                # store
                 self._prefill_rows_at = jax.jit(model.paged_prefill_at)
+            if self._sharing:
                 self._copy_page = jax.jit(
                     model.paged_copy_page, donate_argnums=(0,)
                 )
         else:
             self._sharing = False
+            if self._chunked and not hasattr(model, "prefill_chunk"):
+                raise ValueError(
+                    "prefill_chunk_tokens (dense) needs a model exposing "
+                    "prefill_chunk — later chunks continue the carry "
+                    "earlier chunks built"
+                )
+            if self._chunked:
+                self._prefill_chunk = jax.jit(model.prefill_chunk)
+                # pristine single-slot state: the first chunk's carry.
+                # Never donated, so one copy serves every admission
+                self._fresh_sub = model.init_decode_state(1, cfg.max_seq)
             # decode state lives per-slot: one persistent batch-state
             # whose slot i is overwritten (incremental mode) on admission
             self._state = model.init_decode_state(B, cfg.max_seq)
@@ -343,6 +393,22 @@ class ServingEngine:
         self._arena_poisons = 0
         self._evictions = 0
         self._resumes = 0
+        self._prefill_chunks = 0
+        #: PREFILLING sequences: seq_id -> consumed-stream tokens made
+        #: resident so far (the last chunk boundary).  An entry exists
+        #: exactly while a sequence's prefill is incomplete — slotted, or
+        #: evicted with its pages kept (paged batch kill), where it marks
+        #: the point the resumed prefill continues from.  Dropped whenever
+        #: the pages drop: no pages, no partial progress
+        self._chunk_progress: Dict[str, int] = {}
+        #: dense chunked prefill only: seq_id -> the single-slot carry
+        #: state accumulated so far.  Held *outside* the batch state until
+        #: the final chunk installs it, so intervening decode steps (which
+        #: run the whole batch) can never corrupt a half-built slot
+        self._chunk_carry: Dict[str, Any] = {}
+        #: executor timestamp of each live request's latest sampled token
+        #: (keyed by request id) — feeds the inter-token stall histogram
+        self._last_tok_t: Dict[int, float] = {}
         self._sampled = {"greedy": 0, "temperature": 0, "topk": 0, "topp": 0}
         self._prefix_hits = 0
         self._prefix_tokens_saved = 0
@@ -633,8 +699,16 @@ class ServingEngine:
             resume = self.kv_mode == "paged" and self.kv.has_sequence(seq_id)
             start = 0
             if resume:
-                # pages survived the eviction: re-entry is a table edit
-                self.kv.ensure_tokens(seq_id, len(r.prompt) + len(r.tokens))
+                if seq_id in self._chunk_progress:
+                    # the eviction landed mid-prefill and kept the pages:
+                    # the chunk pump continues from the last boundary —
+                    # nothing already resident is ever re-prefilled
+                    pass
+                else:
+                    # pages survived the eviction: re-entry is a table edit
+                    self.kv.ensure_tokens(
+                        seq_id, len(r.prompt) + len(r.tokens)
+                    )
                 self._resumes += 1
             else:
                 self.kv.add_sequence(seq_id)
@@ -655,7 +729,13 @@ class ServingEngine:
                             "prefix_share", r,
                             f"donor={donor} tokens={match}"
                         )
-                self.kv.append_tokens(seq_id, total - start)
+                if self._chunked:
+                    # PREFILLING phase: pages are allocated chunk-by-chunk
+                    # by the pump, so a partial sequence holds exactly the
+                    # rows it has scattered — the resume point
+                    self._chunk_progress[seq_id] = start
+                else:
+                    self.kv.append_tokens(seq_id, total - start)
             self.admission.slot_acquired(r.tenant)
             self._admitted[r.tenant] = self._admitted.get(r.tenant, 0) + 1
             self._note("admit", r, f"slot={slot}" + (" resume" if resume else ""))
@@ -795,6 +875,157 @@ class ServingEngine:
                 # rows are resident now: this prompt can donate
                 self.kv.register_prefix(seq_id, r.prompt)
 
+    # ----------------------------------------------------- chunked prefill
+
+    def _pump_prefill_chunks(self) -> bool:
+        """Advance PREFILLING slots by at most one token budget, total.
+
+        The per-step budget (``cfg.prefill_chunk_tokens``) is shared
+        across prefilling slots in slot order, so the per-tick prefill
+        work is bounded no matter how many long prompts were admitted at
+        once — the decode batch that follows runs every tick regardless.
+        Returns whether any chunk ran.
+        """
+        budget = self.cfg.prefill_chunk_tokens
+        with self._lock:
+            pending = [
+                (i, r, self._chunk_progress[self._seq_id(r)])
+                for i, r in enumerate(self._slots)
+                if r is not None and self._seq_id(r) in self._chunk_progress
+            ]
+        chunk_fn = (
+            self._prefill_chunk_paged if self.kv_mode == "paged"
+            else self._prefill_chunk_dense
+        )
+        worked = False
+        for slot, r, p in pending:
+            if budget <= 0:
+                break
+            n = min(budget, len(r.prompt) + len(r.tokens) - p)
+            if n <= 0:
+                continue
+            chunk_fn(slot, r, p, n)
+            budget -= n
+            worked = True
+        return worked
+
+    def _prefill_chunk_paged(self, slot: int, r: Request,
+                             p: int, n: int) -> None:
+        """One paged chunk: scatter consumed-stream rows [p, p+n) into
+        the sequence's arena pages.
+
+        Pages are allocated chunk-by-chunk, so mid-prefill the sequence
+        holds exactly its scattered rows.  Chunks after the first (and
+        any chunk of a shared-prefix admission) attend through the
+        resident rows via ``paged_prefill_at`` — the same primitive
+        suffix prefill uses, which is why chunking composes with prefix
+        sharing and COW.  Same ownership re-checks as monolithic
+        prefill: a chaos eviction mid-chunk discards the work, and the
+        progress entry (kept across page-preserving evictions) marks
+        where the resumed prefill continues.
+        """
+        with self._lock:
+            if self._slots[slot] is not r:
+                return                     # evicted before the chunk ran
+            seq = self._sequence_tokens(r)
+            seq_id = self._seq_id(r)
+            self.kv.ensure_tokens(seq_id, p + n)
+            if p:
+                # the sequence's own page-table row, bucketed like the
+                # decode table so jit compiles O(log max_pages) variants
+                table = self.kv.page_table(seq_ids=[seq_id])
+                w = max(table.shape[1], 1)
+                bucket = 1 << (w - 1).bit_length()
+                if bucket > table.shape[1]:
+                    table = np.pad(
+                        table, ((0, 0), (0, bucket - table.shape[1])),
+                        constant_values=-1,
+                    )
+        if p:
+            rows, _ = self._prefill_rows_at(
+                self.params, jnp.asarray(seq[None, p:p + n]), self.kv.store,
+                jnp.asarray(table), jnp.asarray(p, jnp.int32),
+            )
+        else:
+            rows, _ = self._prefill_rows(
+                self.params, jnp.asarray(seq[None, :n])
+            )
+        with self._lock:
+            if self._slots[slot] is not r:
+                return                     # evicted mid-chunk: discard
+            self._prefill_chunks += 1
+            self._prefills["incremental"] += 1
+            self._prefill_tokens["incremental"] += n
+            self._prefills_by_request[r.request_id] = (
+                self._prefills_by_request.get(r.request_id, 0) + 1
+            )
+            self._note("prefill_chunk", r, f"slot={slot} tokens={n} at={p}")
+            page = self.kv.tokens_per_page
+            for lp in range(p // page, -(-(p + n) // page)):
+                # a write into a shared page (the trailing partial page
+                # of a shared prefix) triggers COW before the scatter
+                self._cow_locked(seq_id, lp)
+            page_ids, offsets = self.kv.token_positions(seq_id, p, n)
+            self.kv.swap_store(self._scatter_rows(
+                self.kv.store, rows,
+                jnp.asarray(page_ids), jnp.asarray(offsets),
+            ))
+            if p + n >= seq.size:
+                # fully resident: leave the PREFILLING phase — the slot
+                # joins the decode batch from the next tick
+                del self._chunk_progress[seq_id]
+                if self._sharing:
+                    self.kv.register_prefix(seq_id, r.prompt)
+            else:
+                self._chunk_progress[seq_id] = p + n
+
+    def _prefill_chunk_dense(self, slot: int, r: Request,
+                             p: int, n: int) -> None:
+        """One dense chunk: fold consumed-stream rows [p, p+n) into the
+        sequence's prefill carry.
+
+        The carry lives *outside* the batch state until the final chunk
+        installs it via ``_write_slot`` — intervening decode steps run
+        the whole batch (a prefilling slot's lane computes garbage that
+        is simply never sampled), so installing early would let them
+        corrupt a half-built slot.  ``model.prefill_chunk`` continues
+        the carry exactly where the previous chunk stopped, which is
+        what makes chunked == monolithic bit-exact.
+        """
+        with self._lock:
+            if self._slots[slot] is not r:
+                return                     # evicted before the chunk ran
+            seq = self._sequence_tokens(r)
+            seq_id = self._seq_id(r)
+            carry = self._chunk_carry.get(seq_id, self._fresh_sub)
+        carry, _ = self._prefill_chunk(
+            self.params, jnp.asarray(seq[None, p:p + n]), carry,
+            jnp.asarray(p, jnp.int32),
+        )
+        with self._lock:
+            if self._slots[slot] is not r:
+                return                     # evicted mid-chunk: discard
+            self.kv.ensure_tokens(seq_id, p + n)
+            self._prefill_chunks += 1
+            self._prefills["incremental"] += 1
+            self._prefill_tokens["incremental"] += n
+            self._prefills_by_request[r.request_id] = (
+                self._prefills_by_request.get(r.request_id, 0) + 1
+            )
+            self._note("prefill_chunk", r, f"slot={slot} tokens={n} at={p}")
+            if p + n >= seq.size:
+                del self._chunk_progress[seq_id]
+                self._chunk_carry.pop(seq_id, None)
+                done = True
+            else:
+                self._chunk_progress[seq_id] = p + n
+                self._chunk_carry[seq_id] = carry
+                done = False
+        if done:
+            self._state = self._write_slot(
+                self._state, carry, jnp.asarray(slot, jnp.int32)
+            )
+
     def _prefill_full(self) -> None:
         """Rebatching baseline: re-prefill every live slot (the old loop)."""
         with self._lock:
@@ -838,7 +1069,12 @@ class ServingEngine:
         self._evict_poisoned()
         with self._lock:
             admitted = self._admit_locked()
-        if admitted:
+        if self._chunked:
+            # chunked prefill pumps every tick (not just on admission):
+            # a prompt larger than one budget finishes over several steps
+            if self._pump_prefill_chunks():
+                self.kv.arena.mm.host_vma_count()
+        elif admitted:
             if self.cfg.incremental:
                 prefill = (
                     self._prefill_slot_paged if self.kv_mode == "paged"
@@ -854,7 +1090,12 @@ class ServingEngine:
             self.kv.arena.mm.host_vma_count()
         paged = self.kv_mode == "paged"
         with self._lock:
-            live = [(i, r) for i, r in enumerate(self._slots) if r is not None]
+            # PREFILLING slots are not live: they join the decode batch
+            # only once their prompt is fully resident
+            live = [
+                (i, r) for i, r in enumerate(self._slots)
+                if r is not None and self._seq_id(r) not in self._chunk_progress
+            ]
             if live and paged:
                 # reserve this step's token row per live slot (idempotent
                 # — a mid-step eviction + resume replays the same count),
@@ -873,8 +1114,15 @@ class ServingEngine:
                             self._seq_id(r),
                             int(pos[i]) // self.kv.tokens_per_page,
                         )
+                # a PREFILLING slot maps to an all--1 table row exactly
+                # like an empty one: the decode step's write for that
+                # lane scatters out of bounds and is dropped, so partial
+                # chunk rows can never be clobbered by decode garbage
                 seq_ids = [
-                    self._seq_id(r) if r is not None else None
+                    self._seq_id(r)
+                    if r is not None
+                    and self._seq_id(r) not in self._chunk_progress
+                    else None
                     for r in self._slots
                 ]
                 table = self.kv.page_table(seq_ids=seq_ids)
@@ -904,6 +1152,7 @@ class ServingEngine:
         logits_np = np.asarray(logits)
 
         retiring: List[Request] = []
+        now_t = self._exec.now()
         with self._lock:
             self._decode_steps += 1
             for i, r in live:
@@ -916,6 +1165,25 @@ class ServingEngine:
                 )
                 self._sampled[method] += 1
                 r.tokens.append(tok)
+                if len(r.tokens) == 1:
+                    # first sampled token ever for this request (token
+                    # streams survive evictions, so this fires once):
+                    # time-to-first-token from *arrival* — admit wait,
+                    # queueing and the whole prefill are all inside it
+                    self.telemetry.observe(
+                        "serving.ttft_seconds", now_t - r.arrived_at,
+                        tenant=r.tenant,
+                    )
+                else:
+                    prev = self._last_tok_t.get(r.request_id)
+                    if prev is not None:
+                        # inter-token stall: gaps include any eviction
+                        # outage or prefill-induced stall between ticks
+                        self.telemetry.observe(
+                            "serving.intertoken_seconds", now_t - prev,
+                            tenant=r.tenant,
+                        )
+                self._last_tok_t[r.request_id] = now_t
                 if paged:
                     # the row was reserved pre-step; make the count stick
                     self.kv.ensure_tokens(
@@ -933,6 +1201,7 @@ class ServingEngine:
                         self.kv.drop_sequence(self._seq_id(r))
                     self.admission.slot_released(r.tenant)
                     self._slots[i] = None
+                    self._last_tok_t.pop(r.request_id, None)
                     self._note("retire", r, f"slot={i}")
                     retiring.append(r)
         for r in retiring:
@@ -1129,6 +1398,10 @@ class ServingEngine:
         """
         if drop_pages:
             self.kv.drop_sequence(self._seq_id(r))
+            # partial prefill progress dies with the pages: re-admission
+            # restarts the chunked prefill from zero
+            self._chunk_progress.pop(self._seq_id(r), None)
+            self._chunk_carry.pop(self._seq_id(r), None)
         self.admission.slot_released(r.tenant)
         self._slots[slot] = None
         self._evictions += 1
@@ -1193,6 +1466,9 @@ class ServingEngine:
                 heap.clear()
             self._deadlines.clear()
             self._parked.clear()
+            self._chunk_progress.clear()
+            self._chunk_carry.clear()
+            self._last_tok_t.clear()
             for seq_id in self.kv.sequence_ids():
                 # evicted-but-resident sequences and parked donors: the
                 # pages died with the mesh member
@@ -1252,6 +1528,30 @@ class ServingEngine:
         self.telemetry.count("serving.arena_poison")
         return victim
 
+    def poison_prefilling(self, index: int = 0) -> Optional[str]:
+        """Chaos: poison the ``index``-th *mid-prefill* sequence's pages.
+
+        Targets chunked prefill specifically: the victim has scattered
+        some but not all of its prompt rows.  The next :meth:`step`
+        detects it via ``kv.validate()``, evicts the slot and drops the
+        partial pages (poisoned rows are corrupt by definition), so
+        re-admission restarts the chunked prefill from zero — the
+        byte-identical-replay invariant must hold across exactly that
+        path.  Returns None when nothing is mid-prefill right now.
+        """
+        with self._lock:
+            prefilling = sorted(self._chunk_progress)
+            if not prefilling:
+                return None
+            victim = prefilling[index % len(prefilling)]
+            self.kv.poison_sequence(victim)
+            self._arena_poisons += 1
+            self._trace.append(
+                f"{self._exec.now():.6f} poison_prefilling seq={victim}"
+            )
+        self.telemetry.count("serving.arena_poison")
+        return victim
+
     def _evict_poisoned(self) -> None:
         # validate under the engine lock: every kv mutation (admit,
         # retire, kill_batch from a watchdog thread) happens under it,
@@ -1277,6 +1577,8 @@ class ServingEngine:
                     # falls back to a clean prefill instead of resuming
                     # off corrupt rows
                     self.kv.drop_sequence(seq_id)
+                    self._chunk_progress.pop(seq_id, None)
+                    self._chunk_carry.pop(seq_id, None)
                     self._trace.append(
                         f"{self._exec.now():.6f} drop_resident seq={seq_id}"
                     )
@@ -1323,6 +1625,7 @@ class ServingEngine:
                 "evicted_total": self._evictions,
                 "kv_mode": self.kv_mode,
                 "resumed_total": self._resumes,
+                "prefill_chunks_total": self._prefill_chunks,
                 "sampled_tokens_total": dict(self._sampled),
                 "kv_pages_allocated_total": self.kv.pages_allocated,
                 "kv_pages_freed_total": self.kv.pages_freed,

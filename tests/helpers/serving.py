@@ -87,6 +87,26 @@ class ToyLM:
         logits = maybe_psum(h @ params["out"])
         return {"h": h, "pos": state["pos"] + 1}, logits
 
+    def prefill_chunk(self, params, tokens, state, start):
+        """Chunked dense prefill: fold the chunk into the slot's state.
+
+        With ``start == 0`` the recurrence restarts from zeros (the slot
+        may hold a stale retiree's state); otherwise it continues from
+        the state the previous chunk left — integer math, so chunked
+        equals monolithic prefill bit-for-bit.
+        """
+        B, S = tokens.shape
+        h0 = jnp.where(
+            start > 0, state["h"], jnp.zeros((B, self.d), jnp.int32)
+        )
+
+        def body(h, toks):
+            return self._advance(params, h, toks), None
+
+        h, _ = jax.lax.scan(body, h0, jnp.swapaxes(tokens, 0, 1))
+        logits = maybe_psum(h @ params["out"])
+        return {"h": h, "pos": jnp.full_like(state["pos"], start + S)}, logits
+
     # -------------------------------------------- paged-decode interface
     #
     # The "KV cache" of a recurrent LM is its hidden state, so the page
@@ -194,7 +214,8 @@ class ToyLM:
 def make_engine(seed=None, *, max_batch=3, max_seq=48, step_time_s=0.01,
                 quotas=None, incremental=True, executor=None,
                 kv_mode="auto", prefix_sharing=True, prefix_cache_seqs=0,
-                mesh_devices=0, mesh_offset=0, **kwargs):
+                prefill_chunk_tokens=0, mesh_devices=0, mesh_offset=0,
+                **kwargs):
     """A ServingEngine over ToyLM on a seeded SimExecutor (or ``executor``).
 
     ``mesh_devices`` > 0 builds a tensor-parallel serving mesh over that
@@ -214,6 +235,7 @@ def make_engine(seed=None, *, max_batch=3, max_seq=48, step_time_s=0.01,
         step_time_s=step_time_s, quotas=quotas, incremental=incremental,
         kv_mode=kv_mode, prefix_sharing=prefix_sharing,
         prefix_cache_seqs=prefix_cache_seqs,
+        prefill_chunk_tokens=prefill_chunk_tokens,
     )
     executor = executor or SimExecutor(seed=seed or 0)
     engine = ServingEngine(

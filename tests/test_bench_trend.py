@@ -64,13 +64,14 @@ def test_run_flags_only_regressed_artifacts(tmp_path):
     regressions, checked, skipped = trend_check.run(str(old), str(new))
     assert len(regressions) == 1 and "BENCH_pool.json" in regressions[0]
     assert len(checked) == 1 and "BENCH_admission.json" in checked[0]
-    # both scheduler metrics, all three serve metrics, the prefix
+    # both scheduler metrics, all four serve metrics, the prefix
     # metric, and the orchestrator metric ride on their one absent
     # artifact each (TRACKED order: the shard row trails the prefix
     # row, the orchestrator row trails everything)
     assert skipped == [
         "BENCH_scheduler.json: no current artifact",
         "BENCH_scheduler.json: no current artifact",
+        "BENCH_serve.json: no current artifact",
         "BENCH_serve.json: no current artifact",
         "BENCH_serve.json: no current artifact",
         "BENCH_prefix.json: no current artifact",

@@ -1,0 +1,302 @@
+"""Chunked-prefill correctness suite (``ServerConfig.prefill_chunk_tokens``).
+
+The contract under test: chunking prefill into per-step token budgets is
+*invisible* in the output.  Every request's token stream must be byte-
+identical to the monolithic-prefill run — across paged and dense KV
+modes, with prefix sharing on or off, through mid-chunk batch kills
+(paged resumes from the last chunk boundary without re-prefilling a
+resident row; dense restarts from zero), through mid-chunk arena poison
+(partial pages drop, the chunked prefill restarts clean) — while decode
+for already-resident slots keeps producing a token every tick (the
+stall-free property that motivates the feature).
+"""
+
+import random
+
+import numpy as np
+import pytest
+from helpers.invariants import check_serving_invariants
+from helpers.serving import ToyLM, make_engine, make_requests
+
+from repro.core.sim import SimExecutor
+from repro.runtime.serve_loop import Request, ServerConfig, ServingEngine
+
+KV_MODES = ("paged", "dense")
+
+
+def _run_workload(seed, kv_mode, chunk, *, sharing=True, n=8):
+    """Drain a mixed 8-request workload; return (streams, stats, engine)."""
+    rng = random.Random(seed)
+    engine, _ = make_engine(
+        seed=seed, max_batch=3, max_seq=48, step_time_s=0.001,
+        kv_mode=kv_mode, prefix_sharing=sharing,
+        prefix_cache_seqs=2 if sharing else 0,
+        prefill_chunk_tokens=chunk,
+    )
+    reqs = make_requests(
+        rng, n, deadline_prob=0.0, sample_prob=0.5, share_prob=0.5,
+    )
+    for r in reqs:
+        engine.submit(r)
+    engine.drain(timeout=60)
+    check_serving_invariants(
+        engine, reqs, ctx=f"kv_mode={kv_mode} chunk={chunk} sharing={sharing}"
+    )
+    streams = tuple(
+        (r.request_id, tuple(r.tokens), r.error)
+        for r in sorted(reqs, key=lambda r: r.request_id)
+    )
+    return streams, engine.serving_stats(), engine
+
+
+def _long_prompt(n=24, vocab=31):
+    return np.asarray([(i * 7 + 3) % vocab for i in range(n)], np.int32)
+
+
+# --------------------------------------------- chunked == monolithic
+
+
+@pytest.mark.parametrize("kv_mode", KV_MODES)
+@pytest.mark.parametrize("sharing", (True, False), ids=("share", "noshare"))
+def test_chunked_streams_match_monolithic(kv_mode, sharing):
+    """Any per-step budget yields the monolithic run's exact streams —
+    greedy and sampled requests alike, shared prefixes included."""
+    baseline, base_stats, _ = _run_workload(11, kv_mode, 0, sharing=sharing)
+    assert base_stats["prefill_chunks_total"] == 0
+    for chunk in (1, 3, 5):
+        streams, stats, _ = _run_workload(11, kv_mode, chunk, sharing=sharing)
+        assert streams == baseline, (
+            f"kv_mode={kv_mode} sharing={sharing} chunk={chunk}"
+        )
+        # budgets smaller than the longest prompt must actually chunk
+        assert stats["prefill_chunks_total"] > 0, stats
+
+
+@pytest.mark.parametrize("kv_mode", KV_MODES)
+def test_chunked_run_replays_byte_identically(kv_mode):
+    """A chunked schedule is still a pure function of the seed: trace
+    and streams replay byte-for-byte."""
+    s1, _, e1 = _run_workload(23, kv_mode, 3)
+    s2, _, e2 = _run_workload(23, kv_mode, 3)
+    assert s1 == s2
+    assert e1.trace_text() == e2.trace_text()
+
+
+# ------------------------------------- mid-chunk eviction / poison
+
+
+def _one_long_request(**kw):
+    kw.setdefault("request_id", 0)
+    kw.setdefault("tenant", "alice")
+    return Request(prompt=_long_prompt(), max_new_tokens=4, **kw)
+
+
+def _clean_long_tokens(kv_mode):
+    engine, _ = make_engine(
+        seed=1, max_batch=1, max_seq=48, step_time_s=0.001, kv_mode=kv_mode,
+    )
+    r = _one_long_request()
+    engine.submit(r)
+    engine.drain(timeout=60)
+    assert r.error is None
+    return tuple(r.tokens)
+
+
+def test_mid_chunk_kill_resumes_from_last_boundary_paged():
+    """A paged batch kill mid-prefill keeps the partial pages: the
+    resumed prefill continues from the last chunk boundary, so no
+    resident row is ever prefilled twice."""
+    expect = _clean_long_tokens("paged")
+    engine, _ = make_engine(
+        seed=1, max_batch=1, max_seq=48, step_time_s=0.001, kv_mode="paged",
+        prefill_chunk_tokens=4,
+    )
+    r = _one_long_request()
+    engine.submit(r)
+    engine.step()          # admit + chunk 1: rows 0..4
+    engine.step()          # chunk 2: rows 4..8
+    stats = engine.serving_stats()
+    assert stats["prefill_chunks_total"] == 2, stats
+    assert stats["prefill_tokens_total"]["incremental"] == 8, stats
+    assert engine.kill_batch() == 1
+    engine.drain(timeout=60)
+    assert r.error is None and tuple(r.tokens) == expect
+    stats = engine.serving_stats()
+    assert stats["resumed_total"] == 1, stats
+    # 24 prompt rows prefilled exactly once across kill + resume
+    assert stats["prefill_tokens_total"]["incremental"] == 24, stats
+    check_serving_invariants(engine, [r], ctx="mid-chunk kill (paged)")
+
+
+def test_mid_chunk_kill_restarts_dense():
+    """A dense batch kill drops the carry with the batch: the chunked
+    prefill restarts from zero on re-admission — and still converges on
+    the monolithic stream."""
+    expect = _clean_long_tokens("dense")
+    engine, _ = make_engine(
+        seed=1, max_batch=1, max_seq=48, step_time_s=0.001, kv_mode="dense",
+        prefill_chunk_tokens=4,
+    )
+    r = _one_long_request()
+    engine.submit(r)
+    engine.step()
+    engine.step()
+    assert engine.kill_batch() == 1
+    engine.drain(timeout=60)
+    assert r.error is None and tuple(r.tokens) == expect
+    stats = engine.serving_stats()
+    assert stats["resumed_total"] == 0, stats
+    # 8 rows before the kill + the full 24 on restart
+    assert stats["prefill_tokens_total"]["incremental"] == 32, stats
+    check_serving_invariants(engine, [r], ctx="mid-chunk kill (dense)")
+
+
+def test_mid_chunk_poison_restarts_clean_paged():
+    """Poisoning a sequence mid-chunked-prefill drops its partial pages;
+    the re-admitted request chunk-prefills from scratch and finishes
+    with the clean run's stream."""
+    expect = _clean_long_tokens("paged")
+    engine, _ = make_engine(
+        seed=1, max_batch=1, max_seq=48, step_time_s=0.001, kv_mode="paged",
+        prefill_chunk_tokens=4,
+    )
+    r = _one_long_request()
+    engine.submit(r)
+    engine.step()
+    engine.step()
+    victim = engine.poison_prefilling()
+    assert victim is not None
+    engine.drain(timeout=60)
+    assert r.error is None and tuple(r.tokens) == expect
+    stats = engine.serving_stats()
+    assert stats["arena_poison_total"] == 1, stats
+    # 8 poisoned rows + the full 24 on the clean restart
+    assert stats["prefill_tokens_total"]["incremental"] == 32, stats
+    check_serving_invariants(engine, [r], ctx="mid-chunk poison (paged)")
+
+
+def test_poison_prefilling_is_noop_when_nothing_mid_prefill():
+    engine, _ = make_engine(
+        seed=1, max_batch=1, max_seq=48, kv_mode="paged",
+        prefill_chunk_tokens=4,
+    )
+    assert engine.poison_prefilling() is None
+    assert engine.serving_stats()["arena_poison_total"] == 0
+
+
+# ------------------------------------------------ stall-free decode
+
+
+@pytest.mark.parametrize("kv_mode", KV_MODES)
+def test_decode_advances_every_tick_during_long_prefill(kv_mode):
+    """The headline scheduling property: while a long prompt trickles in
+    chunk by chunk, an already-decoding slot emits a token on *every*
+    step — no admission stall."""
+    engine, _ = make_engine(
+        seed=1, max_batch=2, max_seq=48, step_time_s=0.001, kv_mode=kv_mode,
+        prefill_chunk_tokens=2,
+    )
+    short = Request(
+        prompt=np.asarray([3, 1, 4], np.int32), max_new_tokens=16,
+        request_id=0, tenant="alice",
+    )
+    engine.submit(short)
+    engine.step()          # prefill (2 chunks of the 3-token prompt)...
+    while not short.tokens:
+        engine.step()      # ...then first decode tick
+    long = _one_long_request(request_id=1)
+    long.tenant = "bob"
+    engine.submit(long)
+    chunks_before = engine.serving_stats()["prefill_chunks_total"]
+    for _ in range(6):
+        have = len(short.tokens)
+        engine.step()
+        assert len(short.tokens) == have + 1, (
+            f"decode stalled at tick with {have} tokens (kv_mode={kv_mode})"
+        )
+    # ...and the long prompt made prefill progress during those ticks
+    assert engine.serving_stats()["prefill_chunks_total"] >= chunks_before + 6
+    assert not long.tokens     # 24-row prompt still mid-prefill at chunk=2
+    engine.drain(timeout=60)
+    assert short.error is None and long.error is None
+    check_serving_invariants(engine, [short, long], ctx=f"stall-free {kv_mode}")
+
+
+# ----------------------------------------------- latency histograms
+
+
+def test_ttft_and_intertoken_histograms():
+    """TTFT is observed exactly once per request (first sampled token,
+    per tenant); every later token lands in the inter-token stall
+    histogram."""
+    engine, _ = make_engine(
+        seed=5, max_batch=3, max_seq=48, step_time_s=0.001, kv_mode="paged",
+        prefill_chunk_tokens=3,
+    )
+    rng = random.Random(5)
+    reqs = make_requests(rng, 6, deadline_prob=0.0)
+    for r in reqs:
+        engine.submit(r)
+    engine.drain(timeout=60)
+    hists = engine.telemetry.histograms()
+    ttft = {t: h for (name, t), h in hists.items()
+            if name == "serving.ttft_seconds"}
+    inter = [h for (name, _), h in hists.items()
+             if name == "serving.intertoken_seconds"]
+    assert sum(h.count for h in ttft.values()) == len(reqs)
+    by_tenant = {}
+    for r in reqs:
+        by_tenant[r.tenant] = by_tenant.get(r.tenant, 0) + 1
+    assert {t: h.count for t, h in ttft.items()} == by_tenant
+    assert sum(h.count for h in inter) == sum(
+        len(r.tokens) - 1 for r in reqs
+    )
+
+
+# ------------------------------------------------ config validation
+
+
+class _Without:
+    """Proxy hiding named attributes of a model (validation tests)."""
+
+    def __init__(self, inner, *hidden):
+        object.__setattr__(self, "_inner", inner)
+        object.__setattr__(self, "_hidden", frozenset(hidden))
+
+    def __getattr__(self, name):
+        if name in self._hidden:
+            raise AttributeError(name)
+        return getattr(self._inner, name)
+
+
+def test_chunked_requires_incremental():
+    model = ToyLM()
+    with pytest.raises(ValueError, match="incremental"):
+        ServingEngine(
+            model, model.init(),
+            ServerConfig(max_batch=2, max_seq=32, tokens_per_page=4,
+                         incremental=False, prefill_chunk_tokens=2),
+            executor=SimExecutor(seed=0),
+        )
+
+
+def test_chunked_paged_requires_prefill_at_hook():
+    model = _Without(ToyLM(), "paged_prefill_at")
+    with pytest.raises(ValueError, match="paged_prefill_at"):
+        ServingEngine(
+            model, ToyLM().init(),
+            ServerConfig(max_batch=2, max_seq=32, tokens_per_page=4,
+                         kv_mode="paged", prefill_chunk_tokens=2),
+            executor=SimExecutor(seed=0),
+        )
+
+
+def test_chunked_dense_requires_chunk_hook():
+    model = _Without(ToyLM(), "prefill_chunk")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(
+            model, ToyLM().init(),
+            ServerConfig(max_batch=2, max_seq=32, tokens_per_page=4,
+                         kv_mode="dense", prefill_chunk_tokens=2),
+            executor=SimExecutor(seed=0),
+        )

@@ -298,11 +298,70 @@ def test_autoscaler_elastic_stats_keys():
     stats = auto.elastic_stats()
     assert set(stats) == {
         "workers_active", "replicas_alive", "scale_up_total",
-        "scale_down_total", "replica_scale_up_total",
-        "replica_scale_down_total", "decisions_total", "pool_healthy",
-        "pool_in_use", "pool_spare",
+        "scale_down_total", "class_scale_down_total",
+        "replica_scale_up_total", "replica_scale_down_total",
+        "decisions_total", "pool_healthy", "pool_in_use", "pool_spare",
     }
     assert stats["workers_active"] == 2 and stats["replicas_alive"] == 2
+
+
+def test_autoscaler_class_idle_shrinks_lane_while_pool_busy():
+    """Per-class idle scale-down: a workload class whose *own* queue
+    drained hands back a worker even though other classes keep the
+    global queue deep (the global idle path can never fire here)."""
+    sim, sched = _sim_sched(workers=3)
+    auto = ElasticAutoscaler(sched, cfg=AutoscalerConfig(
+        min_workers=1, idle_ticks=99, class_idle_ticks=2,
+        cooldown_ticks=0, queue_high=100))
+    lanes = {"serving": 3, "train": 2, "batch": 0}
+    auto.bind_class_queues(lambda: dict(lanes))
+
+    def body():
+        sim.sleep(0.05)
+
+    for i in range(4):
+        sched.submit(TaskSpec(tenant="t", fn=body, name=f"b{i}"))
+
+    assert auto.tick().action == "hold"      # train lane still has demand
+    lanes["train"] = 0                       # ... then it drains
+    assert auto.tick().action == "hold"      # idle streak 1 of 2
+    d = auto.tick()                          # streak 2: shrink the lane
+    assert d.action == "scale_down_worker"
+    assert d.reason.startswith("class_idle:train:")
+    assert d.queue_depth > 0                 # the pool was NOT idle
+    assert auto.class_scale_downs == 1
+    assert auto.elastic_stats()["class_scale_down_total"] == 1
+    # the class must show demand again before another shrink: a drained
+    # lane is a one-shot signal, not a drain-to-the-floor loop
+    assert auto.tick().action == "hold"
+    assert auto.tick().action == "hold"
+    lanes["train"] = 1
+    auto.tick()                              # demand returns
+    lanes["train"] = 0
+    assert auto.tick().action == "hold"      # streak 1 of 2
+    d = auto.tick()
+    assert d.action == "scale_down_worker"
+    assert d.reason.startswith("class_idle:train:")
+    assert auto.class_scale_downs == 2
+    # the "batch" lane never showed demand, so it never triggers: the
+    # fleet floor holds at min_workers with no further shrink available
+    sched.start()
+    sim.run()
+
+
+def test_autoscaler_class_idle_off_by_default():
+    """class_idle_ticks defaults to 0: binding a class-queue source alone
+    must not change any decision (existing decision logs stay stable)."""
+    _, sched = _sim_sched(workers=2)
+    auto = ElasticAutoscaler(sched, cfg=AutoscalerConfig(
+        min_workers=1, idle_ticks=99, cooldown_ticks=0, queue_high=100))
+    lanes = {"train": 1}
+    auto.bind_class_queues(lambda: dict(lanes))
+    auto.tick()
+    lanes["train"] = 0
+    for _ in range(5):
+        assert auto.tick().action == "hold"
+    assert auto.class_scale_downs == 0
 
 
 def _autoscaler_scenario(seed):

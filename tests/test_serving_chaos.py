@@ -67,9 +67,13 @@ def chaos_run(seed, kv_mode="paged"):
     so replay determinism covers the seeded sampler, not just argmax).
     """
     rng = random.Random(seed * 9127 + 5)
+    # per-step prefill-token budget: half the seeds run monolithic
+    # prefill (0), the rest chunked — drawn first, so the budget also
+    # reshapes the rest of the seed's schedule deterministically
+    chunk = rng.choice((0, 0, 2, 3))
     engine, sim = make_engine(
         seed=seed, max_batch=3, max_seq=48, step_time_s=0.01, quotas=QUOTAS,
-        kv_mode=kv_mode, prefix_cache_seqs=2,
+        kv_mode=kv_mode, prefix_cache_seqs=2, prefill_chunk_tokens=chunk,
     )
     reqs = make_requests(
         rng, 10, deadline_prob=0.15, sample_prob=0.5, share_prob=0.4,
@@ -85,6 +89,10 @@ def chaos_run(seed, kv_mode="paged"):
         )
     for _ in range(rng.randrange(2)):      # 0-1 shared-sequence poisonings
         injector.poison_shared_at_t[round(rng.uniform(0.02, 0.35), 3)] = (
+            rng.randrange(3)
+        )
+    for _ in range(rng.randrange(2)):      # 0-1 mid-chunked-prefill poisonings
+        injector.poison_prefilling_at_t[round(rng.uniform(0.02, 0.35), 3)] = (
             rng.randrange(3)
         )
     injector.arm_serving(sim, engine)
@@ -114,6 +122,7 @@ def chaos_run(seed, kv_mode="paged"):
         "clean": sum(1 for r in reqs if r.error is None),
         "prefix_hits": stats["prefix_hits_total"],
         "cow_copies": stats["prefix_cow_copies_total"],
+        "prefill_chunks": stats["prefill_chunks_total"],
     })
     return trace, results, counters
 
@@ -149,6 +158,8 @@ def test_serving_chaos_sweep_holds_all_invariants(kv_mode):
         assert totals["expired"] > 0, totals
         assert totals["clean"] > 0, totals
         assert totals["sampled"] > 0, totals
+        # chunked-budget seeds must have run bounded prefill steps
+        assert totals["prefill_chunks"] > 0, totals
         if kv_mode == "paged":
             # batch kills must have exercised the resume path (pages
             # kept, no re-prefill); dense mode by construction cannot
